@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks (CPU wall time of the jnp reference path + the
+interpret-mode correctness delta; TPU wall time requires real hardware)."""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.batched_dot.batched_dot import batched_dot
+from repro.kernels.batched_dot.ref import batched_dot_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.stale_agg.stale_agg import stale_agg
+from repro.kernels.stale_agg.ref import stale_agg_ref
+
+
+def _time(f, *args, reps=5) -> float:
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_batched_dot() -> Tuple[float, float]:
+    C, P = 16, 1_000_000
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    G = jax.random.normal(k1, (C, P), jnp.bfloat16)
+    h = jax.random.normal(k2, (C, P), jnp.bfloat16)
+    ref = jax.jit(batched_dot_ref)
+    us = _time(ref, G, h)
+    d1, _ = batched_dot(G[:, :4096], h[:, :4096], interpret=True)
+    d2, _ = batched_dot_ref(G[:, :4096], h[:, :4096])
+    err = float(np.max(np.abs(np.asarray(d1) - np.asarray(d2))
+                       / (np.abs(np.asarray(d2)) + 1e-6)))
+    return us, err
+
+
+def bench_stale_agg() -> Tuple[float, float]:
+    C, P = 16, 1_000_000
+    keys = jax.random.split(jax.random.PRNGKey(1), 5)
+    G = jax.random.normal(keys[0], (C, P), jnp.bfloat16)
+    h = jax.random.normal(keys[1], (C, P), jnp.bfloat16)
+    coeff = jax.random.uniform(keys[2], (C,))
+    beta = jax.random.uniform(keys[3], (C,))
+    ss = jax.random.normal(keys[4], (P,))
+    ref = jax.jit(stale_agg_ref)
+    us = _time(ref, coeff, beta, G, h, ss)
+    o1 = stale_agg(coeff, beta, G[:, :4096], h[:, :4096], ss[:4096],
+                   interpret=True)
+    o2 = stale_agg_ref(coeff, beta, G[:, :4096], h[:, :4096], ss[:4096])
+    err = float(np.max(np.abs(np.asarray(o1) - np.asarray(o2))))
+    return us, err
+
+
+def bench_flash_attention() -> Tuple[float, float]:
+    B, H, S, D = 1, 4, 1024, 128
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(keys[1], (B, H, S, D))
+    v = jax.random.normal(keys[2], (B, H, S, D))
+    ref = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    us = _time(ref, q, k, v)
+    o1 = flash_attention(q[:, :1, :256], k[:, :1, :256], v[:, :1, :256],
+                         causal=True, interpret=True)
+    o2 = attention_ref(q[:, :1, :256], k[:, :1, :256], v[:, :1, :256],
+                       causal=True)
+    err = float(np.max(np.abs(np.asarray(o1) - np.asarray(o2))))
+    return us, err

@@ -1,0 +1,64 @@
+"""Table 2: analytic system overheads per method (comm / comp / memory).
+
+Paper's accounting (N clients, S models, M = model size, T rounds,
+q = expected fraction of active client-tasks = m/V, C = loss scalars):
+
+  method          comm/round     comp/round   server memory
+  full            N*S updates    N*S          (N+1)*S*M
+  MMFL-GVR        m + loss[all]  N*S          (N+1)*S*M
+  MMFL-LVR        m + C*N        m            (N+1)*S*M     <- comp only m!
+  MMFL-StaleVR    m + C*N        N*S          (3N+1)*S*M
+  MMFL-StaleVRE   m + C*N        m            (3N+1)*S*M
+
+Evaluated numerically for the paper's §6.1 world and the production archs.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from repro.configs.registry import ARCHS, get_config
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "paper")
+
+
+def overheads(N: int = 120, S: int = 3, active_rate: float = 0.1,
+              avg_B: float = 2.0, model_bytes: float = 4e5) -> Dict:
+    V = N * avg_B
+    m = active_rate * V
+    M = model_bytes
+    scalar = 4.0  # one float loss report
+    rows = {
+        "full": {"comm": N * S * M, "comp_tasks": N * S,
+                 "server_mem": (N + 1) * S * M},
+        "gvr": {"comm": m * M + N * S * M,      # needs all-client updates!
+                "comp_tasks": N * S, "server_mem": (N + 1) * S * M},
+        "lvr": {"comm": m * M + scalar * N * S,
+                "comp_tasks": m, "server_mem": (N + 1) * S * M},
+        "stalevr": {"comm": m * M + scalar * N * S,
+                    "comp_tasks": N * S, "server_mem": (3 * N + 1) * S * M},
+        "stalevre": {"comm": m * M + scalar * N * S,
+                     "comp_tasks": m, "server_mem": (3 * N + 1) * S * M},
+        "random": {"comm": m * M, "comp_tasks": m,
+                   "server_mem": (N + 1) * S * M},
+    }
+    for r in rows.values():
+        r["comm_vs_full"] = r["comm"] / rows["full"]["comm"]
+        r["comp_vs_full"] = r["comp_tasks"] / rows["full"]["comp_tasks"]
+    return rows
+
+
+def table2_overheads(fast: bool = True):
+    out = {"paper_cnn": overheads(model_bytes=4 * 105_000)}
+    # at production scale: the paper's methods applied to the assigned archs
+    for arch in ["qwen3-0.6b", "llama4-scout-17b-a16e", "qwen1.5-110b"]:
+        cfg = get_config(arch)
+        out[arch] = overheads(N=120, S=3, model_bytes=2.0 * cfg.param_count())
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "table2_overheads.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    # headline: LVR's compute saving vs GVR (the paper's main cost argument)
+    saving = (out["paper_cnn"]["gvr"]["comp_tasks"]
+              / out["paper_cnn"]["lvr"]["comp_tasks"])
+    return out, saving

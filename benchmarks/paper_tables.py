@@ -1,0 +1,161 @@
+"""Paper-experiment benchmarks: one function per table/figure of the paper.
+
+Each returns (rows, derived) where rows are dicts destined for
+``results/paper/*.json`` and derived is the headline scalar for the CSV.
+Scale: the paper's client/partition statistics with synthetic data
+(DESIGN.md §6); ``fast=True`` shrinks rounds/seeds for the CI harness while
+the full runs (examples/paper_repro.py) persist the EXPERIMENTS.md numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.server import MMFLServer, ServerConfig
+from repro.fl.experiments import build_setting
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "paper")
+
+TABLE1_METHODS = ["random", "roundrobin_gvr", "fedvarp", "mifa", "scaffold",
+                  "gvr", "lvr", "stalevr", "stalevre", "full"]
+
+
+def _save(name: str, payload) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def _final_acc(srv: MMFLServer, rounds: int) -> List[float]:
+    hist = srv.run(rounds, eval_every=max(rounds // 4, 1))
+    return hist["acc"][-1][1], hist
+
+
+def table1_relative_accuracy(fast: bool = True, n_models: int = 3,
+                             methods=None, seeds=None, rounds: int = None,
+                             n_clients: int = None):
+    """Table 1: final average accuracy relative to full participation.
+
+    Scale note: the full run uses 60 clients (paper: 120) with the same
+    partition statistics (label fraction, high/low-data split, B_i mix,
+    m = 0.1 V) — orderings/relative gaps are the claims under test."""
+    methods = methods or (["random", "lvr", "stalevre", "fedvarp", "full"]
+                          if fast else TABLE1_METHODS)
+    seeds = seeds or ([0] if fast else [0, 1, 2])
+    rounds = rounds or (12 if fast else 60)
+    n_clients = n_clients or (32 if fast else 60)
+    accs: Dict[str, List[float]] = {m: [] for m in methods}
+    for seed in seeds:
+        tasks, B, avail = build_setting(n_models, n_clients=n_clients,
+                                        seed=seed, small=fast)
+        for m in methods:
+            srv = MMFLServer(tasks, B, avail,
+                             ServerConfig(method=m, seed=seed,
+                                          local_epochs=5, lr=0.05))
+            acc, _ = _final_acc(srv, rounds)
+            accs[m].append(float(np.mean(acc)))
+    full = np.mean(accs.get("full", [1.0])) or 1.0
+    table = {m: {"acc": float(np.mean(a)), "std": float(np.std(a)),
+                 "relative": float(np.mean(a) / full)}
+             for m, a in accs.items()}
+    _save(f"table1_{n_models}tasks" + ("_fast" if fast else ""), table)
+    best = max((v["relative"], k) for k, v in table.items()
+               if k not in ("full",))
+    return table, best[0]
+
+
+def fig2_step_size_variance(fast: bool = True):
+    """Fig 2: summed global step size Sum_s ||H_{tau,s}||_1 — GVR unstable,
+    LVR stable."""
+    rounds = 10 if fast else 60
+    out = {}
+    tasks, B, avail = build_setting(3, n_clients=24 if fast else 60,
+                                    seed=0, small=fast)
+    for m in ["gvr", "lvr"]:
+        srv = MMFLServer(tasks, B, avail,
+                         ServerConfig(method=m, seed=0, local_epochs=3))
+        hist = srv.run(rounds, eval_every=rounds)
+        h1 = [sum(mm[f"H1/{s}"] for s in range(3))
+              for mm in hist["metrics"]]
+        out[m] = {"trace": h1, "var": float(np.var(h1))}
+    _save("fig2_step_size" + ("_fast" if fast else ""), out)
+    ratio = out["gvr"]["var"] / max(out["lvr"]["var"], 1e-12)
+    return out, ratio
+
+
+def fig3_beta_trajectory(fast: bool = True):
+    """Fig 3: optimal beta for sampled clients across rounds (S=1)."""
+    rounds = 12 if fast else 50
+    tasks, B, avail = build_setting(1, n_clients=16 if fast else 40,
+                                    seed=0, small=fast)
+    srv = MMFLServer(tasks, B, avail,
+                     ServerConfig(method="stalevr", seed=0, local_epochs=3,
+                                  active_rate=0.15))
+    betas = []
+    for r in range(rounds):
+        srv.run_round()
+        # optimal beta (Eq. 20) for two tracked clients this round
+        betas.append([float(srv.last_beta[0][i]) for i in (0, 1)])
+    _save("fig3_beta" + ("_fast" if fast else ""), {"beta": betas})
+    arr = np.asarray(betas)
+    return betas, float(arr[arr > 0].mean()) if (arr > 0).any() else 0.0
+
+
+def fig4_mmfl_vs_roundrobin(fast: bool = True):
+    """Fig 4: rounds needed to hit target accuracy, MMFL-GVR vs
+    RoundRobin-GVR."""
+    rounds = 12 if fast else 80
+    targets = [0.3, 0.4] if fast else [0.3, 0.4, 0.5, 0.55]
+    out = {}
+    tasks, B, avail = build_setting(3, n_clients=24 if fast else 60,
+                                    seed=0, small=fast)
+    for m in ["gvr", "roundrobin_gvr"]:
+        srv = MMFLServer(tasks, B, avail,
+                         ServerConfig(method=m, seed=0, local_epochs=3,
+                                      lr=0.08))
+        hist = srv.run(rounds, eval_every=1)
+        acc_by_round = {r: float(np.mean(a)) for r, a in hist["acc"]}
+        out[m] = {
+            str(t): next((r for r, a in sorted(acc_by_round.items())
+                          if a >= t), None) for t in targets}
+        out[m]["trace"] = acc_by_round
+    _save("fig4_roundrobin" + ("_fast" if fast else ""), out)
+    # derived: how many targets MMFL reaches first (or RR misses)
+    wins = sum(
+        1 for t in targets
+        if (out["gvr"][str(t)] is not None)
+        and (out["roundrobin_gvr"][str(t)] is None
+             or out["gvr"][str(t)] <= out["roundrobin_gvr"][str(t)]))
+    return out, wins
+
+
+def fig5_fixed_sampling_stale(fast: bool = True):
+    """Fig 5: dynamic beta (StaleVR) vs static-beta FedStale/FedVARP under a
+    FIXED heterogeneous sampling distribution (S=1, 4%/16% groups)."""
+    rounds = 12 if fast else 60
+    n_clients = 16 if fast else 40
+    out = {}
+    for m, kw in [("stalevr", {}), ("fedvarp", {}),
+                  ("fedstale", {"fedstale_beta": 0.5}),
+                  ("fedstale_b02", {"fedstale_beta": 0.2}),
+                  ("fedstale_b08", {"fedstale_beta": 0.8})]:
+        method = "fedstale" if m.startswith("fedstale_") else m
+        tasks, B, avail = build_setting(1, n_clients=n_clients, seed=0,
+                                        small=fast)
+        srv = MMFLServer(tasks, B, avail,
+                         ServerConfig(method=method, seed=0, local_epochs=3,
+                                      **kw))
+        # fixed two-group sampling: first half 4%, second half 16%
+        import jax.numpy as jnp
+        fixed = np.full((srv.V, 1), 0.04)
+        fixed[srv.V // 2:] = 0.16
+        srv._probabilities = lambda *a, _p=jnp.asarray(fixed): _p  # type: ignore
+        acc, _ = _final_acc(srv, rounds)
+        out[m] = float(np.mean(acc))
+    _save("fig5_stale" + ("_fast" if fast else ""), out)
+    static_best = max(v for k, v in out.items() if k != "stalevr")
+    return out, out["stalevr"] - static_best

@@ -1,0 +1,84 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+results/dryrun cache + the calibrated analytic model.
+
+  PYTHONPATH=src:. python -m benchmarks.report_md > results/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline_report import load_dryrun, roofline_rows, summarize
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def _fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in [("GB", 1e9), ("MB", 1e6), ("KB", 1e3)]:
+        if x >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | mode | per-dev args | per-dev temp | "
+             "HLO GFLOP/iter/dev | coll ops | coll bytes (static) | "
+             "compile |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for mesh in ["16x16", "2x16x16"]:
+        recs = load_dryrun(mesh)
+        for key in sorted(recs):
+            r = recs[key]
+            if not r.get("ok"):
+                lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | - | "
+                             f"FAILED: {r.get('error', '?')[:60]} | | | | | |")
+                continue
+            mem = r["memory"]
+            coll = r["collectives"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | {r['mode']} | "
+                f"{_fmt_b(mem['argument_bytes'])} | "
+                f"{_fmt_b(mem['temp_bytes'])} | "
+                f"{r['flops'] / 1e9:.1f} | {coll['count']} | "
+                f"{_fmt_b(coll['total'])} | {r['compile_s']:.0f}s |")
+    return "\n".join(lines)
+
+
+def roofline_table(chips=256) -> str:
+    rows = roofline_rows(chips=chips)
+    lines = ["| arch | shape | mode | compute | memory | collective | "
+             "dominant | MODEL_FLOPS | useful ratio |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} | "
+            f"{_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} | "
+            f"{_fmt_s(r['collective_s'])} | **{r['dominant'].split('_')[0]}**"
+            f" | {r['model_flops']:.2e} | {r['useful_ratio']:.2f} |")
+    s = summarize(rows)
+    lines.append("")
+    lines.append(f"OK: {s['n_ok']}/{s['n_total']}; worst useful-ratio: "
+                 f"{s['worst_useful_ratio']}; most collective-bound: "
+                 f"{s['most_collective_bound']}")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Generated: §Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Generated: §Roofline table (single-pod 16x16, 256 chips)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Roofline report: joins the dry-run cache (HLO evidence) with the analytic
+three-term model -> the §Roofline table in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs.base import DEFAULT_ROUND, INPUT_SHAPES
+from repro.configs.registry import ARCHS, get_config
+from repro.fl import steps as fl_steps
+from repro.roofline import analytic
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_dryrun(mesh: str = "16x16") -> Dict[str, dict]:
+    out = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        out[f"{rec['arch']}|{rec['shape']}"] = rec
+    return out
+
+
+def roofline_rows(mesh: str = "16x16", chips: int = 256) -> List[dict]:
+    dry = load_dryrun(mesh)
+    rows = []
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        for shape_name in sorted(INPUT_SHAPES):
+            shape = INPUT_SHAPES[shape_name]
+            rec = dry.get(f"{arch}|{shape_name}", {})
+            mode = rec.get("mode") or "fedavg"
+            r = analytic.roofline(cfg, shape, DEFAULT_ROUND, mode,
+                                  chips=chips)
+            rows.append({
+                "arch": arch, "shape": shape_name, "mode": mode,
+                "ok": rec.get("ok", False),
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"], "dominant": r["dominant"],
+                "bound_s": r["bound_s"],
+                "model_flops": r["model_flops"],
+                "useful_ratio": r["useful_ratio"],
+                "hlo_flops_per_iter": rec.get("flops"),
+                "hlo_collective_bytes_static": (rec.get("collectives") or {}
+                                                ).get("total"),
+                "temp_bytes_per_device": (rec.get("memory") or {}
+                                          ).get("temp_bytes"),
+            })
+    return rows
+
+
+def summarize(rows: List[dict]) -> dict:
+    ok = [r for r in rows if r["ok"]]
+    worst = min(ok, key=lambda r: r["useful_ratio"], default=None)
+    coll = max(ok, key=lambda r: r["collective_s"] / max(r["bound_s"], 1e-12),
+               default=None)
+    return {
+        "n_ok": len(ok), "n_total": len(rows),
+        "worst_useful_ratio": worst and f"{worst['arch']}|{worst['shape']}",
+        "most_collective_bound": coll and f"{coll['arch']}|{coll['shape']}",
+    }

@@ -1,0 +1,72 @@
+"""Benchmark harness: one function per paper table/figure + roofline/kernels.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).  ``derived``
+carries each benchmark's headline metric (see comments).  Full-scale
+paper-experiment numbers are produced by ``examples/paper_repro.py`` and
+persisted under results/paper/; this harness runs scaled-down-but-faithful
+versions unless REPRO_BENCH_FULL=1.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def _row(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def main() -> None:
+    fast = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+    from benchmarks import kernels_bench, overheads, paper_tables
+    from benchmarks import roofline_report
+
+    def timed(name, fn):
+        t0 = time.perf_counter()
+        try:
+            _, derived = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            _row(name, us, derived)
+        except Exception as e:  # report and continue
+            us = (time.perf_counter() - t0) * 1e6
+            _row(name, us, f"ERROR:{type(e).__name__}")
+            traceback.print_exc(file=sys.stderr)
+
+    # --- paper tables/figures (derived = headline metric) -----------------
+    # Table 1: derived = best proposed method's accuracy relative to full
+    timed("table1_relative_accuracy_3tasks",
+          lambda: paper_tables.table1_relative_accuracy(fast, n_models=3))
+    # Fig 2: derived = Var(||H||_1) ratio GVR / LVR  (>1 = paper confirmed)
+    timed("fig2_step_size_variance",
+          lambda: paper_tables.fig2_step_size_variance(fast))
+    # Fig 3: derived = mean measured optimal beta (in (0,1])
+    timed("fig3_beta_trajectory",
+          lambda: paper_tables.fig3_beta_trajectory(fast))
+    # Fig 4: derived = #targets where MMFL-GVR reaches accuracy no later
+    timed("fig4_mmfl_vs_roundrobin",
+          lambda: paper_tables.fig4_mmfl_vs_roundrobin(fast))
+    # Fig 5: derived = StaleVR accuracy - best static-beta accuracy
+    timed("fig5_fixed_sampling_stale",
+          lambda: paper_tables.fig5_fixed_sampling_stale(fast))
+    # Table 2: derived = GVR/LVR client-compute ratio (= S/q speedup)
+    timed("table2_overheads", lambda: overheads.table2_overheads(fast))
+
+    # --- roofline (reads the dry-run cache) -------------------------------
+    def _roofline():
+        rows = roofline_report.roofline_rows()
+        summary = roofline_report.summarize(rows)
+        return rows, (f"ok={summary['n_ok']}/{summary['n_total']};"
+                      f"worst_ratio={summary['worst_useful_ratio']};"
+                      f"most_coll={summary['most_collective_bound']}")
+    timed("roofline_report", _roofline)
+
+    # --- kernels (derived = max error vs oracle) ---------------------------
+    timed("kernel_batched_dot", kernels_bench.bench_batched_dot)
+    timed("kernel_stale_agg", kernels_bench.bench_stale_agg)
+    timed("kernel_flash_attention", kernels_bench.bench_flash_attention)
+
+
+if __name__ == "__main__":
+    main()

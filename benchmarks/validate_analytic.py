@@ -1,0 +1,72 @@
+"""Validate the analytic roofline FLOP model against an UNROLLED lowering.
+
+XLA cost_analysis counts lax.scan bodies once; unrolling the layer scan on a
+small config makes cost_analysis exact, which calibrates
+``roofline.analytic.step_flops``.  Run:
+
+  PYTHONPATH=src:. python -m benchmarks.validate_analytic
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+
+def main():
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=16")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import DEFAULT_ROUND, InputShape
+    from repro.configs.registry import get_config
+    from repro.models import transformer
+    from repro.roofline import analytic
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = {}
+    for arch in ["qwen3-0.6b", "internlm2-1.8b"]:
+        cfg = dataclasses.replace(get_config(arch), n_layers=4)
+        shape = InputShape("probe", seq_len=512, global_batch=8, kind="train")
+        rcfg = dataclasses.replace(DEFAULT_ROUND, local_steps=1)
+
+        def loss(params, batch, unroll):
+            return transformer.forward(params, cfg, batch, remat=True,
+                                       unroll=unroll)[0]
+
+        params = jax.eval_shape(
+            lambda k: transformer.init(k, cfg, jnp.bfloat16),
+            jax.random.PRNGKey(0))
+        batch = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+
+        flops = {}
+        for name, unroll in [("scanned", 1), ("unrolled", cfg.n_layers)]:
+            # no shardings attached -> replicated program: the per-device
+            # cost_analysis equals the GLOBAL work of one model instance
+            c = jax.jit(lambda p, b: jax.grad(
+                lambda pp: loss(pp, b, unroll))(p)).lower(
+                    params, batch).compile()
+            flops[name] = float(c.cost_analysis()["flops"])
+
+        a = analytic.step_flops(cfg, shape, rcfg, "fedavg")
+        # analytic counts 8ND (incl. remat fwd) + attention terms
+        out[arch] = {
+            "hlo_unrolled_global": flops["unrolled"],
+            "hlo_scanned_global": flops["scanned"],
+            "analytic_hlo_equiv": a["hlo_equiv"],
+            "analytic_useful": a["useful"],
+            "ratio_analytic_vs_unrolled":
+                a["hlo_equiv"] / max(flops["unrolled"], 1.0),
+        }
+        print(arch, json.dumps(out[arch], indent=1), flush=True)
+
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "roofline_validation.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Full paper-reproduction run: Table 1 + Figures 2-5 at the paper's scale
+(120 clients, 60 rounds, multiple seeds).  Persists results/paper/*.json
+which EXPERIMENTS.md §Paper-validation cites.
+
+This is the LONG run (hours on 1 CPU core).  ``--quick`` cuts it to a
+30-minute validation pass.
+
+Run:  PYTHONPATH=src python examples/paper_repro.py [--quick]
+"""
+import argparse
+import json
+import time
+
+from benchmarks import paper_tables
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args()
+    fast = args.quick
+
+    t0 = time.time()
+
+    def run(name, fn):
+        if name in args.skip:
+            return
+        t = time.time()
+        try:
+            _, derived = fn()
+            print(f"[paper_repro] {name}: derived={derived} "
+                  f"({time.time() - t:.0f}s)", flush=True)
+        except Exception as e:
+            print(f"[paper_repro] {name}: FAILED {e!r}", flush=True)
+
+    run("fig2", lambda: paper_tables.fig2_step_size_variance(fast))
+    run("fig3", lambda: paper_tables.fig3_beta_trajectory(fast))
+    run("fig4", lambda: paper_tables.fig4_mmfl_vs_roundrobin(fast))
+    run("fig5", lambda: paper_tables.fig5_fixed_sampling_stale(fast))
+    run("table1_3tasks",
+        lambda: paper_tables.table1_relative_accuracy(
+            fast, n_models=3,
+            methods=paper_tables.TABLE1_METHODS,
+            seeds=[0] if fast else [0, 1],
+            rounds=20 if fast else 35))
+    run("table1_5tasks",
+        lambda: paper_tables.table1_relative_accuracy(
+            fast, n_models=5,
+            methods=paper_tables.TABLE1_METHODS,
+            seeds=[0] if fast else [0],
+            rounds=20 if fast else 35))
+    print(f"[paper_repro] total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serving demo: batched prefill + decode for three different architecture
+families (dense / SSM / MoE) through the same serve path, including the
+sliding-window long-context mode.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ["qwen3-0.6b-reduced", "falcon-mamba-7b-reduced",
+                 "llama4-scout-17b-a16e-reduced"]:
+        print(f"=== {arch} ===")
+        args = type("A", (), dict(arch=arch, batch=4, prompt_len=32, gen=12,
+                                  ckpt=None, seed=0))
+        serve_mod.serve(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""hymba-1.5b — hybrid-head: parallel attention + mamba heads per layer.
+[arXiv:2411.13676] (assigned spec: 32L d_model=1600 25H GQA kv=5,
+d_ff=5504, vocab=32001, ssm_state=16).  Hymba uses SWA on most layers —
+sliding_window is the native sub-quadratic path for long_500k."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    sliding_window=1024,  # Hymba's SWA window (serve-time ring cache)
+    train_window=1024,    # hymba trains with SWA natively
+    citation="arXiv:2411.13676",
+)

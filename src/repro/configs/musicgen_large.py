@@ -1,0 +1,18 @@
+"""musicgen-large — decoder-only transformer over EnCodec tokens.
+[arXiv:2306.05284] (assigned spec: 48L d_model=2048 32H GQA kv=32,
+d_ff=8192, vocab=2048).  The EnCodec codec is the stub frontend: inputs are
+already-encoded audio token ids."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    sliding_window=8192,
+    citation="arXiv:2306.05284",
+)

@@ -1,0 +1,21 @@
+"""phi-3-vision-4.2b — phi3-mini language model + CLIP vision stub.
+[hf:microsoft/Phi-3-vision-128k-instruct] (assigned spec: 32L d_model=3072
+32H GQA kv=32, d_ff=8192, vocab=32064).  The ViT/CLIP encoder + HD transform
+is the stub frontend: ``input_specs`` delivers precomputed patch embeddings
+[B, n_img_tokens, 1024] that the learned projector maps into d_model."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    n_frontend_tokens=256,   # CLIP-L/14 336px grid -> 24x24 pooled to 256
+    frontend_dim=1024,       # CLIP-L hidden size
+    sliding_window=8192,
+    citation="hf:microsoft/Phi-3-vision-128k-instruct",
+)

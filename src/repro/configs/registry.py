@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolution for all entry points."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+from repro.configs.llama4_maverick_400b_a17b import CONFIG as _llama4_maverick
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4_scout
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.phi_3_vision_4_2b import CONFIG as _phi3v
+from repro.configs.starcoder2_7b import CONFIG as _starcoder2
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.qwen3_0_6b import CONFIG as _qwen3
+from repro.configs.qwen1_5_110b import CONFIG as _qwen110
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _llama4_maverick, _llama4_scout, _musicgen, _falcon_mamba, _phi3v,
+        _starcoder2, _internlm2, _hymba, _qwen3, _qwen110,
+    ]
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return get_config(name[: -len("-reduced")]).reduced()
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown input shape {name!r}; known: {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]

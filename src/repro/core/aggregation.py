@@ -1,0 +1,64 @@
+"""Unbiased MMFL aggregation (Eq. 3) and stale variance-reduced aggregation
+(Eq. 17/18) over parameter pytrees.
+
+Updates ``G`` carry a leading client/processor axis; coefficients are
+broadcast with ``tree_weighted_sum``.  The Pallas fused path for the stale
+aggregation lives in ``repro.kernels.stale_agg`` and is validated against
+these reference implementations.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def unbiased_coeffs(d: jnp.ndarray, B: jnp.ndarray, p: jnp.ndarray,
+                    active: jnp.ndarray) -> jnp.ndarray:
+    """P_{(i,b),s} = d_{i,s} / (B_i * p_{s|(i,b)}) * 1[active]  (Eq. 3).
+
+    All args are per-processor [V] (for one model s)."""
+    return jnp.where(active > 0, d / (B * jnp.maximum(p, 1e-30)), 0.0)
+
+
+def tree_weighted_sum(coeffs: jnp.ndarray, updates: Any) -> Any:
+    """sum_c coeffs[c] * updates[c] over a pytree with leading client axis."""
+    return jax.tree.map(
+        lambda u: jnp.tensordot(coeffs.astype(u.dtype), u, axes=(0, 0)), updates)
+
+
+def aggregate(w: Any, updates: Any, coeffs: jnp.ndarray) -> Any:
+    """w^{tau+1} = w^tau - sum_c P_c G_c  (Eq. 3)."""
+    delta = tree_weighted_sum(coeffs, updates)
+    return jax.tree.map(lambda a, b: a - b.astype(a.dtype), w, delta)
+
+
+def global_step_size(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """||H_{tau,s}||_1 = sum of active aggregation coefficients (Sec. 4.2).
+
+    Its deviation from 1 is the participation-variance driver E[Z_p]."""
+    return jnp.sum(coeffs)
+
+
+def stale_delta(coeffs: jnp.ndarray, G: Any, h: Any, beta: jnp.ndarray,
+                stale_mean: Any) -> Any:
+    """Delta of Eq. (18):
+
+      Delta = sum_i (d_i/B_i) beta_i h_i   <- ``stale_mean`` (precomputed
+                                              server-side running sum)
+            + sum_{active} P_i (G_i - beta_i h_i)
+
+    coeffs: [V] unbiased coefficients (0 for inactive); G, h: pytrees with
+    leading V axis; beta: [V]."""
+    def leaf(sm, g, hh):
+        bcast = beta.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        corr = jnp.tensordot(coeffs.astype(g.dtype),
+                             g - bcast * hh.astype(g.dtype), axes=(0, 0))
+        return sm.astype(g.dtype) + corr
+
+    return jax.tree.map(leaf, stale_mean, G, h)
+
+
+def apply_delta(w: Any, delta: Any) -> Any:
+    return jax.tree.map(lambda a, b: a - b.astype(a.dtype), w, delta)

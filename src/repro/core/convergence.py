@@ -1,0 +1,41 @@
+"""Empirical monitors for the convergence-bound terms of Theorem 1/4.
+
+These are the quantities the paper argues about (Sec. 3.3/4.2) and that the
+framework logs every round:
+
+  * ``global_step_size``      ||H_{tau,s}||_1 = sum_active P  (expected 1)
+  * ``participation_var``     (||H||_1 - 1)^2 — the E[Z_p] driver
+  * ``surrogate_variance``    ( sum_active P f_i  -  sum_i d_i f_i )^2 — the
+                              E[Z_l] driver that MMFL-LVR minimizes
+  * ``gamma_tau``             max(32L/mu, 4K sum 1*P) — learning-rate clock
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+def global_step_size(coeffs: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(coeffs)
+
+
+def participation_var(coeffs: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.sum(coeffs) - 1.0) ** 2
+
+
+def surrogate_variance(coeffs: jnp.ndarray, losses_v: jnp.ndarray,
+                       d_v: jnp.ndarray, B_v: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (10): (sum_active P_v f_v - sum_v (d_v/B_v) f_v)^2  (per model)."""
+    surrogate = jnp.sum(coeffs * losses_v)
+    target = jnp.sum(d_v / B_v * losses_v)
+    return (surrogate - target) ** 2
+
+
+def round_metrics(coeffs: jnp.ndarray, losses_v: jnp.ndarray,
+                  d_v: jnp.ndarray, B_v: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    return {
+        "H1": global_step_size(coeffs),
+        "Zp": participation_var(coeffs),
+        "Zl": surrogate_variance(coeffs, losses_v, d_v, B_v),
+    }

@@ -1,0 +1,204 @@
+"""Optimal heterogeneous client sampling (the paper's core contribution).
+
+Implements the closed-form water-filling solution of Theorems 2/8/9 for the
+communication-budgeted sampling problem
+
+    min_p  sum_{s,v} ||U_{v,s}||^2 / p_{s|v}
+    s.t.   p >= 0,  sum_s p_{s|v} <= 1 (per processor),  sum_{s,v} p = m,
+
+shared by **MMFL-LVR** (U = d/B * loss — scalar losses only) and **MMFL-GVR**
+(U = d/(B*eta) * ||G|| — gradient norms, the prior-art baseline), plus the
+uniform-random and round-robin baselines.  Everything is jittable: the
+saturated-set search is expressed with a sort + cumulative sums instead of
+the iterative removal loop in the paper's proof (they are equivalent: the
+proof removes the largest M_v first, so the saturated set is always a prefix
+of the sorted order).
+
+Shapes: V = total processors, S = models.
+  U        [V, S]  utility per processor x model (0 where unavailable)
+  returns  [V, S]  sampling probabilities p_{s|v}
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Paper Assumption 5: lower-bounded probability.  Implemented as the paper
+# suggests — "a small constant added to the local loss" (utility floor).
+UTILITY_FLOOR = 1e-8
+
+
+def processor_budget_utilities(client_util: jnp.ndarray,
+                               B: jnp.ndarray) -> jnp.ndarray:
+    """Expand per-client utilities [N,S] to per-processor [V,S] given integer
+    budgets B [N] (V = sum(B)).  Processors of one client share utilities."""
+    B = B.astype(jnp.int32)
+    return jnp.repeat(client_util, B, axis=0, total_repeat_length=int(B.sum()))
+
+
+def solve_waterfilling(U: jnp.ndarray, m: float) -> jnp.ndarray:
+    """Closed-form solution of the budgeted sampling problem (Thm 8/9).
+
+    U: [V, S] nonnegative utilities (0 marks unavailable model).
+    m: expected number of training tasks per round (server budget).
+    Returns p [V, S] with sum(p) == min(m, V_eff) and per-row sums <= 1.
+    """
+    U = jnp.maximum(U, 0.0)
+    has_any = jnp.any(U > 0, axis=1)
+    # utility floor keeps every available (v,s) pair sampled with p >= theta
+    U = jnp.where(U > 0, jnp.maximum(U, UTILITY_FLOOR), 0.0)
+
+    M = jnp.sum(U, axis=1)                                   # [V]
+    V = U.shape[0]
+    V_eff = jnp.sum(has_any.astype(jnp.int32))
+
+    # Sort M descending; empty processors (M=0) sort last and are excluded by
+    # treating them as permanently "saturated with zero mass".
+    order = jnp.argsort(-M)
+    M_sorted = M[order]
+
+    # Suppose the j largest processors are saturated (sum_s p = 1) and the
+    # rest are scaled.  The paper's condition for validity of the split is
+    #   0 < m - j <= (sum_{i>j} M_i) / M_{j+1}
+    # (the proof removes the largest M first, so the saturated set is always
+    # a prefix of the sorted order).
+    csum = jnp.cumsum(M_sorted)
+    total = csum[-1]
+    # remaining[j] = mass of the scaled set when the first j are saturated
+    remaining = jnp.concatenate([total[None], total - csum])[:V + 1]  # [V+1]
+    j_idx = jnp.arange(V + 1)
+    m_rem = m - j_idx                                        # budget left for scaled set
+    max_rem = jnp.concatenate([M_sorted, jnp.zeros((1,), M.dtype)])  # M_{j+1}
+    ok = (m_rem > 0) & (m_rem * max_rem <= remaining + 1e-12)
+    # smallest valid j (paper: largest valid k = V - j)
+    j_star = jnp.argmax(ok)                                   # first True
+    # if none valid (m >= V_eff): full participation
+    full = m >= V_eff
+    scale = jnp.where(remaining[j_star] > 0,
+                      (m - j_star) / jnp.maximum(remaining[j_star], 1e-30), 0.0)
+
+    rank = jnp.empty_like(order).at[order].set(jnp.arange(V))
+    saturated = (rank < j_star) | full
+    M_safe = jnp.maximum(M, 1e-30)
+    p_sat = U / M_safe[:, None]
+    p_scaled = U * scale
+    p = jnp.where(saturated[:, None], p_sat, p_scaled)
+    p = jnp.where(has_any[:, None], p, 0.0)
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def solve_waterfilling_capped(U: jnp.ndarray, m: float,
+                              eta: jnp.ndarray) -> jnp.ndarray:
+    """Water-filling with HETEROGENEOUS per-processor participation caps
+    sum_s p_{s|v} <= eta_v — the extension the paper leaves as future work
+    (footnote 3: client-side communication constraints).
+
+    KKT generalizes Thm 8: saturated processors get p = eta_v * U / M_v; the
+    rest share the remaining budget with p = U/sqrt(y).  The saturation
+    order is by the *cap-normalized* mass r_v = M_v / eta_v (descending) —
+    with eta == 1 this reduces exactly to ``solve_waterfilling``.
+    """
+    U = jnp.where(U > 0, jnp.maximum(U, UTILITY_FLOOR), 0.0)
+    eta = jnp.clip(eta, 1e-9, 1.0)
+    has_any = jnp.any(U > 0, axis=1)
+    M = jnp.sum(U, axis=1)
+    V = U.shape[0]
+    r = jnp.where(has_any, M / eta, 0.0)                 # saturation priority
+    order = jnp.argsort(-r)
+    M_sorted = M[order]
+    eta_sorted = jnp.where(has_any, eta, 0.0)[order]
+    r_sorted = r[order]
+
+    csum_M = jnp.cumsum(M_sorted)
+    csum_eta = jnp.cumsum(eta_sorted)
+    total_M = csum_M[-1]
+    remaining_M = jnp.concatenate([total_M[None], total_M - csum_M])[:V + 1]
+    spent_eta = jnp.concatenate([jnp.zeros((1,)), csum_eta])[:V + 1]
+    m_rem = m - spent_eta                                 # budget left
+    next_r = jnp.concatenate([r_sorted, jnp.zeros((1,))])  # r_{j+1}
+    # valid split j: m_rem > 0 and scale * r_{j+1} <= 1 where
+    # scale = m_rem / remaining_M
+    ok = (m_rem > 0) & (m_rem * next_r <= remaining_M + 1e-12)
+    j_star = jnp.argmax(ok)
+    eta_total = jnp.sum(jnp.where(has_any, eta, 0.0))
+    full = m >= eta_total                                 # caps bind everywhere
+    scale = jnp.where(remaining_M[j_star] > 0,
+                      m_rem[j_star] / jnp.maximum(remaining_M[j_star], 1e-30),
+                      0.0)
+
+    rank = jnp.empty_like(order).at[order].set(jnp.arange(V))
+    saturated = (rank < j_star) | full
+    M_safe = jnp.maximum(M, 1e-30)
+    p_sat = eta[:, None] * U / M_safe[:, None]
+    p_scaled = U * scale
+    p = jnp.where(saturated[:, None], p_sat, p_scaled)
+    p = jnp.where(has_any[:, None], p, 0.0)
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def lvr_probabilities(losses: jnp.ndarray, d: jnp.ndarray, B: jnp.ndarray,
+                      avail: jnp.ndarray, m: float,
+                      eta: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """MMFL-LVR (Thm 2/9).  losses [N,S] current local losses f_{i,s}(w_s);
+    d [N,S] dataset fractions; B [N] processor budgets; avail [N,S] bool.
+    ``eta`` [N] (optional): per-client participation caps (footnote-3
+    extension — cellular/roaming clients upload less often).
+    Returns per-processor probabilities [V,S]."""
+    util = jnp.abs(losses) * d / B[:, None]
+    util = jnp.where(avail, util, 0.0)
+    U = processor_budget_utilities(util, B)
+    if eta is not None:
+        eta_v = processor_budget_utilities(eta[:, None], B)[:, 0]
+        return solve_waterfilling_capped(U, m, eta_v)
+    return solve_waterfilling(U, m)
+
+
+def gvr_probabilities(update_norms: jnp.ndarray, d: jnp.ndarray,
+                      B: jnp.ndarray, avail: jnp.ndarray, m: float,
+                      eta: float = 1.0) -> jnp.ndarray:
+    """MMFL-GVR (Thm 8; prior art [5,31] adapted to heterogeneous budgets).
+    update_norms [N,S] = ||G_{i,s}|| — requires *all* clients to train *all*
+    models (the computational overhead the paper criticizes)."""
+    util = update_norms * d / (B[:, None] * eta)
+    util = jnp.where(avail, util, 0.0)
+    U = processor_budget_utilities(util, B)
+    return solve_waterfilling(U, m)
+
+
+def random_probabilities(d: jnp.ndarray, B: jnp.ndarray, avail: jnp.ndarray,
+                         m: float) -> jnp.ndarray:
+    """Uniform-random baseline: every available (processor, model) pair gets
+    equal probability, scaled to meet the budget m."""
+    util = jnp.where(avail, 1.0, 0.0)
+    U = processor_budget_utilities(util, B)
+    n_pairs = jnp.maximum(jnp.sum(U > 0), 1)
+    p = U * (m / n_pairs)
+    # respect per-processor feasibility
+    row = jnp.sum(p, axis=1, keepdims=True)
+    p = jnp.where(row > 1.0, p / row, p)
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def roundrobin_mask(avail: jnp.ndarray, round_idx: int) -> jnp.ndarray:
+    """RoundRobin baseline: only model (round mod S) trains this round."""
+    S = avail.shape[1]
+    s = jnp.mod(round_idx, S)
+    mask = jax.nn.one_hot(s, S, dtype=avail.dtype)
+    return avail * mask[None, :]
+
+
+def sample_assignment(key, p: jnp.ndarray) -> jnp.ndarray:
+    """Draw the participation indicators.  Each processor independently picks
+    at most one model: with prob p_{s|v} it trains model s (sum_s p <= 1).
+    Returns active [V,S] in {0,1} with at most one 1 per row."""
+    V, S = p.shape
+    row = jnp.sum(p, axis=1)
+    stay_idle = 1.0 - row
+    probs = jnp.concatenate([p, stay_idle[:, None]], axis=1)
+    probs = jnp.clip(probs, 0.0, 1.0)
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=1, keepdims=True), 1e-30)
+    choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)), axis=1)
+    active = jax.nn.one_hot(choice, S + 1, dtype=jnp.float32)[:, :S]
+    return active

@@ -1,0 +1,118 @@
+"""Optimal staleness coefficients (MMFL-StaleVR, Thm 3/10) and their
+zero-overhead estimator (MMFL-StaleVRE, Eq. 21).
+
+The server keeps, per (client, model):
+  * ``h`` — the last received update (refreshed when the client is active),
+  * a ``stale_mean`` running sum  sum_i (d_i/B_i) * beta_i * h_i  that enters
+    the aggregation rule Eq. (18) without touching inactive clients.
+
+``beta_state`` carries the StaleVRE bookkeeping (Eq. 21): for each client the
+last two *measured* betas and their round stamps; between activations beta is
+linearly extrapolated along the observed decay.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_dot(a: Any, b: Any) -> jnp.ndarray:
+    """<a, b> over flattened pytrees (leading axes must match exactly)."""
+    parts = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jnp.asarray(sum(jax.tree.leaves(parts)))
+
+
+def batched_tree_dot(a: Any, b: Any) -> jnp.ndarray:
+    """Per-client <a_c, b_c> for pytrees with leading client axis -> [C].
+
+    NOTE: reduces along the original axes (no [C, -1] reshape) — flattening
+    a tensor whose inner dims are mesh-sharded forces an all-gather under
+    GSPMD (EXPERIMENTS.md §Perf-4)."""
+    def leaf(x, y):
+        axes = tuple(range(1, x.ndim))
+        return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32),
+                       axis=axes)
+    parts = jax.tree.leaves(jax.tree.map(leaf, a, b))
+    return jnp.asarray(sum(parts))
+
+
+def optimal_beta(G: Any, h: Any, batched: bool = True) -> jnp.ndarray:
+    """beta* = <G, h> / ||h||^2  (Thm 3, Eq. 20); 0 when h == 0."""
+    if batched:
+        num = batched_tree_dot(G, h)
+        den = batched_tree_dot(h, h)
+    else:
+        num, den = tree_dot(G, h), tree_dot(h, h)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# MMFL-StaleVRE (Eq. 21): linear extrapolation of beta between activations
+# ---------------------------------------------------------------------------
+
+
+class BetaState(NamedTuple):
+    """Per (client, model) StaleVRE bookkeeping, all [N, S] arrays."""
+    beta_hat: jnp.ndarray     # beta measured right after a refresh (~1)
+    beta_last: jnp.ndarray    # beta measured at the last activation
+    t_hat: jnp.ndarray        # round of the beta_hat measurement
+    t_last: jnp.ndarray       # round of the beta_last measurement (t_last <= t_hat)
+
+
+def init_beta_state(N: int, S: int) -> BetaState:
+    z = jnp.zeros((N, S), jnp.float32)
+    return BetaState(beta_hat=jnp.ones((N, S), jnp.float32),
+                     beta_last=jnp.ones((N, S), jnp.float32),
+                     t_hat=z, t_last=z)
+
+
+def estimate_beta(state: BetaState, tau: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (21): extrapolate beta at round ``tau`` from the last measured
+    decay slope.  Clipped to [0, 1] (stale info never up-weighted)."""
+    dt_hist = jnp.maximum(state.t_hat - state.t_last, 1.0)
+    slope = (state.beta_hat - state.beta_last) / dt_hist     # >= 0 usually
+    beta = state.beta_hat - slope * jnp.maximum(tau - state.t_hat, 0.0)
+    return jnp.clip(beta, 0.0, 1.0)
+
+
+def update_beta_state(state: BetaState, active: jnp.ndarray,
+                      measured_beta: jnp.ndarray, tau: jnp.ndarray) -> BetaState:
+    """On activation: the measured beta (Eq. 20 against the stored h) becomes
+    ``beta_last``; the post-refresh consecutive-round similarity is ~1 and
+    becomes ``beta_hat`` stamped at this round."""
+    act = active > 0
+    return BetaState(
+        beta_hat=jnp.where(act, 1.0, state.beta_hat),
+        beta_last=jnp.where(act, jnp.clip(measured_beta, 0.0, 1.0),
+                            state.beta_last),
+        t_hat=jnp.where(act, tau, state.t_hat),
+        t_last=jnp.where(act, state.t_hat, state.t_last),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Server-side stale store (dense, per model)
+# ---------------------------------------------------------------------------
+
+
+def init_stale_store(template: Any, n_clients: int) -> Any:
+    """h_{i,s}: one stacked pytree [N, ...] per model (zeros = 'no update')."""
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_clients,) + x.shape, jnp.float32), template)
+
+
+def refresh_stale(h: Any, G: Any, active: jnp.ndarray) -> Any:
+    """h_i <- G_i for active clients (G has the same [N,...] layout)."""
+    def leaf(hh, gg):
+        mask = active.reshape((-1,) + (1,) * (hh.ndim - 1))
+        return jnp.where(mask > 0, gg.astype(hh.dtype), hh)
+    return jax.tree.map(leaf, h, G)
+
+
+def stale_mean(h: Any, weights: jnp.ndarray) -> Any:
+    """sum_i weights_i * h_i  with weights = (d_i/B_i) * beta_i  -> pytree."""
+    return jax.tree.map(
+        lambda hh: jnp.tensordot(weights.astype(hh.dtype), hh, axes=(0, 0)), h)

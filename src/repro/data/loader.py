@@ -1,0 +1,67 @@
+"""Federated data loading: per-client shard iterators for the FL engines.
+
+Wraps the padded per-client arrays produced by ``data.partition`` (or raw
+token shards) with deterministic, seedable minibatch streams — the host-side
+input pipeline for ``launch/train.py`` and the simulation server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientShard:
+    """One client's local dataset (padded arrays + true count)."""
+    arrays: Dict[str, np.ndarray]   # each [cap, ...]
+    count: int
+
+    def sample_batch(self, rng: np.random.Generator, batch: int
+                     ) -> Dict[str, np.ndarray]:
+        idx = rng.integers(0, max(self.count, 1), batch)
+        return {k: v[idx] for k, v in self.arrays.items()}
+
+    def epoch_batches(self, rng: np.random.Generator, batch: int
+                      ) -> Iterator[Dict[str, np.ndarray]]:
+        order = rng.permutation(self.count)
+        for i in range(0, self.count - batch + 1, batch):
+            idx = order[i:i + batch]
+            yield {k: v[idx] for k, v in self.arrays.items()}
+
+
+class FederatedDataset:
+    """All clients' shards for one task."""
+
+    def __init__(self, part: Dict[str, np.ndarray],
+                 keys: Sequence[str] = ("x", "y")):
+        counts = np.asarray(part["count"])
+        self.clients = [
+            ClientShard({k: np.asarray(part[k][i]) for k in keys},
+                        int(counts[i]))
+            for i in range(len(counts))
+        ]
+
+    def __len__(self) -> int:
+        return len(self.clients)
+
+    def cohort_batch(self, rng: np.random.Generator,
+                     client_ids: Sequence[int], batch: int
+                     ) -> Dict[str, np.ndarray]:
+        """Stacked [C, batch, ...] batch for a sampled cohort."""
+        batches = [self.clients[int(c)].sample_batch(rng, batch)
+                   for c in client_ids]
+        return {k: np.stack([b[k] for b in batches])
+                for k in batches[0]}
+
+
+def token_shards(data: np.ndarray) -> "FederatedDataset":
+    """[N, per_client, seq+1] token array -> FederatedDataset with
+    x = inputs, y = next-token targets."""
+    part = {
+        "x": data[..., :-1],
+        "y": data[..., 1:],
+        "count": np.full(data.shape[0], data.shape[1], np.int64),
+    }
+    return FederatedDataset(part)

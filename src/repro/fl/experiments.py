@@ -1,0 +1,103 @@
+"""Builders for the paper's §6.1 experiment settings on synthetic data.
+
+``build_setting(n_models, ...)`` reproduces:
+  * 120 clients; each client sees 30% of labels;
+  * model-specific high/low data groups (10% / 90%, ≈52.6% of data at the
+    high group);
+  * availability: 90% of clients can train all S models, 10% only S-1;
+  * budgets B_i: 25% |S_i|, 50% ceil(|S_i|/2), 25% 1;
+  * 3-model setting: 3x Fashion-MNIST-like CNN tasks;
+  * 5-model setting: 2x FMNIST-like + 1x CIFAR-like CNN + 1x EMNIST-like CNN
+    + 1x Shakespeare-like LSTM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.server import MMFLServer, ModelAdapter, ServerConfig, Task
+from repro.data import partition, synthetic
+from repro.models import cnn, lstm
+
+
+def _cnn_adapter(n_classes: int, channels: int, in_ch: int = 1) -> ModelAdapter:
+    return ModelAdapter(
+        init=lambda key: cnn.init(key, n_classes, channels, in_ch),
+        loss_fn=cnn.loss_fn,
+        accuracy=cnn.accuracy,
+    )
+
+
+def _lstm_adapter(vocab: int) -> ModelAdapter:
+    return ModelAdapter(
+        init=lambda key: lstm.init(key, vocab, d_embed=24, d_hidden=64),
+        loss_fn=lstm.loss_fn,
+        accuracy=lstm.accuracy,
+    )
+
+
+def _image_task(rng, name: str, n_clients: int, n_classes: int = 10,
+                channels: int = 8, n_per_class: int = 200) -> Task:
+    x, y = synthetic.make_image_task(rng, n_classes=n_classes,
+                                     n_per_class=n_per_class)
+    n_test = max(64, len(y) // 10)
+    test = {"x": jnp.asarray(x[:n_test]), "y": jnp.asarray(y[:n_test])}
+    part = partition.label_shard_partition(rng, x[n_test:], y[n_test:],
+                                           n_clients)
+    data = {k: jnp.asarray(v) for k, v in part.items() if k != "high"}
+    return Task(name=name, model=_cnn_adapter(n_classes, channels),
+                data=data, test=test)
+
+
+def _char_task(rng, name: str, n_clients: int, vocab: int = 48) -> Task:
+    x, y, sid = synthetic.make_char_task(rng, vocab=vocab,
+                                         n_streams=max(n_clients + 16, 64),
+                                         stream_len=256, seq_len=24)
+    n_test = 128
+    test = {"x": jnp.asarray(x[:n_test]), "y": jnp.asarray(y[:n_test])}
+    part = partition.stream_partition(rng, x[n_test:], y[n_test:],
+                                      sid[n_test:], n_clients)
+    data = {k: jnp.asarray(v) for k, v in part.items() if k != "high"}
+    return Task(name=name, model=_lstm_adapter(vocab), data=data, test=test)
+
+
+def build_setting(n_models: int = 3, n_clients: int = 120, seed: int = 0,
+                  small: bool = False) -> Tuple[List[Task], np.ndarray, np.ndarray]:
+    """Returns (tasks, B, avail).  ``small=True`` shrinks everything for
+    CI-speed tests while keeping the same structure."""
+    rng = np.random.default_rng(seed)
+    if small:
+        n_clients = min(n_clients, 24)
+    npc = 60 if small else 200
+    tasks: List[Task] = []
+    if n_models == 3:
+        for i in range(3):
+            tasks.append(_image_task(rng, f"fmnist-{i}", n_clients,
+                                     n_per_class=npc))
+    elif n_models == 5:
+        tasks.append(_image_task(rng, "fmnist-0", n_clients, n_per_class=npc))
+        tasks.append(_image_task(rng, "fmnist-1", n_clients, n_per_class=npc))
+        tasks.append(_image_task(rng, "cifar", n_clients, n_classes=10,
+                                 channels=12, n_per_class=npc))
+        tasks.append(_image_task(rng, "emnist", n_clients, n_classes=26,
+                                 n_per_class=max(40, npc // 2)))
+        tasks.append(_char_task(rng, "shakespeare", n_clients))
+    else:
+        for i in range(n_models):
+            tasks.append(_image_task(rng, f"task-{i}", n_clients,
+                                     n_per_class=npc))
+    avail = partition.availability(rng, n_clients, n_models)
+    B = partition.processor_budgets(rng, avail)
+    return tasks, B, avail
+
+
+def make_server(method: str, n_models: int = 3, seed: int = 0,
+                small: bool = False, rounds_cfg: dict | None = None
+                ) -> MMFLServer:
+    tasks, B, avail = build_setting(n_models, seed=seed, small=small)
+    cfg = ServerConfig(method=method, seed=seed, **(rounds_cfg or {}))
+    return MMFLServer(tasks, B, avail, cfg)

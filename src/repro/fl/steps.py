@@ -1,0 +1,315 @@
+"""Distributed MMFL round steps for the assigned production architectures.
+
+This is the paper's technique as a first-class distributed feature.  The
+mapping (DESIGN.md §2): per round, each model's sampled cohort of C clients
+occupies the C data-parallel groups of the mesh.  Local weights carry a
+leading client axis sharded over dp — per-device memory equals ONE
+model-sharded replica because the data-axis replication is repurposed as
+per-client divergence.  K local SGD steps run with **no cross-client
+collectives**; the single P-weighted aggregation einsum lowers to the
+round's only dp collective (the paper's communication pattern: one budgeted
+update exchange per round instead of per-step all-reduce).
+
+Two execution modes:
+
+* ``fedavg``      — faithful K>=1 local epochs with divergent local weights.
+                    Used whenever ~3 model-sharded copies fit per device.
+* ``weighted_dp`` — exact K=1 algebraic reduction: Delta = lr * grad of the
+                    coefficient-weighted cohort loss, so no per-client weight
+                    copies exist.  Used for the 100B+ archs (qwen1.5-110b,
+                    llama4 maverick/scout) where a per-client replica cannot
+                    fit; params are additionally FSDP-sharded over dp.
+                    (Hardware adaptation documented in DESIGN.md.)
+
+Plus ``stale`` aggregation (Eq. 18) on top of fedavg, and the serving pair
+``prefill_step`` / ``serve_step`` for the decode input shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, FLRoundConfig, InputShape
+from repro.core import stale as stale_mod
+from repro.models import sharding as shd
+from repro.models import transformer
+
+# per-device memory budget (bytes) for choosing fedavg vs weighted_dp:
+# ~3 copies (base + local + grads) of the model-sharded params must fit.
+FEDAVG_BYTES_BUDGET = 8e9
+MICROBATCH_TOKENS = 8192  # default tokens per microbatch per client
+# per-device budget for the remat layer-carries of ONE microbatch backward
+# (micro_tokens * d_model * 2B * n_layers must fit): EXPERIMENTS.md §Perf-2b
+CARRY_BYTES_BUDGET = 2e9
+
+
+def pick_mode(cfg: ArchConfig, mesh: Mesh, param_bytes: int = 2) -> str:
+    per_shard = cfg.param_count() * param_bytes / mesh.shape["model"]
+    return "fedavg" if 3 * per_shard <= FEDAVG_BYTES_BUDGET else "weighted_dp"
+
+
+def micro_tokens_for(cfg: ArchConfig) -> int:
+    """Adaptive microbatch size: cap the per-micro remat carries."""
+    per_token_carry = cfg.d_model * 2 * cfg.n_layers
+    cap = int(CARRY_BYTES_BUDGET // max(per_token_carry, 1))
+    return max(512, min(MICROBATCH_TOKENS, cap))
+
+
+# ---------------------------------------------------------------------------
+# sharding bundles
+# ---------------------------------------------------------------------------
+
+
+def base_param_specs(cfg: ArchConfig, mesh: Mesh, mode: str):
+    """Global-model specs.
+
+    * fedavg archs: Megatron TP over "model", replicated over dp (a local
+      replica per client slot is the point).
+    * weighted_dp (100B+) archs: 2D tensor sharding — every large weight
+      sharded over ("data" x "model") WITHIN the layer, layer-stack dim left
+      unsharded.  (The earlier FSDP-over-L layout forced a full-stack
+      all-gather inside the layer scan: EXPERIMENTS.md §Perf-1.)
+
+    All axes are divisibility-checked against the mesh (jit input shardings
+    must divide evenly)."""
+    ax2 = "data" if mode == "weighted_dp" else None
+    specs = shd.param_specs(cfg, ax2=ax2)
+    ms = mesh.shape["model"]
+    if cfg.vocab_size % ms:
+        # e.g. hymba vocab 32001: move the model shards to the d dim
+        specs["embed"] = {"w": P(None, "model")}
+        if "lm_head" in specs:
+            specs["lm_head"] = {"w": P("model", None)}
+    return specs
+
+
+def _microbatches(local_batch: int, seq: int,
+                  micro_tokens: int = MICROBATCH_TOKENS) -> int:
+    tokens = local_batch * seq
+    M = max(1, tokens // micro_tokens)
+    M = min(M, local_batch)
+    while local_batch % M:
+        M -= 1
+    return M
+
+
+# ---------------------------------------------------------------------------
+# train steps
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the launcher/dry-run needs for one (arch, shape) pair."""
+    fn: Callable
+    in_specs: Any          # pytree of PartitionSpec matching fn args
+    out_specs: Any
+    abstract_args: Any     # pytree of ShapeDtypeStruct (with shardings)
+    mode: str
+    description: str
+
+
+def _split_micro(batch: Dict[str, jnp.ndarray], M: int):
+    """[lB, ...] -> [M, lB/M, ...] per leaf."""
+    return jax.tree.map(
+        lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                     rcfg: FLRoundConfig, mode: Optional[str] = None,
+                     stale: bool = False) -> Callable:
+    """Returns train_step(params, batch, probs, dweights[, h, stale_sum]).
+
+    batch["tokens"]: [C, local_B, S]; probs/dweights: [C].
+    Returns (new_params, metrics) (+ (G, beta) for the stale variant).
+    """
+    mode = mode or pick_mode(cfg, mesh)
+    C = shd.dp_size(mesh)
+    local_B = shape.global_batch // C
+    assert local_B >= 1, f"{shape.name}: global_batch < cohort size {C}"
+    M = _microbatches(local_B, shape.seq_len, micro_tokens_for(cfg))
+    K = rcfg.local_steps
+    lr = rcfg.local_lr
+
+    def loss_fn(p, micro):
+        loss, _ = transformer.forward(p, cfg, micro, remat=True,
+                                      remat_policy=rcfg.remat_policy)
+        return loss
+
+    def accum_grads(p, batch_c):
+        """Gradient of the mean loss over one client's local batch,
+        accumulated over M microbatches."""
+        micros = _split_micro(batch_c, M)
+
+        def body(carry, micro):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(p, micro)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        g0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+        (g, l), _ = jax.lax.scan(body, (g0, jnp.zeros(())), micros)
+        inv = 1.0 / M
+        return jax.tree.map(lambda x: x * inv, g), l * inv
+
+    # -- fedavg: K local steps with divergent per-client weights ----------
+    def client_local(p0, batch_c):
+        def sgd(carry, _):
+            w, l0, i = carry
+            g, l = accum_grads(w, batch_c)
+            w = jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                           - lr * b).astype(a.dtype), w, g)
+            l0 = jnp.where(i == 0, l, l0)
+            return (w, l0, i + 1), None
+
+        (wf, l0, _), _ = jax.lax.scan(sgd, (p0, jnp.zeros(()), 0), None,
+                                      length=K)
+        return wf, l0
+
+    def fedavg_step(params, batch, probs, dweights):
+        coeff = dweights / jnp.clip(probs, 1e-6, None)       # P = d/(B p)
+        w_locals = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
+        w_locals, losses = jax.vmap(client_local)(w_locals, batch)
+        # G_c = w0 - w_c^K ; Delta = sum_c P_c G_c  (Eq. 3)
+        delta = jax.tree.map(
+            lambda w0, wl: jnp.einsum(
+                "c,c...->...", coeff.astype(jnp.float32),
+                w0[None].astype(jnp.float32) - wl.astype(jnp.float32)),
+            params, w_locals)
+        new_params = jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                                - b).astype(a.dtype),
+                                  params, delta)
+        metrics = {"losses": losses, "H1": jnp.sum(coeff),
+                   "Zp": (jnp.sum(coeff) - 1.0) ** 2}
+        return new_params, metrics
+
+    stale_dtype = jnp.dtype(rcfg.stale_dtype)
+    if stale:
+        # explicit shardings for the stale streams: without these GSPMD
+        # all-gathers h/G over the model axis for the elementwise Eq.18 math
+        # (EXPERIMENTS.md §Perf-4); stale implies fedavg (no ax2 clash)
+        _p_shapes = jax.eval_shape(
+            lambda k: transformer.init(k, cfg, jnp.dtype(rcfg.param_dtype)),
+            jax.random.PRNGKey(0))
+        _p_specs = shd.sanitize_specs(
+            _p_shapes, base_param_specs(cfg, mesh, mode), mesh)
+        _h_specs = shd.with_client_axis(mesh, _p_specs)
+        _p_shard = shd.to_shardings(mesh, _p_specs)
+        _h_shard = shd.to_shardings(mesh, _h_specs)
+
+    def stale_step(params, batch, probs, dweights, h, stale_sum):
+        """Eq. 18 aggregation.  h: cohort stale updates [C, params...];
+        stale_sum: precomputed sum_i (d_i/B_i) beta_i h_i over ALL clients.
+
+        The per-client correction stream (G - beta h) is cast to
+        ``rcfg.stale_dtype`` BEFORE the cross-client reduce, halving the
+        round's dominant collective at bf16; sharding constraints keep the
+        elementwise stream math fully distributed (EXPERIMENTS.md §Perf-4);
+        the final parameter update still accumulates in f32."""
+        coeff = dweights / jnp.clip(probs, 1e-6, None)
+        w_locals = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
+        w_locals, losses = jax.vmap(client_local)(w_locals, batch)
+        G = jax.tree.map(lambda w0, wl: (w0[None].astype(jnp.float32)
+                                         - wl.astype(jnp.float32))
+                         .astype(stale_dtype), params, w_locals)
+        G = jax.lax.with_sharding_constraint(G, _h_shard)
+        beta = stale_mod.optimal_beta(G, h)                  # [C]  (Eq. 20)
+        corr = jax.tree.map(
+            lambda g, hh: jnp.einsum(
+                "c,c...->...", coeff.astype(stale_dtype),
+                g - (beta.reshape((-1,) + (1,) * (hh.ndim - 1))
+                     .astype(stale_dtype)) * hh.astype(stale_dtype)),
+            G, h)
+        corr = jax.lax.with_sharding_constraint(corr, _p_shard)
+        new_params = jax.tree.map(
+            lambda a, sm, cr: (a.astype(jnp.float32)
+                               - sm.astype(jnp.float32)
+                               - cr.astype(jnp.float32)).astype(a.dtype),
+            params, stale_sum, corr)
+        metrics = {"losses": losses, "H1": jnp.sum(coeff), "beta": beta}
+        return new_params, metrics, G, beta
+
+    # -- weighted_dp: exact K=1 reduction, no per-client replicas ----------
+    def weighted_dp_step(params, batch, probs, dweights):
+        """Per-microbatch gradient accumulation: grad() INSIDE the scan body
+        so only one microbatch's activations are ever live (grad around the
+        whole cohort scan kept every microbatch's remat carries resident:
+        EXPERIMENTS.md §Perf-2).  Clients stay vmapped (data-parallel)
+        within each microbatch; the scan runs over the M microbatches."""
+        coeff = dweights / jnp.clip(probs, 1e-6, None)
+        # [C, lB, ...] -> [M, C, lB/M, ...]
+        micros = jax.tree.map(
+            lambda x: x.reshape((x.shape[0], M, x.shape[1] // M)
+                                + x.shape[2:]).swapaxes(0, 1), batch)
+
+        def weighted_loss(p, micro):
+            losses = jax.vmap(lambda mc: loss_fn(p, mc))(micro)   # [C]
+            return jnp.sum(coeff * losses), losses
+
+        def body(carry, micro):
+            g_acc, l_acc = carry
+            (_, losses), g = jax.value_and_grad(
+                weighted_loss, has_aux=True)(params, micro)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / M, g_acc, g)
+            return (g_acc, l_acc + losses / M), None
+
+        g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        (grads, losses), _ = jax.lax.scan(body, (g0, jnp.zeros((C,))), micros)
+        new_params = jax.tree.map(
+            lambda a, g: (a.astype(jnp.float32)
+                          - lr * g).astype(a.dtype),
+            params, grads)
+        metrics = {"losses": losses, "H1": jnp.sum(coeff),
+                   "Zp": (jnp.sum(coeff) - 1.0) ** 2}
+        return new_params, metrics
+
+    if stale:
+        assert mode == "fedavg", "stale aggregation needs explicit G (fedavg)"
+        return stale_step
+    return fedavg_step if mode == "fedavg" else weighted_dp_step
+
+
+def build_loss_report_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    """Forward-only per-client losses f_{i,s}(w^tau) — the only thing
+    MMFL-LVR uploads (scalars), computed on one microbatch per client."""
+    C = shd.dp_size(mesh)
+
+    def report(params, batch):
+        def one(batch_c):
+            first = jax.tree.map(lambda x: x[:1], batch_c)
+            loss, _ = transformer.forward(params, cfg, first)
+            return loss
+
+        return jax.vmap(one)(batch)                          # [C]
+
+    return report
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    def prefill_step(params, batch):
+        logits, caches = transformer.prefill(params, cfg, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    def serve_step(params, caches, ids, position):
+        logits, new_caches = transformer.decode_step(params, cfg, ids,
+                                                     caches, position)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+
+    return serve_step

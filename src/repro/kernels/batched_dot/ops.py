@@ -1,0 +1,35 @@
+"""Jit'd wrapper: optimal beta over parameter pytrees via the Pallas kernel.
+
+Falls back to interpret mode automatically off-TPU so the same code path is
+exercised everywhere (the harness validates kernels with interpret=True on
+CPU; on TPU the compiled kernel runs).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batched_dot.batched_dot import batched_dot
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flatten_cohort(tree: Any) -> jnp.ndarray:
+    """Pytree with leading cohort axis C -> [C, P] concatenated floats."""
+    leaves = jax.tree.leaves(tree)
+    C = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(C, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def optimal_beta_pallas(G: Any, h: Any, interpret: bool | None = None
+                        ) -> jnp.ndarray:
+    """beta* = <G,h>/||h||^2 per cohort client (Eq. 20), fused kernel path."""
+    interpret = _interpret_default() if interpret is None else interpret
+    Gf, hf = flatten_cohort(G), flatten_cohort(h)
+    dots, norms = batched_dot(Gf, hf, interpret=interpret)
+    return jnp.where(norms > 0, dots / jnp.maximum(norms, 1e-30), 0.0)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the batched_dot kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batched_dot_ref(G: jnp.ndarray, h: jnp.ndarray):
+    """G, h: [C, P] -> (dots [C], norms [C]) in float32."""
+    G = G.astype(jnp.float32)
+    h = h.astype(jnp.float32)
+    return jnp.sum(G * h, axis=-1), jnp.sum(h * h, axis=-1)

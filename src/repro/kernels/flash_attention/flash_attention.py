@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: block-causal flash attention (online softmax).
+
+Covers the transformer compute hot spot shared by 8/10 assigned archs.
+TPU-native adaptation: q/kv tiles sized for VMEM and the 128-lane MXU
+(BLOCK_Q x BLOCK_K matmuls hit the systolic array at full occupancy);
+the softmax running max/denominator live in VMEM scratch across the
+sequential KV grid dimension.  Causal masking skips fully-masked KV blocks
+via the grid order (kv block index > q block index contributes nothing and
+is masked; the arithmetic still runs but the pattern keeps the kernel
+branch-free, which TPUs prefer over divergent control flow).
+
+Layout: q [B, H, S, D], k/v [B, H, S, D] with D padded to 128.
+Grid: (B*H, S/BLOCK_Q, S/BLOCK_K); KV innermost (sequential accumulation).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, block_q: int, block_k: int, causal: bool,
+            window: int, s_real: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [Bq, D]
+    k = k_ref[0].astype(jnp.float32)                    # [Bk, D]
+    v = v_ref[0].astype(jnp.float32)                    # [Bk, D]
+    s = q @ k.T                                          # [Bq, Bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < s_real            # exclude sequence padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # [Bq]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    # fully-masked rows: keep p at 0 (exp(NEG_INF - m) underflows to 0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q, k, v: [B, H, S, D] -> out [B, H, S, D].  D padded to 128 inside."""
+    B, H, S, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_s_q = (-S) % block_q
+    pad_s_k = (-S) % block_k
+    pad_s = max(pad_s_q, pad_s_k)
+    pad_d = (-D) % 128
+    if pad_s or pad_d:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_s), (0, pad_d)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, pad_d)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, pad_d)))
+    else:
+        qp, kp, vp = q, k, v
+    Sp, Dp = S + pad_s, D + pad_d
+    qf = qp.reshape(B * H, Sp, Dp)
+    kf = kp.reshape(B * H, Sp, Dp)
+    vf = vp.reshape(B * H, Sp, Dp)
+    grid = (B * H, Sp // block_q, Sp // block_k)
+    kernel = functools.partial(_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, causal=causal, window=window,
+                               s_real=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dp), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, Dp), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, Dp), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dp), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom l
+            pltpu.VMEM((block_q, Dp), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, H, Sp, Dp)
+    return out[:, :, :S, :D]

@@ -1,0 +1,32 @@
+"""Jit'd wrapper: drop-in GQA attention using the flash kernel.
+
+``flash_gqa`` takes the model-layout tensors ([B, S, H, dh], grouped KV),
+repeats KV heads, and dispatches to the Pallas kernel (interpret mode
+off-TPU).  Enabled in the model stack via ``ArchConfig`` -> use_flash flag
+on the attention call sites."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batched_dot.ops import _interpret_default
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def flash_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: int = 0,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """q [B,S,Hq,dh]; k/v [B,S,Hk,dh] -> [B,S,Hq,dh]."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, S, Hq, dh = q.shape
+    Hk = k.shape[2]
+    n_rep = Hq // Hk
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

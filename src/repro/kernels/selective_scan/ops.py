@@ -1,0 +1,16 @@
+"""Jit'd wrapper: drop-in replacement for models.mamba._ssm_scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.batched_dot.ops import _interpret_default
+from repro.kernels.selective_scan.selective_scan import selective_scan
+
+
+def ssm_scan_pallas(u, dt, A, B, C, D, interpret: bool | None = None):
+    """Same contract as mamba._ssm_scan: returns (y, h_last is NOT tracked
+    by the kernel fast path — use the jnp path when a decode cache is
+    needed)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    y = selective_scan(u, dt, B, C, A, D, interpret=interpret)
+    return y

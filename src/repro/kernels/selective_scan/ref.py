@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the selective scan kernel (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, B, C, A, D):
+    """u, dt: [Bsz,S,di]; B, C: [Bsz,S,N]; A: [di,N]; D: [di] -> [Bsz,S,di]."""
+    u = u.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    Bsz, S, di = u.shape
+    N = A.shape[-1]
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        dA = jnp.exp(dt_t[..., None] * A)               # [Bsz,di,N]
+        h = h * dA + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + D * u_t
+        return h, y
+
+    h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (u.swapaxes(0, 1), dt.swapaxes(0, 1),
+                                    B.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

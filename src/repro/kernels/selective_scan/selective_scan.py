@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba-1 selective scan (recurrent path).
+
+The SSM recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t is the
+compute hot spot of the attention-free archs (falcon-mamba) and the hybrid
+heads (hymba).  The jnp path materializes chunked [B, Sc, di, N] tensors in
+HBM; this kernel keeps the running state h [BLOCK_D, N] resident in VMEM
+scratch across the sequential time grid and streams u/dt/B/C once —
+HBM traffic drops from O(S*di*N) to O(S*(di + N)).
+
+Grid: (B, di/BLOCK_D, S/CHUNK) — time chunks innermost (sequential), state
+carried in scratch; the time loop inside a chunk is a static unroll.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_D = 512
+CHUNK = 16
+
+
+def _kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref,
+            *, chunk: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)               # [D, N]
+    Dp = d_ref[...].astype(jnp.float32)              # [D]
+    h = h_ref[...]
+    for t in range(chunk):
+        u_t = u_ref[0, t].astype(jnp.float32)        # [D]
+        dt_t = dt_ref[0, t].astype(jnp.float32)      # [D]
+        b_t = b_ref[0, t].astype(jnp.float32)        # [N]
+        c_t = c_ref[0, t].astype(jnp.float32)        # [N]
+        dA = jnp.exp(dt_t[:, None] * A)              # [D, N]
+        h = h * dA + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = (jnp.sum(h * c_t[None, :], axis=1)
+                       + Dp * u_t).astype(y_ref.dtype)
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(u: jnp.ndarray, dt: jnp.ndarray, B: jnp.ndarray,
+                   C: jnp.ndarray, A: jnp.ndarray, D: jnp.ndarray,
+                   block_d: int = BLOCK_D, chunk: int = CHUNK,
+                   interpret: bool = False) -> jnp.ndarray:
+    """u, dt: [Bsz, S, di]; B, C: [Bsz, S, N]; A: [di, N]; D: [di]
+    -> y [Bsz, S, di] (f32)."""
+    Bsz, S, di = u.shape
+    N = A.shape[-1]
+    block_d = min(block_d, di)
+    while di % block_d:
+        block_d -= 1
+    chunk = min(chunk, S)
+    pad_s = (-S) % chunk
+    if pad_s:
+        pad3 = ((0, 0), (0, pad_s), (0, 0))
+        u, dt = jnp.pad(u, pad3), jnp.pad(dt, pad3)
+        B, C = jnp.pad(B, pad3), jnp.pad(C, pad3)
+    Sp = S + pad_s
+    grid = (Bsz, di // block_d, Sp // chunk)
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, dk, t: (b, t, dk)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, dk, t: (b, t, dk)),
+            pl.BlockSpec((1, chunk, N), lambda b, dk, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, dk, t: (b, t, 0)),
+            pl.BlockSpec((block_d, N), lambda b, dk, t: (dk, 0)),
+            pl.BlockSpec((block_d,), lambda b, dk, t: (dk,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d),
+                               lambda b, dk, t: (b, t, dk)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, Sp, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, B, C, A, D)
+    return y[:, :S]

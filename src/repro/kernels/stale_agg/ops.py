@@ -1,0 +1,36 @@
+"""Jit'd pytree wrapper for the fused stale aggregation kernel."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batched_dot.ops import _interpret_default, flatten_cohort
+from repro.kernels.stale_agg.stale_agg import stale_agg
+
+
+def unflatten_like(flat: jnp.ndarray, template: Any) -> Any:
+    """[P] -> pytree shaped like ``template`` (inverse of leaf concat)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        n = l.size
+        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stale_delta_pallas(coeff: jnp.ndarray, G: Any, h: Any, beta: jnp.ndarray,
+                       stale_sum: Any, interpret: bool | None = None) -> Any:
+    """Fused Eq.18 delta over parameter pytrees (kernel path).
+
+    Equivalent to ``core.aggregation.stale_delta`` (the oracle)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    Gf = flatten_cohort(G)
+    hf = flatten_cohort(h)
+    leaves = jax.tree.leaves(stale_sum)
+    sum_f = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+    delta = stale_agg(coeff, beta, Gf, hf, sum_f, interpret=interpret)
+    return unflatten_like(delta, stale_sum)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the stale_agg kernel (Eq. 18 correction stream)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stale_agg_ref(coeff: jnp.ndarray, beta: jnp.ndarray, G: jnp.ndarray,
+                  h: jnp.ndarray, stale_sum: jnp.ndarray) -> jnp.ndarray:
+    """coeff, beta: [C]; G, h: [C, P]; stale_sum: [P] -> delta [P]."""
+    G = G.astype(jnp.float32)
+    h = h.astype(jnp.float32)
+    corr = G - beta.astype(jnp.float32)[:, None] * h
+    return stale_sum.astype(jnp.float32) + jnp.einsum(
+        "c,cp->p", coeff.astype(jnp.float32), corr)

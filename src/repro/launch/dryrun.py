@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) pair, lower + compile the matching
+step (train / prefill / serve) on the single-pod 16x16 mesh AND the
+multi-pod 2x16x16 mesh, record ``memory_analysis()`` (fits-per-device),
+``cost_analysis()`` (FLOPs/bytes for the roofline), and the collective
+bytes parsed from the compiled HLO.
+
+Results are cached incrementally to ``results/dryrun/<arch>__<shape>__<mesh>.json``
+so the full 80-combination sweep is resumable.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import DEFAULT_ROUND, INPUT_SHAPES, FLRoundConfig
+from repro.configs.registry import ARCHS, get_config, get_shape
+from repro.launch import mesh as mesh_mod
+from repro.launch import specs as specs_mod
+from repro.roofline import analysis as roofline
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def result_path(arch: str, shape: str, mesh_name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, rcfg: FLRoundConfig,
+            force: bool = False, stale: bool = False,
+            tag: str = "") -> dict:
+    mesh_name = ("2x16x16" if multi_pod else "16x16") + (f"__{tag}" if tag else "")
+    path = result_path(arch, shape_name, mesh_name)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "ok": False, "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()}
+    t0 = time.time()
+    try:
+        step, mode = specs_mod.build_step(cfg, mesh, shape, rcfg, stale=stale)
+        args = specs_mod.input_specs(cfg, mesh, shape, rcfg, mode=mode,
+                                     stale=stale)
+        record["mode"] = mode
+        with mesh:
+            lowered = jax.jit(step).lower(**args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        coll = roofline.collective_bytes(compiled.as_text())
+        record.update({
+            "ok": True,
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "memory": {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+            },
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "collectives": coll,
+        })
+    except Exception as e:  # record failures for triage, then re-raise in --one
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = round(time.time() - t0, 2)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = "OK" if record["ok"] else f"FAIL ({record.get('error', '?')[:120]})"
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: {status} "
+          f"({record['total_s']}s)", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--stale", action="store_true",
+                    help="use the StaleVR (Eq.18) train step")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for decode shapes")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "dots"])
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file (perf iterations)")
+    ap.add_argument("--local-steps", type=int, default=None)
+    args = ap.parse_args()
+
+    import dataclasses
+    rcfg = DEFAULT_ROUND
+    if args.local_steps is not None:
+        rcfg = dataclasses.replace(rcfg, local_steps=args.local_steps)
+    if args.kv_quant:
+        rcfg = dataclasses.replace(rcfg, kv_quant=True)
+    if args.remat_policy:
+        rcfg = dataclasses.replace(rcfg, remat_policy=args.remat_policy)
+
+    pairs = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    n_ok = 0
+    for a, s, mp in pairs:
+        rec = run_one(a, s, mp, rcfg, force=args.force, stale=args.stale,
+                      tag=args.tag)
+        n_ok += bool(rec.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(pairs)} combinations OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Abstract input/state specs for every (architecture x input-shape) pair.
+
+``input_specs`` returns ShapeDtypeStructs with NamedShardings attached —
+weak-type-correct, shardable, zero allocation — exactly what
+``jax.jit(step).lower(**specs)`` needs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, FLRoundConfig, InputShape
+from repro.fl import steps as fl_steps
+from repro.models import sharding as shd
+from repro.models import transformer
+
+
+def _dtype(rcfg: FLRoundConfig):
+    return jnp.dtype(rcfg.param_dtype)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _attach(mesh, tree_sds, tree_specs):
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_sds, tree_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_params(cfg: ArchConfig, mesh: Mesh, mode: str,
+                    rcfg: FLRoundConfig):
+    """Param ShapeDtypeStructs with the production shardings attached."""
+    dt = _dtype(rcfg)
+    shapes = jax.eval_shape(
+        functools.partial(transformer.init, cfg=cfg, dtype=dt),
+        jax.random.PRNGKey(0))
+    specs = fl_steps.base_param_specs(cfg, mesh, mode)
+    specs = shd.sanitize_specs(shapes, specs, mesh)   # divisibility net
+    return _attach(mesh, shapes, specs), specs
+
+
+def train_batch_specs(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                      rcfg: FLRoundConfig):
+    """Cohort batch: tokens [C, local_B, S(text)] (+ frontend for vlm)."""
+    C = shd.dp_size(mesh)
+    local_B = shape.global_batch // C
+    dp = shd.dp_axes(mesh)
+    s_text = shape.seq_len - cfg.n_frontend_tokens
+    batch = {"tokens": _sds((C, local_B, s_text), jnp.int32, mesh,
+                            P(dp, None, None))}
+    if cfg.n_frontend_tokens:
+        batch["frontend"] = _sds(
+            (C, local_B, cfg.n_frontend_tokens, cfg.frontend_dim),
+            _dtype(rcfg), mesh, P(dp, None, None, None))
+    return batch
+
+
+def scalar_cohort_specs(mesh: Mesh):
+    C = shd.dp_size(mesh)
+    return (_sds((C,), jnp.float32, mesh, P(None)),   # probs
+            _sds((C,), jnp.float32, mesh, P(None)))   # dweights
+
+
+def prefill_batch_specs(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                        rcfg: FLRoundConfig):
+    b_axis = shd.dp_axes(mesh) if shape.global_batch % shd.dp_size(mesh) == 0 \
+        else None
+    s_text = shape.seq_len - cfg.n_frontend_tokens
+    batch = {"tokens": _sds((shape.global_batch, s_text), jnp.int32, mesh,
+                            P(b_axis, None))}
+    if cfg.n_frontend_tokens:
+        batch["frontend"] = _sds(
+            (shape.global_batch, cfg.n_frontend_tokens, cfg.frontend_dim),
+            _dtype(rcfg), mesh, P(b_axis, None, None))
+    return batch
+
+
+def decode_state_specs(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                       rcfg: FLRoundConfig):
+    """(caches, ids, position) abstract specs for serve_step.
+
+    long_500k uses the sub-quadratic variants: SSM state is O(1) natively;
+    attention archs get the sliding-window ring cache (DESIGN.md §4)."""
+    dt = _dtype(rcfg)
+    B = shape.global_batch
+    window = cfg.sliding_window if shape.name == "long_500k" else 0
+    cache_shapes = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, B, shape.seq_len, dt,
+                                        window=window,
+                                        kv_quant=rcfg.kv_quant))
+    specs = shd.cache_specs(cfg, mesh, B, kv_quant=rcfg.kv_quant)
+    specs = shd.sanitize_specs(cache_shapes, specs, mesh)
+    caches = _attach(mesh, cache_shapes, specs)
+    b_axis = shd.dp_axes(mesh) if B % shd.dp_size(mesh) == 0 else None
+    ids = _sds((B,), jnp.int32, mesh, P(b_axis))
+    position = _sds((), jnp.int32, mesh, P())
+    return caches, ids, position, specs
+
+
+def stale_state_specs(cfg: ArchConfig, mesh: Mesh, mode: str,
+                      rcfg: FLRoundConfig):
+    """(h_cohort [C, params...], stale_sum [params...]) abstract specs."""
+    params_sds, specs = abstract_params(cfg, mesh, mode, rcfg)
+    C = shd.dp_size(mesh)
+    sdt = jnp.dtype(rcfg.stale_dtype)
+    h_specs = shd.with_client_axis(mesh, specs)
+    h = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            (C,) + s.shape, sdt,
+            sharding=NamedSharding(mesh, sp)),
+        params_sds, h_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    sum_specs = specs
+    stale_sum = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, sdt, sharding=NamedSharding(mesh, sp)),
+        params_sds, sum_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return h, stale_sum
+
+
+def input_specs(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                rcfg: FLRoundConfig, mode: Optional[str] = None,
+                stale: bool = False) -> Dict[str, Any]:
+    """All abstract args for the step matching ``shape.kind``."""
+    mode = mode or fl_steps.pick_mode(cfg, mesh)
+    params, _ = abstract_params(cfg, mesh, mode, rcfg)
+    if shape.kind == "train":
+        batch = train_batch_specs(cfg, mesh, shape, rcfg)
+        probs, dweights = scalar_cohort_specs(mesh)
+        args = {"params": params, "batch": batch, "probs": probs,
+                "dweights": dweights}
+        if stale:
+            h, stale_sum = stale_state_specs(cfg, mesh, mode, rcfg)
+            args.update({"h": h, "stale_sum": stale_sum})
+        return args
+    if shape.kind == "prefill":
+        return {"params": params,
+                "batch": prefill_batch_specs(cfg, mesh, shape, rcfg)}
+    # decode
+    caches, ids, position, _ = decode_state_specs(cfg, mesh, shape, rcfg)
+    return {"params": params, "caches": caches, "ids": ids,
+            "position": position}
+
+
+def build_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+               rcfg: FLRoundConfig, mode: Optional[str] = None,
+               stale: bool = False):
+    mode = mode or fl_steps.pick_mode(cfg, mesh)
+    if shape.kind == "train":
+        return fl_steps.build_train_step(cfg, mesh, shape, rcfg, mode=mode,
+                                         stale=stale), mode
+    if shape.kind == "prefill":
+        return fl_steps.build_prefill_step(cfg, mesh, shape), mode
+    return fl_steps.build_serve_step(cfg, mesh, shape), mode

@@ -1,0 +1,188 @@
+"""Grouped-query attention: chunked-causal training path + cached decode path.
+
+The training/prefill path scans over query chunks so peak memory is
+O(S * chunk) instead of O(S^2) — required for the 32k-prefill dry-run shapes.
+The decode path consumes a KV cache (full ring for decode_32k, sliding-window
+ring buffer for long_500k on pure-attention archs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, dh, Hq, Hk = cfg.d_model, cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(k1, d, Hq * dh, dtype, bias=cfg.qkv_bias),
+        "wk": layers.dense_init(k2, d, Hk * dh, dtype, bias=cfg.qkv_bias),
+        "wv": layers.dense_init(k3, d, Hk * dh, dtype, bias=cfg.qkv_bias),
+        "wo": layers.dense_init(k4, Hq * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(dh, dtype)
+        p["k_norm"] = layers.rmsnorm_init(dh, dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, x, positions):
+    """x [B,S,d] -> q [B,S,Hq,dh], k/v [B,S,Hk,dh] (roped, normed)."""
+    B, S, _ = x.shape
+    dh, Hq, Hk = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    q = layers.dense(p["wq"], x).reshape(B, S, Hq, dh)
+    k = layers.dense(p["wk"], x).reshape(B, S, Hk, dh)
+    v = layers.dense(p["wv"], x).reshape(B, S, Hk, dh)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    B, S, Hk, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hk, n_rep, dh)).reshape(
+        B, S, Hk * n_rep, dh)
+
+
+# ---------------------------------------------------------------------------
+# training / prefill: chunked causal attention
+# ---------------------------------------------------------------------------
+
+
+def _chunk_attend(q_chunk, k, v, q_start, chunk_positions, kv_positions,
+                  window: int):
+    """q_chunk [B,Cq,H,dh] vs full k/v [B,S,H,dh] with causal (+window) mask."""
+    scale = 1.0 / math.sqrt(q_chunk.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q_chunk, k).astype(jnp.float32) * scale
+    mask = kv_positions[None, :] <= chunk_positions[:, None]          # causal
+    if window > 0:
+        mask &= kv_positions[None, :] > chunk_positions[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention(p, cfg: ArchConfig, x: jnp.ndarray,
+              positions: Optional[jnp.ndarray] = None,
+              q_chunk: int = 1024) -> jnp.ndarray:
+    """Causal (optionally sliding-window) self-attention, [B,S,d] -> [B,S,d]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+
+    while S % q_chunk:
+        q_chunk -= 1
+    if S <= q_chunk:
+        out = _chunk_attend(q, k, v, 0, positions, positions, cfg.train_window)
+    else:
+        n_chunks = S // q_chunk
+        qc = q.reshape(B, n_chunks, q_chunk, cfg.n_heads, cfg.dh)
+        pc = positions.reshape(n_chunks, q_chunk)
+
+        def body(carry, inp):
+            q_i, pos_i = inp
+            o = _chunk_attend(q_i, k, v, 0, pos_i, positions, cfg.train_window)
+            return carry, o
+
+        _, out = jax.lax.scan(body, None, (qc.swapaxes(0, 1), pc))
+        out = out.swapaxes(0, 1).reshape(B, S, cfg.n_heads, cfg.dh)
+    return layers.dense(p["wo"], out.reshape(B, S, cfg.n_heads * cfg.dh))
+
+
+# ---------------------------------------------------------------------------
+# decode: single-token step against a (ring-buffer) KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype,
+                  quant: bool = False):
+    """Per-layer cache entry [B, W, Hk, dh] for k and v.
+
+    ``quant=True``: int8 storage + per-(pos, head) f16 scales — halves the
+    decode memory-roofline term (EXPERIMENTS.md §Perf-3)."""
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.dh)
+    if quant:
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float16),
+                "v_scale": jnp.zeros(sshape, jnp.float16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize(x: jnp.ndarray):
+    """[..., dh] -> (int8 values, f16 scales over the last dim)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def decode_attention(p, cfg: ArchConfig, x: jnp.ndarray, cache: dict,
+                     position: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """One-token attention.  x [B,1,d]; cache k/v [B,W,Hk,dh];
+    position scalar int32 (tokens generated so far).  Ring-buffer indexing
+    makes the same code serve full-cache decode (W == seq_len) and
+    sliding-window decode (W == cfg.sliding_window)."""
+    B = x.shape[0]
+    W = cache["k"].shape[1]
+    quant = "k_scale" in cache
+    q, k_new, v_new = _project_qkv(p, cfg, x, position[None])
+    slot = jnp.mod(position, W)
+    if quant:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, slot, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, slot, 0)),
+        }
+        k = _dequantize(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v = _dequantize(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        new_cache = {"k": k, "v": v}
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kf = _repeat_kv(k, n_rep)
+    vf = _repeat_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(cfg.dh)
+    # q [B,1,Hq,dh] x k [B,W,Hq,dh] -> [B,Hq,W]
+    scores = jnp.einsum("bqhd,bkhd->bhk", q, kf).astype(jnp.float32) * scale
+    # valid = slots already written: ring position semantics
+    slot_ids = jnp.arange(W)
+    written = jnp.where(position >= W, W, position + 1)
+    valid = slot_ids < written
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vf).reshape(B, 1, cfg.n_heads * cfg.dh)
+    return layers.dense(p["wo"], out), new_cache

@@ -1,0 +1,122 @@
+"""Core functional layers (pure JAX, no flax).
+
+Convention: every module is a pair of functions
+``init_<mod>(key, cfg, ...) -> params`` (nested dict of jnp arrays) and
+``<mod>(params, x, ...) -> y``.  Parameter partitioning lives in
+``models.sharding`` which mirrors the dict structure with PartitionSpecs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _uniform(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, bias: bool = False):
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": _uniform(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(dh: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, dh]; positions: [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                      # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    angles = angles[..., None, :]                              # [..., S, 1, dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype)["w"],
+        "w_up": dense_init(k2, d, f, dtype)["w"],
+        "w_down": dense_init(k3, f, d, dtype)["w"],
+    }
+
+
+def mlp(p, x):
+    g = jax.nn.silu(x @ p["w_gate"])
+    u = x @ p["w_up"]
+    return (g * u) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"w": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, ids):
+    return jnp.take(p["w"], ids, axis=0)
+
+
+def unembed(p, x):
+    """x: [..., d] -> logits [..., V] (used for tied or untied heads)."""
+    return x @ p["w"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy.  logits [..., V] fp-any, labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,150 @@
+"""Mamba-1 selective state-space block (falcon-mamba-7b style) in pure JAX.
+
+Training/prefill uses an associative scan over the sequence (TPU-friendly —
+log-depth, elementwise over channels, shardable on ``model`` via d_inner).
+Decode carries (conv_state, ssm_state) and is O(1) per token, which is what
+makes the SSM archs native runners of the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, di, N, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    keys = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "in_proj": layers._uniform(keys[0], (d, 2 * di), scale, dtype),
+        "conv_w": layers._uniform(keys[1], (k, di), 1.0 / math.sqrt(k), dtype),
+        "x_proj": layers._uniform(keys[2], (di, r + 2 * N), 1.0 / math.sqrt(di), dtype),
+        "dt_proj": layers._uniform(keys[3], (r, di), 1.0 / math.sqrt(r), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(keys[4], (di,), jnp.float32,
+                                        1e-3, 1e-1), 1e-4, None))).astype(dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": layers._uniform(keys[5], (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+    return p
+
+
+SSM_CHUNK = 16  # sequence chunk for the blocked selective scan
+
+
+def _ssm_scan(u, dt, A, B, C, D):
+    """Selective scan.  u,dt: [B,S,di]; A: [di,N]; B,C: [B,S,N]; D: [di].
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * u_t ;  y_t = <C_t, h_t> + D*u_t
+
+    The per-token hidden state is di*N floats, so materializing it for the
+    whole sequence is infeasible at production shapes.  We scan over sequence
+    chunks (carry: h [B,di,N]) and run a log-depth associative scan *within*
+    each chunk, rematerializing the chunk in the backward pass.
+    """
+    Bsz, S, di = u.shape
+    N = A.shape[-1]
+    Sc = SSM_CHUNK
+    while S % Sc:
+        Sc -= 1
+    n_chunks = S // Sc
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    @jax.checkpoint
+    def chunk_body(h_in, inp):
+        u_c, dt_c, B_c, C_c = inp                          # [B,Sc,...]
+        dA = jnp.exp(dt_c[..., None] * A)                  # [B,Sc,di,N]
+        dBu = (dt_c * u_c)[..., None] * B_c[:, :, None, :]
+        A_cum, B_cum = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+        h = A_cum * h_in[:, None] + B_cum                  # [B,Sc,di,N]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h, C_c)
+        return h[:, -1], y_c
+
+    def to_chunks(x):
+        return x.reshape(Bsz, n_chunks, Sc, *x.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((Bsz, di, N), u.dtype)
+    h_last, ys = jax.lax.scan(chunk_body, h0,
+                              (to_chunks(u), to_chunks(dt), to_chunks(B), to_chunks(C)))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, di)
+    return y + D * u, h_last
+
+
+def mamba(p, cfg: ArchConfig, x: jnp.ndarray, return_cache: bool = False):
+    """Full-sequence mamba block.  x [B,S,d] -> [B,S,d] (+ decode cache)."""
+    Bsz, S, d = x.shape
+    di, N, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    xz = x @ p["in_proj"]                                   # [B,S,2di]
+    u, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv over S
+    u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    u_conv = sum(u_pad[:, i:i + S] * p["conv_w"][i] for i in range(k))
+    u_conv = jax.nn.silu(u_conv)
+    proj = u_conv @ p["x_proj"]                             # [B,S,r+2N]
+    dt_in, Bmat, Cmat = jnp.split(proj, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # [di,N]
+    y, h_last = _ssm_scan(u_conv.astype(jnp.float32), dt.astype(jnp.float32), A,
+                          Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                          p["D"].astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_cache:
+        cache = {"conv": u[:, S - (k - 1):, :], "ssm": h_last}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    di, N, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, k - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, N), jnp.float32),
+    }
+
+
+def decode_mamba(p, cfg: ArchConfig, x: jnp.ndarray, cache: dict
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """One-token mamba step.  x [B,1,d] -> ([B,1,d], new cache)."""
+    Bsz = x.shape[0]
+    di, N, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    xz = x[:, 0] @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                        # [B,di]
+    conv_buf = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # [B,k,di]
+    u_conv = jnp.einsum("bkd,kd->bd", conv_buf, p["conv_w"])
+    u_conv = jax.nn.silu(u_conv)
+    proj = u_conv @ p["x_proj"]
+    dt_in, Bmat, Cmat = jnp.split(proj, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # [B,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)     # [B,di,N]
+    dBu = (dt * u_conv).astype(jnp.float32)[..., None] * Bmat.astype(jnp.float32)[:, None, :]
+    h = cache["ssm"] * dA + dBu                             # [B,di,N]
+    y = jnp.einsum("bdn,bn->bd", h, Cmat.astype(jnp.float32))
+    y = (y + p["D"].astype(jnp.float32) * u_conv.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": conv_buf[:, 1:], "ssm": h}

@@ -1,0 +1,77 @@
+"""Mixture-of-Experts feed-forward (GShard-style top-1 dispatch with capacity).
+
+Experts are sharded over the ``model`` mesh axis; token groups over ``data``.
+Tokens are split into groups of ``group_size`` and dispatched within each
+group via one-hot einsums — the dispatch/combine contractions lower to
+all-to-all-style collectives under GSPMD while keeping the dispatch mask
+O(group_size * E * C) per group instead of O(T * E * C) globally.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+# Tokens per dispatch group.  Per-group capacity = group * factor / E.
+MOE_GROUP_SIZE = 4096
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / (d ** 0.5)
+    return {
+        "router": layers._uniform(k1, (d, E), scale, dtype),
+        "w_gate": layers._uniform(k2, (E, d, f), scale, dtype),
+        "w_up": layers._uniform(k3, (E, d, f), scale, dtype),
+        "w_down": layers._uniform(k4, (E, f, d), scale * (d / f) ** 0.5, dtype),
+    }
+
+
+def _group_size(T: int) -> int:
+    g = min(MOE_GROUP_SIZE, T)
+    while T % g:
+        g -= 1
+    return g
+
+
+def moe(p, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-1 MoE.  x [B,S,d] -> (y [B,S,d], aux load-balance loss scalar)."""
+    B, S, d = x.shape
+    E = cfg.n_experts
+    T = B * S
+    Tg = _group_size(T)
+    G = T // Tg
+    xt = x.reshape(G, Tg, d)
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    expert = jnp.argmax(probs, axis=-1)                    # [G,Tg]
+    gate = jnp.max(probs, axis=-1)                         # [G,Tg]
+
+    # --- load-balance auxiliary loss (GShard eq. 4) --------------------
+    me = jnp.mean(probs, axis=(0, 1))                      # [E]
+    ce = jnp.mean(jax.nn.one_hot(expert, E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # --- capacity-bounded dispatch (per group) --------------------------
+    C = max(int(Tg * cfg.capacity_factor / E), 1)
+    onehot_e = jax.nn.one_hot(expert, E, dtype=jnp.int32)  # [G,Tg,E]
+    pos_in_expert = jnp.cumsum(onehot_e, axis=1) * onehot_e - 1
+    pos = jnp.max(pos_in_expert, axis=-1)                  # [G,Tg]
+    keep = pos < C
+    gate = gate * keep.astype(jnp.float32)
+
+    slot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=xt.dtype)[..., :C]
+    disp = jax.nn.one_hot(expert, E, dtype=xt.dtype)[..., None] * slot[..., None, :]
+    # disp: [G,Tg,E,C] one-hot dispatch mask
+    expert_in = jnp.einsum("gtd,gtec->gecd", xt, disp)     # [G,E,C,d]
+    g_act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"]))
+    u_act = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", g_act * u_act, p["w_down"])
+    combine = disp * gate.astype(xt.dtype)[..., None, None]  # [G,Tg,E,C]
+    yt = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+    return yt.reshape(B, S, d), aux

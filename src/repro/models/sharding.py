@@ -1,0 +1,222 @@
+"""PartitionSpec trees mirroring the parameter / cache / batch pytrees.
+
+Megatron-style tensor parallelism on the ``model`` axis:
+  * embedding sharded on vocab, lm_head on vocab (output dim)
+  * attention: fused head*dh projection dim sharded (uneven head counts are
+    padded by GSPMD — verified to lower)
+  * MLP: d_ff sharded on up/gate output, d_ff contraction on down
+  * MoE: expert dim sharded (expert parallelism)
+  * Mamba: d_inner sharded everywhere (the scan is elementwise over channels)
+
+Data parallelism (= the FL client axis) uses ``dp_axes(mesh)`` which folds the
+``pod`` axis in for multi-pod meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def dp_axes(mesh: Mesh):
+    """Composite data-parallel axes: ("pod","data") on multi-pod meshes."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+def dp_size(mesh: Mesh) -> int:
+    size = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        size *= mesh.shape["pod"]
+    return size
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ArchConfig, ax2=None) -> Dict[str, Any]:
+    wq: Dict[str, Any] = {"w": P(None, ax2, "model")}
+    wk: Dict[str, Any] = {"w": P(None, ax2, "model")}
+    wv: Dict[str, Any] = {"w": P(None, ax2, "model")}
+    if cfg.qkv_bias:
+        wq["b"] = P(None, "model")
+        wk["b"] = P(None, "model")
+        wv["b"] = P(None, "model")
+    s = {
+        "wq": wq, "wk": wk, "wv": wv,
+        "wo": {"w": P(None, "model", ax2)},
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = {"scale": P(None, None)}
+        s["k_norm"] = {"scale": P(None, None)}
+    return s
+
+
+def _mamba_specs(cfg: ArchConfig, ax2=None) -> Dict[str, Any]:
+    return {
+        "in_proj": P(None, ax2, "model"),
+        "conv_w": P(None, None, "model"),
+        "x_proj": P(None, "model", None),
+        "dt_proj": P(None, None, "model"),
+        "dt_bias": P(None, "model"),
+        "A_log": P(None, "model", None),
+        "D": P(None, "model"),
+        "out_proj": P(None, "model", ax2),
+    }
+
+
+def _block_specs(cfg: ArchConfig, ax2=None) -> Dict[str, Any]:
+    """Within-layer specs.  ``ax2`` (e.g. "data") adds a second sharded dim
+    per weight — 2D tensor sharding for the 100B+ archs, which keeps the
+    lax.scan layer stack UNSHARDED on its leading dim (a dp-sharded scan
+    input forces a full-stack all-gather; see EXPERIMENTS.md §Perf-1)."""
+    if cfg.family == "ssm":
+        return {"norm": {"scale": P(None, None)},
+                "mamba": _mamba_specs(cfg, ax2)}
+    s: Dict[str, Any] = {
+        "ln1": {"scale": P(None, None)},
+        "ln2": {"scale": P(None, None)},
+        "attn": _attn_specs(cfg, ax2),
+    }
+    if cfg.family == "hybrid":
+        s["mamba"] = _mamba_specs(cfg, ax2)
+        s["fnorm_a"] = {"scale": P(None, None)}
+        s["fnorm_m"] = {"scale": P(None, None)}
+    if cfg.family == "moe":
+        # experts over ax2 (expert parallelism across the data axis for the
+        # 2D layout), d_ff over model
+        e_ax = ax2
+        s["moe"] = {
+            "router": P(None, ax2, "model"),
+            "w_gate": P(None, e_ax, None, "model") if ax2 else
+                      P(None, "model", None, None),
+            "w_up": P(None, e_ax, None, "model") if ax2 else
+                    P(None, "model", None, None),
+            "w_down": P(None, e_ax, "model", None) if ax2 else
+                      P(None, "model", None, None),
+        }
+    else:
+        s["mlp"] = {
+            "w_gate": P(None, ax2, "model"),
+            "w_up": P(None, ax2, "model"),
+            "w_down": P(None, "model", ax2),
+        }
+    return s
+
+
+def param_specs(cfg: ArchConfig, ax2=None) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": {"w": P("model", ax2)},
+        "blocks": _block_specs(cfg, ax2),
+        "final_norm": {"scale": P(None)},
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"w": P(ax2, "model")}
+    if cfg.n_frontend_tokens:
+        specs["frontend_proj"] = {"w": P(None, "model")}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# cache / batch specs
+# ---------------------------------------------------------------------------
+
+
+def _axes_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def best_axis(size: int, mesh: Mesh, candidates) -> Optional[Any]:
+    """First candidate axis (or axis tuple) that divides ``size`` evenly.
+    jit input shardings must divide exactly (GSPMD pads only intermediates)."""
+    for c in candidates:
+        if c is None:
+            return None
+        if size % _axes_size(mesh, c) == 0:
+            return c
+    return None
+
+
+def sanitize_specs(shapes_tree, specs_tree, mesh: Mesh):
+    """Drop any spec axis that does not divide its dim (input-sharding rule)."""
+    def fix(sds, spec):
+        dims = list(spec) + [None] * (len(sds.shape) - len(spec))
+        new = [ax if (ax is None or size % _axes_size(mesh, ax) == 0) else None
+               for size, ax in zip(sds.shape, dims)]
+        return P(*new)
+
+    return jax.tree.map(fix, shapes_tree, specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_axis(mesh: Mesh, batch: int):
+    """Shard batch over dp only when it divides evenly (long_500k has B=1)."""
+    return dp_axes(mesh) if batch % dp_size(mesh) == 0 else None
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, batch: int,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    b = _batch_axis(mesh, batch)
+    c: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        # shard KV heads over "model" when divisible, else head_dim (always a
+        # multiple of 16 for the assigned archs), else replicate
+        ms = mesh.shape["model"]
+        if cfg.n_kv_heads % ms == 0:
+            kv = P(None, b, None, "model", None)
+            sc = P(None, b, None, "model")
+        elif cfg.dh % ms == 0:
+            kv = P(None, b, None, None, "model")
+            sc = P(None, b, None, None)
+        else:
+            kv = P(None, b, None, None, None)
+            sc = P(None, b, None, None)
+        c["attn"] = {"k": kv, "v": kv}
+        if kv_quant:
+            c["attn"]["k_scale"] = sc
+            c["attn"]["v_scale"] = sc
+    if cfg.family in ("ssm", "hybrid"):
+        c["mamba"] = {"conv": P(None, b, None, "model"),
+                      "ssm": P(None, b, "model", None)}
+    return c
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch: int,
+                client_axis: bool = False) -> Dict[str, Any]:
+    """Specs for a training/prefill batch dict.
+
+    ``client_axis=True``: leading dim is the FL client/cohort axis (sharded
+    over dp); otherwise the leading dim is the plain batch axis.
+    """
+    lead = dp_axes(mesh) if client_axis else _batch_axis(mesh, batch)
+    s: Dict[str, Any] = {"tokens": P(lead, *([None] * (2 if client_axis else 1)))}
+    if cfg.n_frontend_tokens:
+        s["frontend"] = P(lead, *([None] * (3 if client_axis else 2)))
+    return s
+
+
+def with_client_axis(mesh: Mesh, spec_tree):
+    """Prefix every PartitionSpec in a tree with the FL client axis (dp)."""
+    dp = dp_axes(mesh)
+
+    def f(spec: P) -> P:
+        return P(dp, *spec)
+
+    return jax.tree.map(f, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

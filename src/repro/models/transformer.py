@@ -1,0 +1,293 @@
+"""Model assembly for all assigned architecture families.
+
+One uniform stacked-block representation per architecture so the layer loop
+is a single ``lax.scan`` (small HLO, fast GSPMD partitioning for the 512-chip
+dry-runs).  Three entry points:
+
+- ``forward(params, cfg, batch)``                — training loss path
+- ``prefill(params, cfg, batch)``                — forward + decode caches
+- ``decode_step(params, cfg, ids, caches, pos)`` — one-token serve step
+
+Families: dense (starcoder2/internlm2/qwen3/qwen1.5), moe (llama4 x2),
+ssm (falcon-mamba), hybrid (hymba), vlm (phi-3-vision), audio (musicgen).
+VLM/audio modality frontends are stubs per the task spec: ``batch`` carries
+precomputed patch/frame embeddings, and only the projector is learned here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, layers, mamba as mamba_mod
+from repro.models.moe import moe, moe_init
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        p["norm"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        p["mamba"] = mamba_mod.mamba_init(ks[0], cfg, dtype)
+        return p
+    p["ln1"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    p["attn"] = attention.attn_init(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = mamba_mod.mamba_init(ks[1], cfg, dtype)
+        p["fnorm_a"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        p["fnorm_m"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    p["ln2"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32):
+    """Initialize full model parameters; blocks stacked on a leading L axis."""
+    k_embed, k_blocks, k_head, k_front = jax.random.split(key, 4)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg, dtype))(block_keys)
+    params = {
+        "embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": layers._uniform(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5, dtype)}
+    if cfg.n_frontend_tokens:
+        params["frontend_proj"] = layers.dense_init(
+            k_front, cfg.frontend_dim, cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (single layer, used under scan)
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(p, cfg: ArchConfig, x, positions, q_chunk: int):
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        return x + mamba_mod.mamba(p["mamba"], cfg,
+                                   layers.rmsnorm(p["norm"], x, cfg.norm_eps)), aux
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a = attention.attention(p["attn"], cfg, h, positions, q_chunk=q_chunk)
+    if cfg.family == "hybrid":
+        m = mamba_mod.mamba(p["mamba"], cfg, h)
+        a = 0.5 * (layers.rmsnorm(p["fnorm_a"], a, cfg.norm_eps)
+                   + layers.rmsnorm(p["fnorm_m"], m, cfg.norm_eps))
+    x = x + a
+    h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe(p["moe"], cfg, h2)
+    else:
+        y = layers.mlp(p["mlp"], h2)
+    return x + y, aux
+
+
+def _block_prefill(p, cfg: ArchConfig, x, positions, q_chunk: int,
+                   cache_len: int = 0):
+    """Like _block_fwd but also returns this layer's decode cache."""
+    cache: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        y, mc = mamba_mod.mamba(p["mamba"], cfg,
+                                layers.rmsnorm(p["norm"], x, cfg.norm_eps),
+                                return_cache=True)
+        return x + y, {"mamba": mc}
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kv = _attn_prefill(p["attn"], cfg, h, positions, q_chunk, cache_len)
+    cache["attn"] = kv
+    if cfg.family == "hybrid":
+        m, mc = mamba_mod.mamba(p["mamba"], cfg, h, return_cache=True)
+        cache["mamba"] = mc
+        a = 0.5 * (layers.rmsnorm(p["fnorm_a"], a, cfg.norm_eps)
+                   + layers.rmsnorm(p["fnorm_m"], m, cfg.norm_eps))
+    x = x + a
+    h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    y = moe(p["moe"], cfg, h2)[0] if cfg.family == "moe" else layers.mlp(p["mlp"], h2)
+    return x + y, cache
+
+
+def _attn_prefill(p, cfg: ArchConfig, h, positions, q_chunk, cache_len=0):
+    """Attention forward that also materializes the (windowed) KV cache.
+
+    ``cache_len > S`` pads the cache with decode headroom (slots beyond the
+    prompt); a train_window caps it to a ring buffer instead."""
+    out = attention.attention(p, cfg, h, positions, q_chunk=q_chunk)
+    B, S, _ = h.shape
+    q, k, v = attention._project_qkv(p, cfg, h, positions)
+    del q
+    if cfg.train_window and cfg.train_window < S:
+        # ring-buffer layout: slot = position mod W; for a contiguous prefill
+        # the last W positions land at slots (S-W..S-1) mod W == rolled order.
+        W = cfg.train_window
+        kw, vw = k[:, S - W:], v[:, S - W:]
+        shift = (S - W) % W
+        kw = jnp.roll(kw, shift, axis=1)
+        vw = jnp.roll(vw, shift, axis=1)
+    else:
+        W = max(cache_len, S)
+        pad = ((0, 0), (0, W - S), (0, 0), (0, 0))
+        kw, vw = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, {"k": kw, "v": vw}
+
+
+def _block_decode(p, cfg: ArchConfig, x, cache, position):
+    new_cache: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        y, mc = mamba_mod.decode_mamba(
+            p["mamba"], cfg, layers.rmsnorm(p["norm"], x, cfg.norm_eps),
+            cache["mamba"])
+        return x + y, {"mamba": mc}
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kv = attention.decode_attention(p["attn"], cfg, h, cache["attn"], position)
+    new_cache["attn"] = kv
+    if cfg.family == "hybrid":
+        m, mc = mamba_mod.decode_mamba(p["mamba"], cfg, h, cache["mamba"])
+        new_cache["mamba"] = mc
+        a = 0.5 * (layers.rmsnorm(p["fnorm_a"], a, cfg.norm_eps)
+                   + layers.rmsnorm(p["fnorm_m"], m, cfg.norm_eps))
+    x = x + a
+    h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    y = moe(p["moe"], cfg, h2)[0] if cfg.family == "moe" else layers.mlp(p["mlp"], h2)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding paths (stub frontends for vlm/audio)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    """Returns (x [B,S,d], loss_mask [B,S] or None).
+
+    vlm: prepends projected patch embeddings (stub ViT output), masks their
+    positions out of the loss.  audio: tokens are EnCodec codes (the codec is
+    the stub frontend).  others: plain token embedding.
+    """
+    x = layers.embed(params["embed"], batch["tokens"])
+    mask = None
+    if cfg.n_frontend_tokens:
+        front = layers.dense(params["frontend_proj"], batch["frontend"])
+        x = jnp.concatenate([front.astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        mask = (jnp.arange(S) >= cfg.n_frontend_tokens).astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, (B, S))
+    return x, mask
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            q_chunk: int = 1024, remat: bool = False, unroll: int = 1,
+            remat_policy: str = "full") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: returns (mean next-token CE loss, aux metrics).
+
+    ``remat=True`` rematerializes each block in the backward pass (scan over
+    layers stores only the per-layer carry).  ``remat_policy="dots"`` keeps
+    matmul outputs (no recompute forward: 8ND -> 6ND compute at higher
+    activation memory — EXPERIMENTS.md §Perf-5).  ``unroll`` unrolls the
+    layer scan (used by the roofline validation: XLA cost_analysis counts
+    scan bodies once, so the validation lowers an unrolled variant)."""
+    x, mask = embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(carry, block_p):
+        h, aux = carry
+        h, a = _block_fwd(block_p, cfg, h, positions, q_chunk)
+        return (h, aux + a), None
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=unroll)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = x @ (head["w"] if not cfg.tie_embeddings else head["w"].T)
+    # next-token prediction on the token region
+    tgt = batch["tokens"]
+    n_front = cfg.n_frontend_tokens
+    logits_t = logits[:, n_front:, :]
+    loss_mask = None if mask is None else mask[:, n_front:]
+    loss = layers.cross_entropy(logits_t[:, :-1], tgt[:, 1:],
+                                None if loss_mask is None else loss_mask[:, 1:])
+    if cfg.family == "moe":
+        loss = loss + MOE_AUX_WEIGHT * aux / cfg.n_layers
+    return loss, aux
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            q_chunk: int = 1024, cache_len: int = 0):
+    """Serving prefill: returns (last-token logits [B,V], stacked caches).
+    ``cache_len`` adds decode headroom beyond the prompt length."""
+    x, _ = embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(h, block_p):
+        h, cache = _block_prefill(block_p, cfg, h, positions, q_chunk,
+                                  cache_len)
+        return h, cache
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = x[:, -1] @ (head["w"] if not cfg.tie_embeddings else head["w"].T)
+    return logits, caches
+
+
+def init_caches(cfg: ArchConfig, batch: int, cache_len: int, dtype,
+                window: int = 0, kv_quant: bool = False):
+    """Zero decode caches, stacked over layers (matches lax.scan layout).
+
+    ``window > 0`` caps the KV ring buffer (the sub-quadratic serve variant
+    for long contexts); 0 keeps the full cache_len."""
+    def one_layer(_):
+        c: Dict[str, Any] = {}
+        if cfg.family != "ssm":
+            W = min(window, cache_len) if window else cache_len
+            c["attn"] = attention.init_kv_cache(cfg, batch, W, dtype,
+                                                quant=kv_quant)
+        if cfg.family in ("ssm", "hybrid"):
+            c["mamba"] = mamba_mod.init_mamba_cache(cfg, batch, dtype)
+        return c
+
+    return jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers),
+                        one_layer(None))
+
+
+def decode_step(params, cfg: ArchConfig, ids: jnp.ndarray, caches,
+                position: jnp.ndarray):
+    """One serving step: ids [B] int32, position scalar int32 (tokens so far).
+    Returns (logits [B,V], new caches)."""
+    x = layers.embed(params["embed"], ids)[:, None, :]      # [B,1,d]
+
+    def body(h, scanned):
+        block_p, cache = scanned
+        h, new_cache = _block_decode(block_p, cfg, h, cache, position)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = x[:, 0] @ (head["w"] if not cfg.tie_embeddings else head["w"].T)
+    return logits, new_caches

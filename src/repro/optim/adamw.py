@@ -1,0 +1,40 @@
+"""AdamW for the server-side / centralized training paths."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params: Any) -> AdamWState:
+    return AdamWState(
+        mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        nu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.01) -> Tuple[Any, AdamWState]:
+    count = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), AdamWState(mu, nu, count)

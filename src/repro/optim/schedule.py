@@ -1,0 +1,28 @@
+"""LR schedules; includes the paper's theoretical rate (Thm 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: lr
+
+
+def exponential(lr: float, decay: float):
+    return lambda step: lr * (decay ** step)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        return lr * warm * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def paper_rate(mu: float, K: int, gamma: float):
+    """eta_{tau} = (16/mu) / ((tau+1)K + gamma)   (Theorem 1)."""
+    def f(tau):
+        return (16.0 / mu) / ((tau + 1) * K + gamma)
+    return f

@@ -1,0 +1,31 @@
+"""Minimal functional optimizers (no optax dependency)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+
+
+def sgd_init(params: Any, momentum: float = 0.0) -> SGDState:
+    if momentum == 0.0:
+        return SGDState(momentum=None)
+    return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(params: Any, grads: Any, state: SGDState, lr: float,
+               momentum: float = 0.0, weight_decay: float = 0.0
+               ) -> Tuple[Any, SGDState]:
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum and state.momentum is not None:
+        new_m = jax.tree.map(lambda m, g: momentum * m + g,
+                             state.momentum, grads)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+        return params, SGDState(momentum=new_m)
+    params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return params, state

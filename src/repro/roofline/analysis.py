@@ -1,0 +1,88 @@
+"""Roofline model from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch, shape, mesh):
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * links * 50e9)
+
+``collective_bytes`` is parsed from the compiled HLO text: the summed operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (cost_analysis does not report them).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
+                               PEAK_FLOPS_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[4,128,512]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\]")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes per collective kind over the compiled HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m_op = None
+        for kind in _COLLECTIVES:
+            # match op invocation: `= <shape> all-gather(` or `all-gather-start(`
+            if re.search(rf"\)?\s{kind}(-start)?\(", stripped) or \
+               re.search(rf"=\s*\S+\s+{kind}(-start)?\(", stripped):
+                m_op = kind
+                break
+        if not m_op:
+            continue
+        # collect every shape on the lhs (handles tuple shapes)
+        lhs = stripped.split("=")[0] + "=" + stripped.split("=", 1)[1].split(m_op)[0]
+        total = 0
+        for dt, dims in _TUPLE_RE.findall(lhs):
+            if dt in _DTYPE_BYTES:
+                total += _shape_bytes(dt, dims)
+        out[m_op] += float(total)
+        out["count"] += 1
+    out["total"] = float(sum(out[k] for k in _COLLECTIVES))
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, chips: int) -> Dict[str, float]:
+    compute = flops / (chips * PEAK_FLOPS_BF16)
+    memory = bytes_accessed / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    return terms
+
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                train: bool, local_steps: int = 1) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference) with N = active
+    params (MoE) — per §Roofline spec, times K local steps for FL rounds."""
+    mult = 6.0 if train else 2.0
+    return mult * active_param_count * tokens * (local_steps if train else 1)

@@ -1,0 +1,187 @@
+"""Analytic roofline estimators per (arch x shape x mode).
+
+WHY ANALYTIC: XLA's ``cost_analysis()`` counts while-loop (lax.scan) bodies
+ONCE, not x trip-count (verified experimentally — see EXPERIMENTS.md
+§Methodology), and all our steps scan over layers/local-steps/microbatches.
+The dry-run's HLO numbers are therefore *per-iteration evidence*; the
+roofline terms below use standard MFU-style analytic accounting, validated
+against an unrolled lowering on a small config (tests/test_roofline.py).
+
+Terms are GLOBAL (whole-step) quantities; divide by chips for per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ArchConfig, FLRoundConfig, InputShape
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
+                               PEAK_FLOPS_BF16)
+
+BYTES = 2  # bf16
+
+
+def _microbatches(local_batch: int, seq: int, micro_tokens: int = 8192) -> int:
+    tokens = local_batch * seq
+    M = max(1, tokens // micro_tokens)
+    while local_batch % M:
+        M -= 1
+    return M
+
+
+def attention_flops_fwd(cfg: ArchConfig, batch: int, seq: int) -> float:
+    """QK^T + PV matmuls, causal (x1/2), sliding window capped."""
+    if cfg.attn_free:
+        return 0.0
+    kv_span = min(seq, cfg.train_window) if cfg.train_window else seq
+    causal_frac = 0.5 if kv_span == seq else 1.0
+    return 4.0 * batch * seq * kv_span * causal_frac * cfg.n_heads * cfg.dh
+
+
+def mamba_flops_fwd(cfg: ArchConfig, batch: int, seq: int) -> float:
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    # dA/dBu/scan-combine/readout ~ 10 ops per (token, channel, state)
+    return 10.0 * batch * seq * cfg.d_inner * cfg.ssm_state
+
+
+def matmul_params(cfg: ArchConfig) -> Dict[str, float]:
+    """Split active params into matmul-relevant groups.  The embedding is a
+    gather (no matmul FLOPs); the LM head is a matmul but lives OUTSIDE the
+    rematerialized layer scan (no recompute multiplier).  Calibrated against
+    an unrolled lowering (benchmarks/validate_analytic.py)."""
+    embed = cfg.vocab_size * cfg.d_model
+    head = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    blocks = cfg.active_param_count() - embed - head
+    return {"embed": embed, "head": head if head else embed, "blocks": blocks}
+
+
+def step_flops(cfg: ArchConfig, shape: InputShape, rcfg: FLRoundConfig,
+               mode: str) -> Dict[str, float]:
+    """Returns useful (MODEL_FLOPS = 6*N_matmul*D) and HLO-equivalent
+    (remat-adjusted) global FLOPs for the step.  N_matmul excludes the
+    embedding gather (standard MFU accounting)."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    mp = matmul_params(cfg)
+    K = rcfg.local_steps if (shape.kind == "train" and mode == "fedavg") else 1
+    if shape.kind == "train":
+        # blocks: fwd 2ND x (1 + 1 remat fwd) + bwd 4ND = 8ND per local step;
+        # head: outside the remat scan -> 6ND
+        linear = (8.0 * mp["blocks"] + 6.0 * mp["head"]) * tokens * K
+        attn = 4.0 * attention_flops_fwd(cfg, B, S) * cfg.n_layers * K
+        scan = 4.0 * mamba_flops_fwd(cfg, B, S) * cfg.n_layers * K
+        useful = 6.0 * (mp["blocks"] + mp["head"]) * tokens * K
+    elif shape.kind == "prefill":
+        linear = 2.0 * (mp["blocks"] + mp["head"]) * tokens
+        attn = attention_flops_fwd(cfg, B, S) * cfg.n_layers
+        scan = mamba_flops_fwd(cfg, B, S) * cfg.n_layers
+        useful = linear
+    else:  # decode: ONE token per sequence, attention over the cache
+        cache = min(S, cfg.sliding_window) if (
+            shape.name == "long_500k" and cfg.sliding_window) else S
+        if cfg.attn_free:
+            cache = 0
+        linear = 2.0 * (mp["blocks"] + mp["head"]) * B
+        attn = 4.0 * B * cache * cfg.n_heads * cfg.dh * cfg.n_layers
+        scan = 10.0 * B * cfg.d_inner * cfg.ssm_state * cfg.n_layers \
+            if cfg.family in ("ssm", "hybrid") else 0.0
+        useful = linear
+    total = linear + attn + scan
+    return {"useful": useful, "hlo_equiv": total,
+            "attn": attn, "scan": scan, "linear": linear}
+
+
+def step_bytes(cfg: ArchConfig, shape: InputShape, rcfg: FLRoundConfig,
+               mode: str, chips: int, model_shards: int = 16) -> float:
+    """Global HBM traffic estimate (bytes) for the step."""
+    B, S = shape.global_batch, shape.seq_len
+    P = cfg.param_count() * BYTES                  # global param bytes
+    d = cfg.d_model
+    if shape.kind == "train":
+        C = chips // model_shards                  # cohort size (dp groups)
+        K = rcfg.local_steps if mode == "fedavg" else 1
+        M = _microbatches(B // max(C, 1), S)
+        # weights re-read once per pass per model replica group (C groups);
+        # per-device traffic = P/model_shards, global = P * C per pass
+        passes = K * 3.0                           # fwd + remat-fwd + bwd
+        param_traffic = P * C * passes
+        act_traffic = 14.0 * B * S * d * BYTES * cfg.n_layers * K
+        agg_traffic = 3.0 * P * C                  # G read + delta rw
+        return param_traffic + act_traffic + agg_traffic
+    if shape.kind == "prefill":
+        act = 8.0 * B * S * d * BYTES * cfg.n_layers
+        return P + act
+    # decode: read all (active) params once + cache read/write
+    cache = min(S, cfg.sliding_window) if (
+        shape.name == "long_500k" and cfg.sliding_window) else S
+    kv_bytes = 1.0 + 2.0 / cfg.dh if rcfg.kv_quant else BYTES  # int8 + f16 scale
+    kv = (2.0 * B * cache * cfg.n_kv_heads * cfg.dh * kv_bytes * cfg.n_layers
+          if not cfg.attn_free else 0.0)
+    ssm = (B * cfg.d_inner * cfg.ssm_state * 4 * 2 * cfg.n_layers
+           if cfg.family in ("ssm", "hybrid") else 0.0)
+    return cfg.active_param_count() * BYTES + kv + ssm
+
+
+def step_collective_bytes(cfg: ArchConfig, shape: InputShape,
+                          rcfg: FLRoundConfig, mode: str, chips: int,
+                          model_shards: int = 16) -> Dict[str, float]:
+    """Analytic collective volume (bytes moved through ICI, global)."""
+    B, S = shape.global_batch, shape.seq_len
+    P = cfg.param_count() * BYTES
+    d = cfg.d_model
+    C = max(chips // model_shards, 1)
+    out: Dict[str, float] = {"tp_allreduce": 0.0, "fl_aggregation": 0.0,
+                             "moe_alltoall": 0.0, "fsdp_allgather": 0.0}
+    if shape.kind == "train":
+        K = rcfg.local_steps if mode == "fedavg" else 1
+        M = _microbatches(B // C, S)
+        # Megatron TP: 2 activation all-reduces fwd + 2 bwd per layer per
+        # microbatch (ring all-reduce moves 2x the payload)
+        payload = (B // C) * S * d * BYTES / max(M, 1)
+        out["tp_allreduce"] = (4 * 2.0 * payload * cfg.n_layers
+                               * K * M * C)
+        # FL aggregation: one P-weighted reduce over the dp axis per round
+        # (ring all-reduce of the model-sharded delta on each shard group)
+        out["fl_aggregation"] = 2.0 * P
+        if mode == "weighted_dp":
+            # FSDP: params all-gathered over dp once per pass (fwd+bwd+remat)
+            out["fsdp_allgather"] = 3.0 * P * K
+        if cfg.family == "moe":
+            # dispatch+combine all-to-all, both directions
+            out["moe_alltoall"] = 4.0 * B * S * d * BYTES * cfg.n_layers * K
+    elif shape.kind == "prefill":
+        payload = B * S * d * BYTES
+        out["tp_allreduce"] = 2 * 2.0 * payload * cfg.n_layers
+        if cfg.family == "moe":
+            out["moe_alltoall"] = 4.0 * B * S * d * BYTES * cfg.n_layers
+    else:
+        payload = B * 1 * d * BYTES
+        out["tp_allreduce"] = 2 * 2.0 * payload * cfg.n_layers
+        if cfg.family == "moe":
+            out["moe_alltoall"] = 4.0 * B * d * BYTES * cfg.n_layers
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+def roofline(cfg: ArchConfig, shape: InputShape, rcfg: FLRoundConfig,
+             mode: str, chips: int = 256, model_shards: int = 16
+             ) -> Dict[str, float]:
+    fl = step_flops(cfg, shape, rcfg, mode)
+    by = step_bytes(cfg, shape, rcfg, mode, chips, model_shards)
+    co = step_collective_bytes(cfg, shape, rcfg, mode, chips, model_shards)
+    compute_s = fl["hlo_equiv"] / (chips * PEAK_FLOPS_BF16)
+    memory_s = by / (chips * HBM_BW)
+    collective_s = co["total"] / (chips * ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "model_flops": fl["useful"],
+        "hlo_equiv_flops": fl["hlo_equiv"],
+        "useful_ratio": fl["useful"] / max(fl["hlo_equiv"], 1.0),
+        "collectives": co,
+    }

@@ -1,0 +1,7 @@
+"""Shared pytest config.  NOTE: no XLA_FLAGS device forcing here — tests see
+the real single CPU device; multi-device dry-runs run in subprocesses."""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

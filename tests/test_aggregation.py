@@ -1,0 +1,112 @@
+"""Unbiasedness + variance-optimality tests for the aggregation rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, sampling, stale
+
+
+def _toy_updates(rng, N, dim=7):
+    return {"a": jnp.asarray(rng.normal(size=(N, dim))),
+            "b": {"c": jnp.asarray(rng.normal(size=(N, 3, 2)))}}
+
+
+def test_aggregation_unbiased_monte_carlo():
+    """E[sum_active P G] == full-participation update  (Eq. 4-5)."""
+    rng = np.random.default_rng(0)
+    N = 8
+    G = _toy_updates(rng, N)
+    d = jnp.asarray(rng.dirichlet(np.ones(N)))
+    B = jnp.ones(N)
+    p = jnp.asarray(rng.uniform(0.2, 0.9, N))
+
+    def one(key):
+        act = (jax.random.uniform(key, (N,)) < p).astype(jnp.float32)
+        coeff = aggregation.unbiased_coeffs(d, B, p, act)
+        return aggregation.tree_weighted_sum(coeff, G)
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    deltas = jax.vmap(one)(keys)
+    mean_delta = jax.tree.map(lambda x: x.mean(axis=0), deltas)
+    full = aggregation.tree_weighted_sum(d / B, G)   # sum_i d_i/B_i G_i
+    for got, want in zip(jax.tree.leaves(mean_delta), jax.tree.leaves(full)):
+        np.testing.assert_allclose(got, want, atol=0.08)
+
+
+def test_optimal_beta_minimizes_error():
+    """beta* = <G,h>/||h||^2 minimizes ||G - beta h|| (Thm 3)."""
+    rng = np.random.default_rng(1)
+    G = {"w": jnp.asarray(rng.normal(size=(5, 20)))}
+    h = {"w": jnp.asarray(rng.normal(size=(5, 20)))}
+    beta = stale.optimal_beta(G, h)
+
+    def err(b):
+        return np.asarray(jax.vmap(
+            lambda g, hh, bb: jnp.sum((g - bb * hh) ** 2))(
+                G["w"], h["w"], b))
+
+    e_star = err(beta)
+    for eps in (0.05, -0.05, 0.2):
+        assert np.all(e_star <= err(beta + eps) + 1e-6)
+
+
+def test_optimal_beta_zero_h():
+    G = {"w": jnp.ones((3, 4))}
+    h = {"w": jnp.zeros((3, 4))}
+    beta = stale.optimal_beta(G, h)
+    np.testing.assert_array_equal(np.asarray(beta), 0.0)
+
+
+def test_stale_delta_unbiased():
+    """E[Delta of Eq.18] == full participation update regardless of beta."""
+    rng = np.random.default_rng(2)
+    N = 6
+    G = _toy_updates(rng, N)
+    h = _toy_updates(rng, N)
+    beta = jnp.asarray(rng.uniform(0, 1, N))
+    d = jnp.asarray(rng.dirichlet(np.ones(N)))
+    B = jnp.ones(N)
+    p = jnp.asarray(rng.uniform(0.3, 0.9, N))
+    sm = stale.stale_mean(h, d / B * beta)
+
+    def one(key):
+        act = (jax.random.uniform(key, (N,)) < p).astype(jnp.float32)
+        coeff = aggregation.unbiased_coeffs(d, B, p, act)
+        return aggregation.stale_delta(coeff, G, h, beta, sm)
+
+    keys = jax.random.split(jax.random.PRNGKey(3), 4000)
+    deltas = jax.vmap(one)(keys)
+    mean_delta = jax.tree.map(lambda x: x.mean(axis=0), deltas)
+    full = aggregation.tree_weighted_sum(d / B, G)
+    for got, want in zip(jax.tree.leaves(mean_delta), jax.tree.leaves(full)):
+        np.testing.assert_allclose(got, want, atol=0.08)
+
+
+def test_stale_delta_variance_reduction():
+    """With h ~ G (stale but aligned), Eq.18's variance over the sampling is
+    far below Eq.3's (the whole point of MMFL-StaleVR)."""
+    rng = np.random.default_rng(3)
+    N, dim = 6, 50
+    base = rng.normal(size=(N, dim))
+    G = {"w": jnp.asarray(base + 0.1 * rng.normal(size=(N, dim)))}
+    h = {"w": jnp.asarray(base)}
+    beta = stale.optimal_beta(G, h)
+    d = jnp.asarray(np.full(N, 1.0 / N))
+    B = jnp.ones(N)
+    p = jnp.asarray(np.full(N, 0.3))
+    sm = stale.stale_mean(h, d / B * beta)
+    full = aggregation.tree_weighted_sum(d / B, G)["w"]
+
+    def var_of(delta_fn):
+        def one(key):
+            act = (jax.random.uniform(key, (N,)) < p).astype(jnp.float32)
+            coeff = aggregation.unbiased_coeffs(d, B, p, act)
+            return delta_fn(coeff)
+        keys = jax.random.split(jax.random.PRNGKey(5), 2000)
+        deltas = jax.vmap(one)(keys)
+        return float(jnp.mean(jnp.sum((deltas - full[None]) ** 2, axis=-1)))
+
+    v_plain = var_of(lambda c: aggregation.tree_weighted_sum(c, G)["w"])
+    v_stale = var_of(
+        lambda c: aggregation.stale_delta(c, G, h, beta, sm)["w"])
+    assert v_stale < 0.2 * v_plain, (v_stale, v_plain)

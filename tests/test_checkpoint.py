@@ -1,0 +1,61 @@
+"""Checkpoint roundtrip + optimizer unit tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.optim import schedule
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": jnp.asarray([1, 2, 3], jnp.int32)}}
+    path = os.path.join(tmp_path, "ckpt_1")
+    checkpoint.save(path, tree, step=1)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored = checkpoint.restore(path, like)
+    for got, want in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+
+
+def _quadratic(params):
+    return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum((params["b"] + 1) ** 2)
+
+
+def test_sgd_converges():
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    state = sgd_init(params, momentum=0.9)
+    for _ in range(200):
+        g = jax.grad(_quadratic)(params)
+        params, state = sgd_update(params, g, state, lr=0.05, momentum=0.9)
+    assert float(_quadratic(params)) < 1e-3
+
+
+def test_adamw_converges():
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    state = adamw_init(params)
+    for _ in range(300):
+        g = jax.grad(_quadratic)(params)
+        params, state = adamw_update(params, g, state, lr=0.05,
+                                     weight_decay=0.0)
+    assert float(_quadratic(params)) < 1e-2
+
+
+def test_schedules():
+    assert schedule.constant(0.1)(100) == 0.1
+    assert schedule.exponential(0.1, 0.9)(2) == 0.1 * 0.81
+    cos = schedule.cosine(1.0, 100, warmup=10)
+    assert float(cos(0)) == 0.0
+    assert float(cos(10)) == 1.0
+    assert float(cos(100)) < 0.01
+    pr = schedule.paper_rate(mu=1.0, K=5, gamma=32.0)
+    assert pr(0) == 16.0 / (5 + 32.0)
+    assert pr(10) < pr(0)

@@ -1,0 +1,77 @@
+"""Partitioner property tests (paper §6.1 statistics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import partition, synthetic
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def test_label_shard_statistics():
+    rng = np.random.default_rng(0)
+    x, y = synthetic.make_image_task(rng, n_classes=10, n_per_class=400)
+    part = partition.label_shard_partition(rng, x, y, n_clients=120)
+    counts = part["count"]
+    high = part["high"]
+    assert high.sum() == 12                        # 10% of 120
+    # high-data clients hold ~52.6% of the data (paper: 52.6%)
+    frac = counts[high].sum() / counts.sum()
+    assert 0.40 < frac < 0.65, frac
+    # each client sees ~30% of labels
+    for i in rng.choice(120, 10, replace=False):
+        labels = np.unique(part["y"][i])
+        assert len(labels) <= 4                    # 30% of 10 rounded up + pad
+
+    # wrap-padding: every padded row equals a real row
+    i = int(np.argmin(counts))
+    c = counts[i]
+    real = part["x"][i][:c]
+    for j in range(c, part["x"].shape[1]):
+        assert any(np.array_equal(part["x"][i][j], real[k % c])
+                   for k in range(c)) or np.array_equal(
+                       part["x"][i][j], part["x"][i][j % c])
+
+
+@given(st.integers(2, 5), st.integers(0, 1000))
+def test_budgets_distribution(S, seed):
+    rng = np.random.default_rng(seed)
+    avail = partition.availability(rng, 120, S)
+    B = partition.processor_budgets(rng, avail)
+    si = avail.sum(axis=1)
+    assert np.all(B >= 1)
+    assert np.all(B <= np.maximum(si, 1))
+    # 25% have B = |S_i|
+    n_full = (B == si).sum()
+    assert n_full >= 120 // 4                      # ceil group sizes overlap
+
+
+@given(st.integers(2, 5), st.integers(0, 500))
+def test_availability(S, seed):
+    rng = np.random.default_rng(seed)
+    avail = partition.availability(rng, 100, S)
+    assert avail.shape == (100, S)
+    per_client = avail.sum(axis=1)
+    assert np.all(per_client >= S - 1)
+    assert (per_client == S).sum() == 90           # 90% can train all
+
+
+def test_stream_partition_non_iid():
+    rng = np.random.default_rng(1)
+    x, y, sid = synthetic.make_char_task(rng, vocab=32, n_streams=40,
+                                         stream_len=128, seq_len=16)
+    part = partition.stream_partition(rng, x, y, sid, n_clients=20)
+    assert part["x"].shape[0] == 20
+    assert np.all(part["count"] > 0)
+
+
+def test_image_task_separable():
+    """The synthetic classes must be learnable (sanity for accuracy claims)."""
+    rng = np.random.default_rng(2)
+    x, y = synthetic.make_image_task(rng, n_classes=4, n_per_class=100)
+    # nearest-class-mean classifier should beat chance comfortably
+    means = np.stack([x[y == c].mean(axis=0) for c in range(4)])
+    d = ((x[:, None] - means[None]) ** 2).sum(axis=(2, 3, 4))
+    acc = (d.argmin(axis=1) == y).mean()
+    assert acc > 0.7, acc

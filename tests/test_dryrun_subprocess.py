@@ -1,0 +1,65 @@
+"""Multi-device dry-run smoke (subprocess so the forced device count never
+leaks into other tests — the harness requires tests to see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import dataclasses, json, sys
+import jax
+from repro.configs.base import DEFAULT_ROUND, INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch import specs as specs_mod
+from repro.roofline import analysis as roofline
+
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+out = {}
+for arch, shape_name in [("qwen3-0.6b", "train_4k"),
+                         ("falcon-mamba-7b", "decode_32k"),
+                         ("llama4-scout-17b-a16e", "train_4k")]:
+    cfg = dataclasses.replace(get_config(arch), n_layers=2)
+    shape = INPUT_SHAPES[shape_name]
+    shape = dataclasses.replace(shape, seq_len=min(shape.seq_len, 1024),
+                                global_batch=min(shape.global_batch, 8))
+    step, mode = specs_mod.build_step(cfg, mesh, shape, DEFAULT_ROUND)
+    args = specs_mod.input_specs(cfg, mesh, shape, DEFAULT_ROUND, mode=mode)
+    with mesh:
+        compiled = jax.jit(step).lower(**args).compile()
+    ca = compiled.cost_analysis() or {}
+    coll = roofline.collective_bytes(compiled.as_text())
+    ma = compiled.memory_analysis()
+    out[f"{arch}|{shape_name}"] = {
+        "flops": float(ca.get("flops", 0)),
+        "coll": coll["total"],
+        "temp": int(ma.temp_size_in_bytes),
+        "mode": mode,
+    }
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_dryrun_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    assert len(out) == 3
+    for key, rec in out.items():
+        assert rec["flops"] > 0, key
+        assert rec["temp"] > 0, key
+    # the FL aggregation must produce cross-client collectives in train steps
+    assert out["qwen3-0.6b|train_4k"]["coll"] > 0
+    # MoE dispatch adds expert-parallel collectives
+    assert out["llama4-scout-17b-a16e|train_4k"]["coll"] > 0

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.batched_dot.batched_dot import batched_dot
+from repro.kernels.batched_dot.ref import batched_dot_ref
+from repro.kernels.batched_dot.ops import optimal_beta_pallas
+from repro.kernels.stale_agg.stale_agg import stale_agg
+from repro.kernels.stale_agg.ref import stale_agg_ref
+from repro.kernels.stale_agg.ops import stale_delta_pallas
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.core import aggregation, stale
+
+
+@pytest.mark.parametrize("C,P", [(1, 128), (4, 1000), (8, 70_000), (3, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_dot(C, P, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    G = jax.random.normal(k1, (C, P), dtype)
+    h = jax.random.normal(k2, (C, P), dtype)
+    d1, n1 = batched_dot(G, h, interpret=True)
+    d2, n2 = batched_dot_ref(G, h)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(d1, d2, rtol=tol, atol=tol * P ** 0.5)
+    np.testing.assert_allclose(n1, n2, rtol=tol, atol=tol * P ** 0.5)
+
+
+@pytest.mark.parametrize("C,P", [(2, 128), (4, 1000), (8, 40_000), (5, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stale_agg(C, P, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(1), 5)
+    G = jax.random.normal(keys[0], (C, P), dtype)
+    h = jax.random.normal(keys[1], (C, P), dtype)
+    coeff = jax.random.uniform(keys[2], (C,))
+    beta = jax.random.uniform(keys[3], (C,))
+    ss = jax.random.normal(keys[4], (P,))
+    o1 = stale_agg(coeff, beta, G, h, ss, interpret=True)
+    o2 = stale_agg_ref(coeff, beta, G, h, ss)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(o1, o2, rtol=tol, atol=tol * C)
+
+
+@pytest.mark.parametrize(
+    "B,H,S,D,causal,window",
+    [(1, 2, 256, 64, True, 0), (2, 1, 128, 128, True, 64),
+     (1, 1, 130, 60, False, 0), (1, 2, 384, 96, True, 128),
+     (1, 1, 64, 128, True, 0)])
+def test_flash_attention(B, H, S, D, causal, window):
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (B, H, S, D))
+    k = jax.random.normal(keys[1], (B, H, S, D))
+    v = jax.random.normal(keys[2], (B, H, S, D))
+    o1 = flash_attention(q, k, v, causal=causal, window=window,
+                         interpret=True)
+    o2 = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(o1, o2, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(keys[0], (1, 2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(keys[1], (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(keys[2], (1, 2, 128, 64), jnp.bfloat16)
+    o1 = flash_attention(q, k, v, causal=True, interpret=True)
+    o2 = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(o1.astype(np.float32), o2.astype(np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("Bsz,S,di,N", [(1, 32, 64, 8), (2, 48, 128, 16),
+                                        (1, 17, 96, 4), (1, 16, 33, 8)])
+def test_selective_scan(Bsz, S, di, N):
+    from repro.kernels.selective_scan.selective_scan import selective_scan
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+    keys = jax.random.split(jax.random.PRNGKey(4), 6)
+    u = jax.random.normal(keys[0], (Bsz, S, di))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (Bsz, S, di)) - 1)
+    B = jax.random.normal(keys[2], (Bsz, S, N))
+    C = jax.random.normal(keys[3], (Bsz, S, N))
+    A = -jnp.exp(jax.random.normal(keys[4], (di, N)))
+    D = jax.random.normal(keys[5], (di,))
+    y1 = selective_scan(u, dt, B, C, A, D, block_d=32, chunk=16,
+                        interpret=True)
+    y2 = selective_scan_ref(u, dt, B, C, A, D)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+
+
+def test_selective_scan_matches_model_path():
+    """Kernel == the model's chunked associative-scan implementation."""
+    from repro.kernels.selective_scan.selective_scan import selective_scan
+    from repro.models import mamba as mamba_mod
+    keys = jax.random.split(jax.random.PRNGKey(5), 6)
+    Bsz, S, di, N = 2, 32, 64, 8
+    u = jax.random.normal(keys[0], (Bsz, S, di))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (Bsz, S, di)) - 1)
+    B = jax.random.normal(keys[2], (Bsz, S, N))
+    C = jax.random.normal(keys[3], (Bsz, S, N))
+    A = -jnp.exp(jax.random.normal(keys[4], (di, N)))
+    D = jax.random.normal(keys[5], (di,))
+    y_kernel = selective_scan(u, dt, B, C, A, D, block_d=32, interpret=True)
+    y_model, _ = mamba_mod._ssm_scan(u, dt, A, B, C, D)
+    np.testing.assert_allclose(y_kernel, y_model, rtol=2e-4, atol=2e-4)
+
+
+def test_pytree_wrappers_match_core():
+    """ops.py pytree paths == core.{stale,aggregation} references."""
+    rng = np.random.default_rng(0)
+    C = 4
+    G = {"a": jnp.asarray(rng.normal(size=(C, 17))),
+         "b": {"c": jnp.asarray(rng.normal(size=(C, 3, 5)))}}
+    h = {"a": jnp.asarray(rng.normal(size=(C, 17))),
+         "b": {"c": jnp.asarray(rng.normal(size=(C, 3, 5)))}}
+    beta_k = optimal_beta_pallas(G, h, interpret=True)
+    beta_r = stale.optimal_beta(G, h)
+    np.testing.assert_allclose(beta_k, beta_r, rtol=1e-5)
+
+    coeff = jnp.asarray(rng.uniform(0.1, 1.0, C))
+    sm = {"a": jnp.asarray(rng.normal(size=(17,))),
+          "b": {"c": jnp.asarray(rng.normal(size=(3, 5)))}}
+    d_k = stale_delta_pallas(coeff, G, h, beta_r, sm, interpret=True)
+    d_r = aggregation.stale_delta(coeff, G, h, beta_r, sm)
+    for got, want in zip(jax.tree.leaves(d_k), jax.tree.leaves(d_r)):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

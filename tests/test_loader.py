@@ -1,0 +1,53 @@
+"""Data loader unit tests."""
+import numpy as np
+
+from repro.data import partition, synthetic
+from repro.data.loader import FederatedDataset, token_shards
+
+
+def test_cohort_batch_shapes():
+    rng = np.random.default_rng(0)
+    x, y = synthetic.make_image_task(rng, n_classes=4, n_per_class=50)
+    part = partition.label_shard_partition(rng, x, y, n_clients=10)
+    ds = FederatedDataset(part)
+    assert len(ds) == 10
+    batch = ds.cohort_batch(rng, [0, 3, 7], batch=8)
+    assert batch["x"].shape == (3, 8, 28, 28, 1)
+    assert batch["y"].shape == (3, 8)
+
+
+def test_sample_batch_respects_count():
+    rng = np.random.default_rng(1)
+    x, y = synthetic.make_image_task(rng, n_classes=4, n_per_class=50)
+    part = partition.label_shard_partition(rng, x, y, n_clients=10)
+    ds = FederatedDataset(part)
+    c = ds.clients[0]
+    for _ in range(5):
+        b = c.sample_batch(rng, 16)
+        # sampled rows must come from the REAL (non-pad) region
+        for row in b["x"]:
+            assert any(np.array_equal(row, c.arrays["x"][i])
+                       for i in range(c.count))
+
+
+def test_epoch_batches_cover_without_replacement():
+    rng = np.random.default_rng(2)
+    data = {"x": np.arange(40).reshape(10, 4),
+            "y": np.arange(10)[:, None].repeat(4, 1),
+            "count": np.full(10, 4)}
+    part = {"x": data["x"][:, :, None], "y": data["y"], "count": data["count"]}
+    ds = FederatedDataset(part)
+    seen = []
+    for b in ds.clients[2].epoch_batches(rng, 2):
+        seen.extend(b["x"][:, 0].tolist())
+    assert sorted(seen) == sorted(data["x"][2].tolist())
+
+
+def test_token_shards():
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 100, (6, 5, 9)).astype(np.int32)
+    ds = token_shards(data)
+    assert len(ds) == 6
+    b = ds.cohort_batch(rng, [1, 2], 3)
+    assert b["x"].shape == (2, 3, 8)
+    np.testing.assert_array_equal(b["x"][:, :, 1:], b["y"][:, :, :-1])

@@ -1,0 +1,75 @@
+"""Roofline model invariants + HLO collective parser unit tests."""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import DEFAULT_ROUND, INPUT_SHAPES
+from repro.configs.registry import ARCHS, get_config
+from repro.roofline import analytic, analysis
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", sorted(INPUT_SHAPES))
+def test_roofline_terms_positive_and_consistent(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    r = analytic.roofline(cfg, shape, DEFAULT_ROUND, "fedavg")
+    assert r["compute_s"] > 0
+    assert r["memory_s"] > 0
+    assert r["collective_s"] >= 0
+    assert 0 < r["useful_ratio"] <= 1.0 + 1e-9
+    assert r["dominant"] in ("compute_s", "memory_s", "collective_s")
+    # MODEL_FLOPS never exceeds the remat-adjusted HLO estimate
+    assert r["model_flops"] <= r["hlo_equiv_flops"] + 1e-6
+
+
+def test_kv_quant_halves_decode_memory():
+    cfg = get_config("qwen3-0.6b")
+    shape = INPUT_SHAPES["decode_32k"]
+    base = analytic.step_bytes(cfg, shape, DEFAULT_ROUND, "fedavg", 256)
+    quant = analytic.step_bytes(
+        cfg, shape, dataclasses.replace(DEFAULT_ROUND, kv_quant=True),
+        "fedavg", 256)
+    # cache dominates this shape: overall bytes must drop by >25%
+    assert quant < 0.75 * base
+
+
+def test_train_dominated_by_compute_for_dense():
+    cfg = get_config("qwen1.5-110b")
+    r = analytic.roofline(cfg, INPUT_SHAPES["train_4k"], DEFAULT_ROUND,
+                          "weighted_dp")
+    assert r["dominant"] == "compute_s"
+
+
+def test_decode_memory_bound():
+    cfg = get_config("starcoder2-7b")
+    r = analytic.roofline(cfg, INPUT_SHAPES["decode_32k"], DEFAULT_ROUND,
+                          "fedavg")
+    assert r["dominant"] == "memory_s"
+
+
+def test_collective_parser():
+    hlo = """
+  %all-gather.3 = bf16[4,128]{1,0} all-gather(%p0), replica_groups={}
+  %x = f32[8]{0} add(%a, %b)
+  %all-reduce.1 = f32[16,16]{1,0} all-reduce(%y), to_apply=%sum
+  %ag2 = (bf16[2,2]{1,0}, bf16[2,2]{1,0}) all-gather-start(%z)
+"""
+    out = analysis.collective_bytes(hlo)
+    assert out["all-gather"] == 4 * 128 * 2 + 2 * (2 * 2 * 2)
+    assert out["all-reduce"] == 16 * 16 * 4
+    assert out["count"] == 3
+    assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+def test_long500k_subquadratic():
+    """long_500k decode FLOPs must NOT scale with the 524k context for
+    windowed/ssm archs."""
+    shape = INPUT_SHAPES["long_500k"]
+    dense = get_config("starcoder2-7b")       # window 8192
+    ssm = get_config("falcon-mamba-7b")
+    f_dense = analytic.step_flops(dense, shape, DEFAULT_ROUND, "fedavg")
+    assert f_dense["attn"] <= 4 * 1 * dense.sliding_window * \
+        dense.n_heads * dense.dh * dense.n_layers + 1
+    f_ssm = analytic.step_flops(ssm, shape, DEFAULT_ROUND, "fedavg")
+    assert f_ssm["attn"] == 0

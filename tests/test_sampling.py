@@ -1,0 +1,115 @@
+"""Property tests for the water-filling sampler (Thm 2/8/9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sampling
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_utilities(rng, V, S, sparsity=0.2):
+    U = np.abs(rng.normal(size=(V, S))) + 1e-3
+    mask = rng.uniform(size=(V, S)) > sparsity
+    # every processor keeps at least one available model
+    mask[np.arange(V), rng.integers(0, S, V)] = True
+    return U * mask
+
+
+@given(st.integers(2, 30), st.integers(1, 5), st.floats(0.5, 0.95),
+       st.integers(0, 10_000))
+def test_waterfilling_feasibility(V, S, m_frac, seed):
+    rng = np.random.default_rng(seed)
+    U = _rand_utilities(rng, V, S)
+    m = max(1.0, m_frac * V)
+    p = np.asarray(sampling.solve_waterfilling(jnp.asarray(U), m))
+    assert np.all(p >= -1e-9)
+    assert np.all(p.sum(axis=1) <= 1.0 + 1e-5)
+    # budget met exactly (m < V here)
+    if m < V - 1:
+        np.testing.assert_allclose(p.sum(), m, rtol=1e-4)
+    # unavailable (zero-utility) pairs never sampled
+    assert np.all(p[U == 0] == 0)
+
+
+@given(st.integers(3, 16), st.integers(1, 4), st.integers(0, 10_000))
+def test_waterfilling_optimality(V, S, seed):
+    """The closed form must beat random feasible distributions on the
+    objective sum ||U||^2/p (it is the argmin)."""
+    rng = np.random.default_rng(seed)
+    U = _rand_utilities(rng, V, S, sparsity=0.0)
+    m = 0.5 * V
+    p_star = np.asarray(sampling.solve_waterfilling(jnp.asarray(U), m))
+
+    def objective(p):
+        with np.errstate(divide="ignore"):
+            val = np.where(U > 0, U ** 2 / np.maximum(p, 1e-30), 0.0)
+        return val.sum()
+
+    f_star = objective(p_star)
+    for _ in range(20):
+        q = rng.uniform(0.01, 1.0, size=(V, S))
+        q = q / q.sum(axis=1, keepdims=True)          # rows sum to 1
+        q = q * (m / V)                               # total = m, rows <= 1
+        assert f_star <= objective(q) * (1 + 1e-6)
+
+
+def test_waterfilling_full_participation():
+    U = jnp.asarray(np.abs(np.random.default_rng(0).normal(size=(6, 2))) + 0.1)
+    p = np.asarray(sampling.solve_waterfilling(U, 6.0))
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_waterfilling_matches_paper_structure():
+    """Saturated set = largest-M processors; scaled set shares the rest."""
+    U = jnp.asarray([[10.0, 10.0], [0.1, 0.1], [0.1, 0.1], [0.1, 0.1]])
+    m = 1.5
+    p = np.asarray(sampling.solve_waterfilling(U, m))
+    # processor 0 has overwhelming utility -> saturated (sum_s p = 1)
+    np.testing.assert_allclose(p[0].sum(), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(p.sum(), m, rtol=1e-4)
+
+
+def test_assignment_unbiased():
+    """E[1_{(v,s)}] == p_{s|v} and E[||H||_1] == 1 (Eq. 16)."""
+    rng = np.random.default_rng(0)
+    N, S = 12, 3
+    d = rng.dirichlet(np.ones(N), size=S).T                  # [N,S]
+    B = np.ones(N)
+    avail = np.ones((N, S), bool)
+    losses = jnp.asarray(np.abs(rng.normal(size=(N, S))) + 0.5)
+    p = sampling.lvr_probabilities(losses, jnp.asarray(d), jnp.asarray(B),
+                                   jnp.asarray(avail), m=4.0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3000)
+    acts = jax.vmap(lambda k: sampling.sample_assignment(k, p))(keys)
+    emp = np.asarray(acts.mean(axis=0))
+    np.testing.assert_allclose(emp, np.asarray(p), atol=0.03)
+    # global step size: E[sum_active d/(B p)] = 1 per model
+    coeff = np.where(np.asarray(p) > 0, d / np.maximum(np.asarray(p), 1e-30), 0.0)
+    H1 = (np.asarray(acts) * coeff[None]).sum(axis=1)        # [draws, S]
+    np.testing.assert_allclose(H1.mean(axis=0), 1.0, atol=0.06)
+
+
+def test_random_probabilities_budget():
+    rng = np.random.default_rng(1)
+    N, S = 10, 4
+    d = rng.dirichlet(np.ones(N), size=S).T
+    B = rng.integers(1, 4, N).astype(float)
+    avail = rng.uniform(size=(N, S)) > 0.1
+    avail[:, 0] = True
+    m = 6.0
+    p = np.asarray(sampling.random_probabilities(
+        jnp.asarray(d), jnp.asarray(B), jnp.asarray(avail), m))
+    assert np.all(p.sum(axis=1) <= 1 + 1e-5)
+    assert p.sum() <= m + 1e-4
+
+
+def test_roundrobin_mask_cycles():
+    avail = jnp.ones((5, 3))
+    for r in range(6):
+        mask = np.asarray(sampling.roundrobin_mask(avail, r))
+        assert mask[:, r % 3].all()
+        assert mask.sum() == 5
