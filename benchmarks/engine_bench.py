@@ -1,0 +1,46 @@
+"""Round-engine micro-benchmark: the fused per-(task, method) jitted round
+function vs the legacy orchestration (jitted local-training pieces, eager
+Python aggregation — ``ServerConfig(jit_round=False)``).
+
+Measured on the dispatch-bound linear micro-setting (64 clients, 3 tasks):
+the paper's CNN world is local-compute-bound on CPU and shows ~1x there,
+but per-round orchestration is exactly what dominates once local training
+is fast or offloaded (the production regime: accelerators own the local
+step, the host owns the round loop).
+
+Same output contract as ``kernels_bench``: each bench returns
+(us_per_round_fused, derived) where derived carries the headline
+rounds/sec speedup.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+from repro.core.server import MMFLServer, ServerConfig
+from repro.fl.experiments import build_linear_setting
+
+
+def _rounds_per_sec(tasks, B, avail, method: str, jit_round: bool,
+                    reps: int = 10) -> float:
+    srv = MMFLServer(tasks, B, avail,
+                     ServerConfig(method=method, local_epochs=2, seed=0,
+                                  active_rate=0.2, jit_round=jit_round))
+    srv.run_round()                                   # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        srv.run_round()
+    return reps / (time.perf_counter() - t0)
+
+
+def bench_round_engine(method: str = "stalevre") -> Tuple[float, str]:
+    """Default method is StaleVRE — the paper's headline method and the
+    heaviest aggregation rule (stale store + beta estimator updates), i.e.
+    where eager per-round Python dispatch hurt most."""
+    tasks, B, avail = build_linear_setting(n_models=3, n_clients=64, seed=0)
+    fused = _rounds_per_sec(tasks, B, avail, method, jit_round=True)
+    eager = _rounds_per_sec(tasks, B, avail, method, jit_round=False)
+    us = 1e6 / fused
+    derived = (f"speedup={fused / eager:.2f}x;fused_rps={fused:.2f};"
+               f"eager_rps={eager:.2f}")
+    return us, derived

@@ -20,8 +20,8 @@ def _row(name: str, us: float, derived) -> None:
 
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
-    from benchmarks import kernels_bench, overheads, paper_tables
-    from benchmarks import roofline_report
+    from benchmarks import engine_bench, kernels_bench, overheads
+    from benchmarks import paper_tables, roofline_report
 
     def timed(name, fn):
         t0 = time.perf_counter()
@@ -66,6 +66,9 @@ def main() -> None:
     timed("kernel_batched_dot", kernels_bench.bench_batched_dot)
     timed("kernel_stale_agg", kernels_bench.bench_stale_agg)
     timed("kernel_flash_attention", kernels_bench.bench_flash_attention)
+
+    # --- round engine (derived = fused-jit vs eager rounds/sec) ------------
+    timed("engine_round_stalevre", engine_bench.bench_round_engine)
 
 
 if __name__ == "__main__":

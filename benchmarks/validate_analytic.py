@@ -20,11 +20,12 @@ def main():
     import jax.numpy as jnp
     from repro.configs.base import DEFAULT_ROUND, InputShape
     from repro.configs.registry import get_config
+    from repro.launch.mesh import make_mesh_compat
     from repro.models import transformer
     from repro.roofline import analytic
+    from repro.roofline.analysis import cost_analysis_dict
 
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((4, 4), ("data", "model"))
     out = {}
     for arch in ["qwen3-0.6b", "internlm2-1.8b"]:
         cfg = dataclasses.replace(get_config(arch), n_layers=4)
@@ -48,7 +49,7 @@ def main():
             c = jax.jit(lambda p, b: jax.grad(
                 lambda pp: loss(pp, b, unroll))(p)).lower(
                     params, batch).compile()
-            flops[name] = float(c.cost_analysis()["flops"])
+            flops[name] = float(cost_analysis_dict(c)["flops"])
 
         a = analytic.step_flops(cfg, shape, rcfg, "fedavg")
         # analytic counts 8ND (incl. remat fwd) + attention terms

@@ -8,6 +8,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.core.methods import available_methods
 from repro.core.server import MMFLServer, ServerConfig
 from repro.fl.experiments import build_setting
 
@@ -18,6 +19,7 @@ def main():
     tasks, B, avail = build_setting(n_models=3, n_clients=32, seed=0,
                                     small=True)
     print(f"clients={len(B)}  processors={int(B.sum())}  models={len(tasks)}")
+    print("registered methods:", ", ".join(available_methods()))
 
     srv = MMFLServer(
         tasks, B, avail,

@@ -41,6 +41,20 @@ def global_step_size(coeffs: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(coeffs)
 
 
+def stale_correction(coeffs: jnp.ndarray, G: Any, h: Any,
+                     beta: jnp.ndarray) -> Any:
+    """The fresh-update half of Eq. (18): sum_{active} P_i (G_i - beta_i h_i).
+
+    Math runs in G's dtype — the distributed path hands bf16 streams in so
+    the cross-client reduce stays halved (EXPERIMENTS.md §Perf-4)."""
+    def leaf(g, hh):
+        bcast = beta.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        return jnp.tensordot(coeffs.astype(g.dtype),
+                             g - bcast * hh.astype(g.dtype), axes=(0, 0))
+
+    return jax.tree.map(leaf, G, h)
+
+
 def stale_delta(coeffs: jnp.ndarray, G: Any, h: Any, beta: jnp.ndarray,
                 stale_mean: Any) -> Any:
     """Delta of Eq. (18):
@@ -51,13 +65,9 @@ def stale_delta(coeffs: jnp.ndarray, G: Any, h: Any, beta: jnp.ndarray,
 
     coeffs: [V] unbiased coefficients (0 for inactive); G, h: pytrees with
     leading V axis; beta: [V]."""
-    def leaf(sm, g, hh):
-        bcast = beta.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
-        corr = jnp.tensordot(coeffs.astype(g.dtype),
-                             g - bcast * hh.astype(g.dtype), axes=(0, 0))
-        return sm.astype(g.dtype) + corr
-
-    return jax.tree.map(leaf, stale_mean, G, h)
+    corr = stale_correction(coeffs, G, h, beta)
+    return jax.tree.map(lambda sm, cr: sm.astype(cr.dtype) + cr,
+                        stale_mean, corr)
 
 
 def apply_delta(w: Any, delta: Any) -> Any:

@@ -1,0 +1,37 @@
+"""Pluggable MMFL method strategies.
+
+Importing this package populates the registry with the paper's method
+family (LVR / GVR / StaleVR / StaleVRE + six baselines) and the two
+post-paper strategies (FLAMMABLE-style multi-model engagement,
+power-of-choice).  Adding a method = one module with a ``@register("name")``
+subclass of ``MethodStrategy`` + an import line here; the server engine,
+the distributed trainer, the benchmarks, and the tests discover it through
+``available_methods()``."""
+from repro.core.methods.base import (MethodStrategy, SamplerContext,
+                                     available_methods, distributed_methods,
+                                     get_class, make, register)
+from repro.core.methods.mixins import (LossSamplingMixin, StaleStoreMixin,
+                                       UniformSamplingMixin)
+from repro.core.methods.stale_family import StaleVRFamily
+
+# registration side effects — one module per method
+from repro.core.methods import random     # noqa: F401  (uniform baseline)
+from repro.core.methods import lvr        # noqa: F401
+from repro.core.methods import gvr        # noqa: F401
+from repro.core.methods import roundrobin_gvr  # noqa: F401
+from repro.core.methods import full       # noqa: F401
+from repro.core.methods import stalevr    # noqa: F401
+from repro.core.methods import stalevre   # noqa: F401
+from repro.core.methods import fedvarp    # noqa: F401
+from repro.core.methods import fedstale   # noqa: F401
+from repro.core.methods import mifa       # noqa: F401
+from repro.core.methods import scaffold   # noqa: F401
+from repro.core.methods import flammable  # noqa: F401
+from repro.core.methods import power_of_choice  # noqa: F401
+
+__all__ = [
+    "MethodStrategy", "SamplerContext", "StaleVRFamily",
+    "LossSamplingMixin", "StaleStoreMixin", "UniformSamplingMixin",
+    "available_methods", "distributed_methods", "get_class", "make",
+    "register",
+]

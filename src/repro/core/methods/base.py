@@ -1,0 +1,159 @@
+"""Method strategy protocol + registry for the MMFL sampling/aggregation
+family.
+
+Every method the server (single-host ``core.server``) or the distributed
+path (``fl.steps`` / ``launch.train``) can run is a ``MethodStrategy``
+subclass registered under a string name with ``@register("name")``.  The
+engine is method-agnostic: it asks the strategy for sampling probabilities,
+draws participation, runs the cohort's local training, and hands the
+updates back to ``strategy.aggregate`` — no method-name branches anywhere.
+
+The strategy surface (all array-valued hooks are pure and jittable; the
+server traces ``local_correction`` + ``aggregate`` into one fused round
+function per (task, method)):
+
+  class-level flags
+    needs_all_updates   every client trains every round (G over all N is
+                        produced in the stats phase — the computation
+                        overhead the paper's LVR/StaleVRE avoid)
+    needs_grad_norms    the sampler consumes ||G_{i,s}|| statistics
+    uses_stale_store    keeps per-client h stores (server memory 3x)
+    distributed_ok      usable by the distributed trainer (sampling-side
+                        only: no server-held state, no all-client G)
+
+  sampling side (shared with the distributed layer via ``SamplerContext``)
+    probabilities(ctx, losses_ns, norms_ns) -> p [V,S]
+    sample(key, p, ctx, losses_ns)          -> active [V,S] in {0,1}
+    coefficients(d_v, B_v, p_v, act_v)      -> aggregation coeffs [V]
+
+  training side (traced into the jitted round function)
+    init_state(params, n_clients)           -> per-task state pytree
+    local_correction(state, idx)            -> per-client grad correction
+    aggregate(w, state, G, coeff, act, idx, *, d_col, lr, round_idx)
+        -> (new_w, new_state, extras)       extras: logged arrays (e.g.
+                                            the per-client beta of Fig. 3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, List, Optional, Tuple, Type
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, sampling
+
+
+@dataclasses.dataclass
+class SamplerContext:
+    """The world statistics the sampling side needs — the server satisfies
+    this protocol itself; the distributed trainer builds one explicitly."""
+    d: jnp.ndarray        # [N,S] dataset fractions among available clients
+    B: jnp.ndarray        # [N]   processor budgets
+    avail: jnp.ndarray    # [N,S] availability mask
+    m: float              # expected training tasks per round (budget)
+    round: int = 0
+
+
+class MethodStrategy:
+    """Base strategy: uniform sampling + unbiased aggregation (Eq. 3)."""
+
+    name: ClassVar[str] = "?"
+    needs_all_updates: ClassVar[bool] = False
+    needs_grad_norms: ClassVar[bool] = False
+    uses_loss_stats: ClassVar[bool] = True    # sampler consumes loss reports
+    uses_stale_store: ClassVar[bool] = False
+    distributed_ok: ClassVar[bool] = False
+
+    def __init__(self, cfg: Any = None):
+        self.cfg = cfg      # ServerConfig-like (fedstale_beta, local_epochs..)
+
+    # -- sampling side -----------------------------------------------------
+    def probabilities(self, ctx, losses_ns: Optional[jnp.ndarray],
+                      norms_ns: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def sample(self, key, p: jnp.ndarray, ctx,
+               losses_ns: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Default: each processor independently picks <= 1 model."""
+        return sampling.sample_assignment(key, p)
+
+    def coefficients(self, d_v: jnp.ndarray, B_v: jnp.ndarray,
+                     p_v: jnp.ndarray, act_v: jnp.ndarray) -> jnp.ndarray:
+        """Default: the unbiased d/(B p) coefficients of Eq. 3."""
+        return aggregation.unbiased_coeffs(d_v, B_v, p_v, act_v)
+
+    def cohort_size(self, n_clients: int, m: float, n_models: int) -> int:
+        """Fixed training-cohort capacity per task (overflowing actives are
+        dropped).  Default sizing assumes the budget spreads over the S
+        tasks (expected actives per task = m/S; 2.5x margin); strategies
+        that can concentrate the budget on one task must override."""
+        return int(min(n_clients,
+                       max(8, np.ceil(2.5 * m / n_models) + 4)))
+
+    # -- training side -----------------------------------------------------
+    def init_state(self, params: Any, n_clients: int) -> Dict[str, Any]:
+        """Per-task method state (a pytree threaded through the jitted
+        round function)."""
+        return {}
+
+    def local_correction(self, state: Dict[str, Any],
+                         idx: jnp.ndarray) -> Optional[Any]:
+        """Per-client additive gradient correction (SCAFFOLD's c - c_i)."""
+        return None
+
+    def aggregate(self, w: Any, state: Dict[str, Any], G: Any,
+                  coeff: jnp.ndarray, act: jnp.ndarray, idx: jnp.ndarray, *,
+                  d_col: jnp.ndarray, lr: jnp.ndarray,
+                  round_idx: jnp.ndarray
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+        """Apply the method's aggregation rule for one task.
+
+        coeff/act: [A] cohort coefficients / participation; G: cohort
+        updates [A, ...]; idx: [A] client ids (all-client methods have
+        A == N, idx == arange(N)).  Default: Eq. 3 unbiased aggregation."""
+        return aggregation.aggregate(w, G, coeff), state, {}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[MethodStrategy]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("lvr")`` makes the strategy discoverable
+    by ``make(name)`` / ``available_methods()``."""
+    def deco(cls: Type[MethodStrategy]) -> Type[MethodStrategy]:
+        if cls.needs_grad_norms and not cls.needs_all_updates:
+            # ||G_{i,s}|| stats exist only if every client trains first —
+            # the engine's stats phase produces them on that branch alone
+            raise TypeError(
+                f"{cls.__name__}: needs_grad_norms requires "
+                f"needs_all_updates (gradient norms come from the "
+                f"all-client training pass)")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_class(name: str) -> Type[MethodStrategy]:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown MMFL method {name!r}; available: "
+                       f"{', '.join(available_methods())}")
+    return _REGISTRY[name]
+
+
+def make(name: str, cfg: Any = None) -> MethodStrategy:
+    return get_class(name)(cfg)
+
+
+def available_methods() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def distributed_methods() -> List[str]:
+    """Methods the distributed trainer can run (sampling-side only)."""
+    return sorted(n for n, c in _REGISTRY.items() if c.distributed_ok)

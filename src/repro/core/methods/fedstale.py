@@ -1,0 +1,19 @@
+"""FedStale baseline: stale variance reduction with a constant global beta
+(``ServerConfig.fedstale_beta``), uniform sampling."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.methods.base import register
+from repro.core.methods.mixins import UniformSamplingMixin
+from repro.core.methods.stale_family import StaleVRFamily
+
+DEFAULT_BETA = 0.5
+
+
+@register("fedstale")
+class FedStaleMethod(UniformSamplingMixin, StaleVRFamily):
+
+    def _beta(self, state, G, h_cohort, act, idx, round_idx):
+        beta0 = getattr(self.cfg, "fedstale_beta", DEFAULT_BETA)
+        return beta0 * jnp.ones_like(state["h_valid"]), state

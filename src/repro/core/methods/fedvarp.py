@@ -1,0 +1,16 @@
+"""FedVARP baseline: stale variance reduction with fixed beta = 1 (stale
+updates fully trusted), uniform sampling."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.methods.base import register
+from repro.core.methods.mixins import UniformSamplingMixin
+from repro.core.methods.stale_family import StaleVRFamily
+
+
+@register("fedvarp")
+class FedVARPMethod(UniformSamplingMixin, StaleVRFamily):
+
+    def _beta(self, state, G, h_cohort, act, idx, round_idx):
+        return jnp.ones_like(state["h_valid"]), state

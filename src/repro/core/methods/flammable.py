@@ -1,0 +1,46 @@
+"""FLAMMABLE-style multi-model engagement (Lin et al., PAPERS.md): a
+processor may train MORE THAN ONE model in a round when its utility
+justifies spending the budget on it.
+
+The base engine's processors pick at most one model per round (the
+categorical draw of ``sampling.sample_assignment``).  Here each
+(processor, model) pair is instead its OWN budget unit: the water-filling
+solver runs over the flattened [V*S, 1] utility column (per-entry cap 1, no
+per-processor row cap) and participation is an independent Bernoulli per
+entry — so a processor whose models all carry high loss utility can engage
+several of them in the same round.  Aggregation stays unbiased because the
+d/(B p) coefficients of Eq. 3 are per-entry already."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.methods.base import MethodStrategy, register
+
+
+@register("flammable")
+class FlammableMethod(MethodStrategy):
+    distributed_ok = True
+
+    def probabilities(self, ctx, losses_ns, norms_ns=None):
+        util = jnp.abs(losses_ns) * ctx.d / ctx.B[:, None]
+        util = jnp.where(ctx.avail, util, 0.0)
+        U = sampling.processor_budget_utilities(util, ctx.B)      # [V,S]
+        V, S = U.shape
+        # each (v,s) pair is its own unit -> no <=1 row coupling across
+        # models: multi-model engagement becomes possible
+        p = sampling.solve_waterfilling(U.reshape(V * S, 1), ctx.m)
+        return p.reshape(V, S)
+
+    def sample(self, key, p, ctx, losses_ns=None):
+        # independent Bernoulli per (processor, model): rows may hold
+        # multiple 1s (one processor training several models this round)
+        return (jax.random.uniform(key, p.shape) < p).astype(jnp.float32)
+
+    def cohort_size(self, n_clients: int, m: float, n_models: int) -> int:
+        # no per-processor row cap: the water-filling may pour nearly ALL
+        # of m into one unconverged task's column, so each task's cohort
+        # must absorb the whole budget (the default m/S sizing would
+        # silently drop active clients and bias the aggregation)
+        return super().cohort_size(n_clients, m, 1)

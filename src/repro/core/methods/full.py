@@ -1,0 +1,24 @@
+"""Full participation: every processor trains every available model with
+probability 1 (B_i slots cover S_i models; emulated with coeff d/B and all
+active) — the accuracy ceiling of Table 1."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.methods.base import MethodStrategy, register
+
+
+@register("full")
+class FullParticipationMethod(MethodStrategy):
+    needs_all_updates = True
+    uses_loss_stats = False
+
+    def probabilities(self, ctx, losses_ns, norms_ns=None):
+        avail_v = sampling.processor_budget_utilities(
+            ctx.avail.astype(jnp.float32), ctx.B)
+        return jnp.ones_like(avail_v) * avail_v
+
+    def sample(self, key, p, ctx, losses_ns=None):
+        # deterministic: p IS the participation mask (no sampling noise)
+        return p

@@ -1,0 +1,19 @@
+"""MMFL-GVR (Thm 8; prior-art gradient-norm sampling adapted to
+heterogeneous budgets).  Requires every client to train every model each
+round to measure ||G_{i,s}|| — the computation overhead the paper's LVR
+avoids."""
+from __future__ import annotations
+
+from repro.core import sampling
+from repro.core.methods.base import MethodStrategy, register
+
+
+@register("gvr")
+class GVRMethod(MethodStrategy):
+    needs_all_updates = True
+    uses_loss_stats = False
+    needs_grad_norms = True
+
+    def probabilities(self, ctx, losses_ns, norms_ns=None):
+        return sampling.gvr_probabilities(norms_ns, ctx.d, ctx.B,
+                                          ctx.avail, ctx.m)

@@ -1,0 +1,21 @@
+"""MIFA baseline: memorize every client's latest update and average ALL
+stored updates each round (d-weighted over clients heard from at least
+once), uniform sampling."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import aggregation, stale
+from repro.core.methods.base import MethodStrategy, register
+from repro.core.methods.mixins import StaleStoreMixin, UniformSamplingMixin
+
+
+@register("mifa")
+class MIFAMethod(UniformSamplingMixin, StaleStoreMixin, MethodStrategy):
+
+    def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
+                  round_idx):
+        h, hv = self.refresh(state, G, act, idx)
+        delta = stale.stale_mean(h, d_col * hv)
+        return (aggregation.apply_delta(w, delta),
+                {**state, "h": h, "h_valid": hv}, {})

@@ -1,0 +1,60 @@
+"""Shared strategy mixins: the server-side stale store (h_{i,s}) and the
+loss-/uniform-probability helpers reused across the method family."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling, stale
+
+
+class LossSamplingMixin:
+    """Water-filling over loss utilities (MMFL-LVR, Thm 2/9) — shared by
+    LVR and the stale variance-reduced family."""
+
+    def probabilities(self, ctx, losses_ns, norms_ns=None):
+        return sampling.lvr_probabilities(losses_ns, ctx.d, ctx.B,
+                                          ctx.avail, ctx.m)
+
+
+class UniformSamplingMixin:
+    """Uniform-random sampling — shared by random / fedvarp / fedstale /
+    mifa / scaffold (the baselines that sample blindly: no loss uploads)."""
+
+    uses_loss_stats = False
+
+    def probabilities(self, ctx, losses_ns, norms_ns=None):
+        return sampling.random_probabilities(ctx.d, ctx.B, ctx.avail, ctx.m)
+
+
+class StaleStoreMixin:
+    """Per-(client, model) stale update store h (Sec. 5): refresh-on-active
+    bookkeeping plus the Eq. 20 beta measurement, shared by the stale
+    variance-reduced family, MIFA, and the distributed stale step."""
+
+    uses_stale_store = True
+
+    def init_state(self, params: Any, n_clients: int) -> Dict[str, Any]:
+        return {"h": stale.init_stale_store(params, n_clients),
+                "h_valid": jnp.zeros((n_clients,), jnp.float32)}
+
+    @staticmethod
+    def refresh(state: Dict[str, Any], G: Any, act: jnp.ndarray,
+                idx: jnp.ndarray) -> Tuple[Any, jnp.ndarray]:
+        """h_i <- G_i for active cohort members (scatter at client idx)."""
+        def leaf(hh, gg):
+            mask = act.reshape((-1,) + (1,) * (gg.ndim - 1)) > 0
+            return hh.at[idx].set(jnp.where(mask, gg.astype(hh.dtype),
+                                            hh[idx]))
+        h = jax.tree.map(leaf, state["h"], G)
+        hv = state["h_valid"].at[idx].set(
+            jnp.maximum(state["h_valid"][idx], act))
+        return h, hv
+
+    @staticmethod
+    def measure_beta(G: Any, h: Any) -> jnp.ndarray:
+        """beta* = <G, h> / ||h||^2  (Eq. 20) — the single authority both
+        the server aggregation and ``fl.steps.stale_step`` call."""
+        return stale.optimal_beta(G, h)

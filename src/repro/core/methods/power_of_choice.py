@@ -1,0 +1,48 @@
+"""Power-of-choice loss-ranked baseline (Cho et al.; the multi-model FL
+selection policies of Bhuyan & Moharir, PAPERS.md): per task, draw a
+uniform candidate set of processors and activate the k highest-loss
+candidates.
+
+Selection is biased towards high-loss clients by construction, so the
+unbiased d/(B p) coefficients do not apply: the aggregation weights are the
+d-normalized FedAvg weights over the selected cohort (||H||_1 = 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.methods.base import MethodStrategy, register
+from repro.core.methods.mixins import UniformSamplingMixin
+
+CANDIDATE_FACTOR = 2    # candidate set size = factor * k (capped at V)
+
+
+@register("power_of_choice")
+class PowerOfChoiceMethod(UniformSamplingMixin, MethodStrategy):
+    distributed_ok = True
+    uses_loss_stats = True      # candidate ranking needs the loss reports
+
+    def sample(self, key, p, ctx, losses_ns=None):
+        V, S = p.shape
+        k = max(1, int(round(ctx.m / S)))           # active processors/task
+        n_cand = min(V, CANDIDATE_FACTOR * k)
+        losses_v = sampling.processor_budget_utilities(losses_ns, ctx.B)
+        avail_v = sampling.processor_budget_utilities(
+            ctx.avail.astype(jnp.float32), ctx.B)
+
+        def one_task(k_s, loss_col, avail_col):
+            perm = jax.random.permutation(k_s, V)
+            cand = jnp.zeros((V,)).at[perm[:n_cand]].set(1.0) * avail_col
+            score = jnp.where(cand > 0, loss_col, -jnp.inf)
+            _, top = jax.lax.top_k(score, k)
+            act = jnp.zeros((V,)).at[top].set(1.0)
+            return act * cand                       # drop -inf fillers
+
+        keys = jax.random.split(key, S)
+        return jax.vmap(one_task, in_axes=(0, 1, 1), out_axes=1)(
+            keys, losses_v, avail_v)
+
+    def coefficients(self, d_v, B_v, p_v, act_v):
+        w = act_v * d_v / B_v
+        return w / jnp.maximum(jnp.sum(w), 1e-30)

@@ -1,0 +1,19 @@
+"""RoundRobin-GVR baseline (Fig. 4): only model (round mod S) trains each
+round, sampled by gradient norms within that model."""
+from __future__ import annotations
+
+from repro.core import sampling
+from repro.core.methods.base import MethodStrategy, register
+
+
+@register("roundrobin_gvr")
+class RoundRobinGVRMethod(MethodStrategy):
+    needs_all_updates = True
+    uses_loss_stats = False
+    needs_grad_norms = True
+
+    def probabilities(self, ctx, losses_ns, norms_ns=None):
+        avail = sampling.roundrobin_mask(
+            ctx.avail.astype(norms_ns.dtype), ctx.round).astype(bool)
+        return sampling.gvr_probabilities(norms_ns, ctx.d, ctx.B,
+                                          avail, ctx.m)

@@ -1,0 +1,44 @@
+"""SCAFFOLD baseline: control-variate corrected local SGD (g_i + c - c_i)
+with uniform sampling and unbiased aggregation.  The server keeps the
+global variate c and the per-client variates c_i."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, stale
+from repro.core.methods.base import MethodStrategy, register
+from repro.core.methods.mixins import UniformSamplingMixin
+
+DEFAULT_LOCAL_EPOCHS = 5
+
+
+@register("scaffold")
+class ScaffoldMethod(UniformSamplingMixin, MethodStrategy):
+
+    def init_state(self, params, n_clients):
+        return {"c": jax.tree.map(jnp.zeros_like, params),
+                "ci": stale.init_stale_store(params, n_clients)}
+
+    def local_correction(self, state, idx):
+        # g_i <- g_i + (c - c_i) for the cohort
+        return jax.tree.map(lambda ci, c: c[None] - ci[idx],
+                            state["ci"], state["c"])
+
+    def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
+                  round_idx):
+        new_w = aggregation.aggregate(w, G, coeff)
+        K = getattr(self.cfg, "local_epochs", DEFAULT_LOCAL_EPOCHS)
+        n = d_col.shape[0]
+        ci, c = state["ci"], state["c"]
+
+        def upd_ci(cii, cc, g):
+            mask = act.reshape((-1,) + (1,) * (g.ndim - 1)) > 0
+            new_rows = jnp.where(mask, cii[idx] - cc[None] + g / (K * lr),
+                                 cii[idx])
+            return cii.at[idx].set(new_rows)
+
+        new_ci = jax.tree.map(upd_ci, ci, c, G)
+        dc = jax.tree.map(lambda a, b: jnp.sum(a - b, axis=0) / n, new_ci, ci)
+        new_c = jax.tree.map(lambda cc, d_: cc + d_, c, dc)
+        return new_w, {"c": new_c, "ci": new_ci}, {}

@@ -1,0 +1,41 @@
+"""Shared aggregation rule of the stale variance-reduced family (Eq. 18):
+
+    Delta = sum_i (d_i/B_i) beta_i h_i  +  sum_{active} P_i (G_i - beta_i h_i)
+
+FedVARP (beta = 1), FedStale (beta const), MMFL-StaleVR (beta* of Eq. 20,
+needs all-client fresh G) and MMFL-StaleVRE (beta estimated by Eq. 21, zero
+overhead) differ ONLY in how beta is produced — subclasses override
+``_beta``.  The store refresh happens after the delta is applied, exactly as
+in the paper's Algorithm 2."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, stale
+from repro.core.methods.base import MethodStrategy
+from repro.core.methods.mixins import StaleStoreMixin
+
+
+class StaleVRFamily(StaleStoreMixin, MethodStrategy):
+
+    def _beta(self, state: Dict[str, Any], G: Any, h_cohort: Any,
+              act: jnp.ndarray, idx: jnp.ndarray, round_idx: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Per-client beta [N] (pre h_valid masking) + updated state."""
+        raise NotImplementedError
+
+    def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
+                  round_idx):
+        hv = state["h_valid"]
+        h_cohort = jax.tree.map(lambda x: x[idx], state["h"])
+        beta_all, state = self._beta(state, G, h_cohort, act, idx, round_idx)
+        beta_all = beta_all * hv                    # stale term only if valid
+        # processors of client i share h_i: sum_b (d/B) beta h = d beta h
+        sm = stale.stale_mean(state["h"], d_col * beta_all)
+        delta = aggregation.stale_delta(coeff, G, h_cohort, beta_all[idx], sm)
+        new_w = aggregation.apply_delta(w, delta)
+        h, hv = self.refresh(state, G, act, idx)
+        return new_w, {**state, "h": h, "h_valid": hv}, {"beta": beta_all}

@@ -1,0 +1,18 @@
+"""MMFL-StaleVR (Thm 3/10): loss-based sampling with the optimal staleness
+coefficient beta* = <G, h>/||h||^2 (Eq. 20).  Measuring beta* exactly needs
+every client's fresh update each round (paper Sec. 5) — the overhead
+StaleVRE removes."""
+from __future__ import annotations
+
+from repro.core.methods.base import register
+from repro.core.methods.mixins import LossSamplingMixin
+from repro.core.methods.stale_family import StaleVRFamily
+
+
+@register("stalevr")
+class StaleVRMethod(LossSamplingMixin, StaleVRFamily):
+    needs_all_updates = True
+
+    def _beta(self, state, G, h_cohort, act, idx, round_idx):
+        # G covers all N clients here (idx == arange(N))
+        return self.measure_beta(G, state["h"]), state

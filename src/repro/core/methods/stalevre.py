@@ -1,0 +1,41 @@
+"""MMFL-StaleVRE (Eq. 21): the zero-overhead estimator of the optimal
+staleness coefficient.  Active clients get beta measured against the stored
+h (Eq. 20); inactive clients get a linear extrapolation along the observed
+decay — no extra computation or communication vs LVR."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import stale
+from repro.core.methods.base import register
+from repro.core.methods.mixins import LossSamplingMixin
+from repro.core.methods.stale_family import StaleVRFamily
+
+
+def _init_beta_state(n_clients: int) -> stale.BetaState:
+    """Per-task BetaState over [N] arrays (elementwise math is shape-free)."""
+    z = jnp.zeros((n_clients,), jnp.float32)
+    return stale.BetaState(beta_hat=jnp.ones((n_clients,), jnp.float32),
+                           beta_last=jnp.ones((n_clients,), jnp.float32),
+                           t_hat=z, t_last=z)
+
+
+@register("stalevre")
+class StaleVREMethod(LossSamplingMixin, StaleVRFamily):
+
+    def init_state(self, params, n_clients):
+        state = super().init_state(params, n_clients)
+        state["beta"] = _init_beta_state(n_clients)
+        return state
+
+    def _beta(self, state, G, h_cohort, act, idx, round_idx):
+        hv = state["h_valid"]
+        est = stale.estimate_beta(state["beta"], round_idx)          # [N]
+        measured = self.measure_beta(G, h_cohort)                    # [A]
+        beta_all = est.at[idx].set(jnp.where(act > 0, measured, est[idx]))
+        n = hv.shape[0]
+        active_n = jnp.zeros((n,)).at[idx].set(act * hv[idx])
+        measured_n = jnp.zeros((n,)).at[idx].set(measured)
+        new_bstate = stale.update_beta_state(state["beta"], active_n,
+                                             measured_n, round_idx)
+        return beta_all, {**state, "beta": new_bstate}

@@ -1,32 +1,38 @@
-"""MMFL server: the paper's training procedure (Sec. 3.2) end to end.
+"""MMFL server: the paper's training procedure (Sec. 3.2) as a
+method-agnostic round engine over pluggable strategies.
 
-Orchestrates S concurrent FL tasks over N clients with heterogeneous
-processor budgets B_i, running one of the sampling/aggregation methods:
+The engine knows NOTHING about individual methods — every round is
 
-  random | lvr | gvr | stalevr | stalevre | roundrobin_gvr |
-  fedvarp | fedstale | mifa | scaffold | full
+  stats -> strategy.probabilities -> strategy.sample -> cohort gather ->
+  local training -> strategy.aggregate -> convergence monitors (Sec. 3.3)
 
-Faithful to the paper: independent processor-level sampling from the
-optimized distribution, unbiased aggregation coefficients d/(B p), E local
-epochs of minibatch SGD, stale stores/β handling per method, and the
-convergence monitors of Sec. 3.3 logged every round.
+with the method family (``random | lvr | gvr | roundrobin_gvr | stalevr |
+stalevre | fedvarp | fedstale | mifa | scaffold | full | flammable |
+power_of_choice``) provided by ``repro.core.methods`` (see its docs for how
+to add one).
+
+Performance: each task's per-round heavy work — cohort gather, K local
+epochs, the strategy's aggregation rule, and the method-state update — is
+fused into ONE jitted function per (task, method), built once at
+construction and reused every round.  ``ServerConfig(jit_round=False)``
+falls back to the legacy orchestration (jitted local-training pieces, eager
+aggregation) — ``benchmarks/engine_bench.py`` reports the rounds/sec delta.
 
 This engine drives the paper-reproduction experiments (CNN/LSTM tasks) on a
 single host; the *distributed* production path for the assigned
-architectures lives in ``repro.fl.steps`` and shares the same core math
-(``core.sampling`` / ``core.aggregation`` / ``core.stale``).
+architectures lives in ``repro.fl.steps`` and consumes the same strategy
+objects for its sampling and stale-beta logic.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, convergence, sampling, stale
+from repro.core import convergence, methods, stale
 
 
 @dataclasses.dataclass
@@ -60,6 +66,7 @@ class ServerConfig:
     lr_decay: float = 1.0             # eta_tau = lr * decay^tau
     fedstale_beta: float = 0.5        # global beta for fedstale
     seed: int = 0
+    jit_round: bool = True            # fused per-(task, method) round jit
 
 
 class MMFLServer:
@@ -90,91 +97,150 @@ class MMFLServer:
             self.params.append(t.model.init(k))
         self.round = 0
         self.last_beta: Dict[int, Any] = {}
+        self.strategy = methods.make(cfg.method, cfg)
         # fixed cohort size for methods where only sampled clients train
-        # (expected actives per task = m/S; 2.5x margin, overflow dropped)
-        self.cohort_size = int(min(
-            self.N, max(8, np.ceil(2.5 * self.m / self.S) + 4)))
-        self._setup_method_state()
-        self._build_jitted()
+        # (strategy-advised: depends on how the sampler spreads the budget)
+        self.cohort_size = self.strategy.cohort_size(self.N, self.m, self.S)
+        self.state = [self.strategy.init_state(self.params[s], self.N)
+                      for s in range(self.S)]
+        self._build_engine()
 
     # ------------------------------------------------------------------
-    def _setup_method_state(self):
-        m = self.cfg.method
-        self.h = None
-        self.beta_state = None
-        self.scaffold_c = None
-        self.scaffold_ci = None
-        if m in ("stalevr", "stalevre", "fedvarp", "fedstale", "mifa"):
-            self.h = [stale.init_stale_store(p, self.N) for p in self.params]
-            self.h_valid = jnp.zeros((self.N, self.S))        # 1 after first update
-        if m == "stalevre":
-            self.beta_state = stale.init_beta_state(self.N, self.S)
-        if m == "scaffold":
-            self.scaffold_c = [jax.tree.map(jnp.zeros_like, p) for p in self.params]
-            self.scaffold_ci = [stale.init_stale_store(p, self.N)
-                                for p in self.params]
+    # per-task jitted computations
+    # ------------------------------------------------------------------
+    def _make_local_all(self, t: Task):
+        loss_fn = t.model.loss_fn
+        E, mb = self.cfg.local_epochs, self.cfg.batch_size
+
+        def local_update(params, key, x, y, count, lr, corr):
+            """One client's K=E epochs of minibatch SGD.  Returns
+            (G = w0 - w_final, first-epoch loss)."""
+            def step(carry, k):
+                p, first_loss, i = carry
+                idx = jax.random.randint(k, (mb,), 0, jnp.maximum(count, 1))
+                batch = {"x": x[idx], "y": y[idx]}
+                l, g = jax.value_and_grad(loss_fn)(p, batch)
+                if corr is not None:
+                    g = jax.tree.map(lambda a, b: a + b, g, corr)
+                p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+                first_loss = jnp.where(i == 0, l, first_loss)
+                return (p, first_loss, i + 1), None
+
+            keys = jax.random.split(key, E)
+            (pf, l0, _), _ = jax.lax.scan(step, (params, 0.0, 0), keys)
+            G = jax.tree.map(lambda a, b: a - b, params, pf)
+            return G, l0
+
+        def local_all(params, keys, data, lr, corr=None):
+            """vmap over the cohort's clients -> (G [A,...], losses [A])."""
+            if corr is None:
+                A = keys.shape[0]
+                corr = jax.tree.map(
+                    lambda a: jnp.zeros((A,) + (1,) * a.ndim), params)
+            return jax.vmap(
+                lambda k, x, y, c, cr: local_update(params, k, x, y, c, lr, cr)
+            )(keys, data["x"], data["y"], data["count"], corr)
+
+        return local_all
+
+    def _make_loss_all(self, t: Task):
+        loss_fn = t.model.loss_fn
+
+        def loss_all(params, data):
+            """Per-client loss estimate on a (subsampled) local batch.
+            Padded rows wrap real rows, so the padded-batch mean is a
+            reweighted local loss."""
+            cap = data["x"].shape[1]
+            take = min(cap, 64)
+
+            def one(x, y, count):
+                batch = {"x": x[:take], "y": y[:take]}
+                return loss_fn(params, batch)
+
+            return jax.vmap(one)(data["x"], data["y"], data["count"])
+
+        return loss_all
 
     # ------------------------------------------------------------------
-    # jitted per-task computations
-    # ------------------------------------------------------------------
-    def _build_jitted(self):
-        self._local_all = []
-        self._loss_all = []
-        self._eval = []
+    def _build_engine(self):
+        """Per task: a stats function (sampler inputs) and ONE fused round
+        function (cohort gather + local training + strategy aggregation +
+        metrics) built per (task, method) and jitted once."""
+        strat = self.strategy
+        d_v = self._client_to_proc(self.d)                    # [V,S]
+        B_v = self.B[self.proc_client]                        # [V]
+        N, cohort = self.N, self.cohort_size
+
+        self._stats, self._round_fn = [], []
+        self._loss_all, self._eval = [], []
         for s, t in enumerate(self.tasks):
-            loss_fn = t.model.loss_fn
-            E, mb = self.cfg.local_epochs, self.cfg.batch_size
+            local_all = self._make_local_all(t)
+            loss_all = self._make_loss_all(t)
+            # legacy mode jits the pieces and orchestrates eagerly — the
+            # pre-fusion baseline engine_bench compares against
+            local_impl = (local_all if self.cfg.jit_round
+                          else jax.jit(local_all))
+            loss_impl = (loss_all if self.cfg.jit_round
+                         else jax.jit(loss_all))
+            d_col = self.d[:, s]
+            d_v_col, proc = d_v[:, s], self.proc_client
 
-            def local_update(params, key, x, y, count, lr, corr,
-                             loss_fn=loss_fn, E=E, mb=mb):
-                """One client's K=E epochs of minibatch SGD.  Returns
-                (G = w0 - w_final, first-epoch loss)."""
-                n_steps = E
+            def stats_fn(params, data, key, lr, loss_all=loss_impl,
+                         local_all=local_impl):
+                """Sampler inputs; for needs-all methods also every
+                client's fresh update G (and its norm if the sampler
+                consumes gradient magnitudes)."""
+                losses = loss_all(params, data)
+                if not strat.needs_all_updates:
+                    return losses, None, None
+                keys = jax.random.split(key, N)
+                G, _ = local_all(params, keys, data, lr)
+                norms = None
+                if strat.needs_grad_norms:
+                    norms = jnp.sqrt(jnp.maximum(
+                        stale.batched_tree_dot(G, G), 0.0))
+                return losses, G, norms
 
-                def step(carry, k):
-                    p, first_loss, i = carry
-                    idx = jax.random.randint(k, (mb,), 0, jnp.maximum(count, 1))
-                    batch = {"x": x[idx], "y": y[idx]}
-                    l, g = jax.value_and_grad(loss_fn)(p, batch)
-                    if corr is not None:
-                        g = jax.tree.map(lambda a, b: a + b, g, corr)
-                    p = jax.tree.map(lambda a, b: a - lr * b, p, g)
-                    first_loss = jnp.where(i == 0, l, first_loss)
-                    return (p, first_loss, i + 1), None
+            def round_fn(params, state, train_in, p_col, act_v, losses,
+                         data, lr, round_idx, local_all=local_impl,
+                         d_col=d_col, d_v_col=d_v_col):
+                """The fused per-round work for one task.  ``train_in`` is
+                the task's PRNG key (cohort methods train here) or the
+                precomputed all-client G (needs-all methods)."""
+                coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
+                # client-level activity: l processors of client i on model
+                # s behave as one update scaled by l (Remark 1)
+                coeff_client = (jnp.zeros((N,)).at[proc].add(coeffs_v))
+                act_client = (jnp.zeros((N,)).at[proc]
+                              .add(act_v) > 0).astype(jnp.float32)
+                if strat.needs_all_updates:
+                    idx = jnp.arange(N)
+                    G, coeff, act = train_in, coeff_client, act_client
+                else:
+                    # cohort path: only the sampled clients run training
+                    idx = jnp.argsort(-act_client)[:cohort]
+                    keys = jax.random.split(train_in, cohort)
+                    data_c = jax.tree.map(lambda x: x[idx], data)
+                    corr = strat.local_correction(state, idx)
+                    G, _ = local_all(params, keys, data_c, lr, corr)
+                    coeff, act = coeff_client[idx], act_client[idx]
+                new_w, new_state, extras = strat.aggregate(
+                    params, state, G, coeff, act, idx,
+                    d_col=d_col, lr=lr, round_idx=round_idx)
+                mets = convergence.round_metrics(coeffs_v, losses[proc],
+                                                 d_v_col, B_v)
+                mets["loss"] = jnp.sum(d_col * losses)
+                return new_w, new_state, mets, extras
 
-                keys = jax.random.split(key, n_steps)
-                (pf, l0, _), _ = jax.lax.scan(step, (params, 0.0, 0), keys)
-                G = jax.tree.map(lambda a, b: a - b, params, pf)
-                return G, l0
-
-            def local_all(params, keys, data, lr, corr=None):
-                """vmap over all N clients -> (G [N,...], losses [N])."""
-                if corr is None:
-                    A = keys.shape[0]
-                    corr = jax.tree.map(
-                        lambda a: jnp.zeros((A,) + (1,) * a.ndim), params)
-                return jax.vmap(
-                    lambda k, x, y, c, cr: local_update(params, k, x, y, c, lr, cr)
-                )(keys, data["x"], data["y"], data["count"], corr)
-
-            def loss_all(params, data, loss_fn=loss_fn):
-                """Per-client loss estimate on a (subsampled) local batch.
-                Padded rows wrap real rows, so the padded-batch mean is a
-                reweighted local loss."""
-                cap = data["x"].shape[1]
-                take = min(cap, 64)
-
-                def one(x, y, count):
-                    batch = {"x": x[:take], "y": y[:take]}
-                    return loss_fn(params, batch)
-
-                return jax.vmap(one)(data["x"], data["y"], data["count"])
-
+            if self.cfg.jit_round:
+                stats_fn = jax.jit(stats_fn)
+                round_fn = jax.jit(round_fn)
+            self._stats.append(stats_fn)
+            self._round_fn.append(round_fn)
             def evaluate(params, test, acc=t.model.accuracy):
                 return acc(params, test)
 
-            self._local_all.append(jax.jit(local_all))
-            self._loss_all.append(jax.jit(loss_all))
+            self._loss_all.append(jax.jit(loss_all))      # tests / probes
             self._eval.append(jax.jit(evaluate))
 
     # ------------------------------------------------------------------
@@ -184,194 +250,66 @@ class MMFLServer:
 
     def _probabilities(self, losses_ns: Optional[jnp.ndarray],
                        norms_ns: Optional[jnp.ndarray]) -> jnp.ndarray:
-        m = self.cfg.method
-        if m in ("lvr", "stalevr", "stalevre"):
-            return sampling.lvr_probabilities(losses_ns, self.d, self.B,
-                                              self.avail, self.m)
-        if m == "gvr":
-            return sampling.gvr_probabilities(norms_ns, self.d, self.B,
-                                              self.avail, self.m)
-        if m == "roundrobin_gvr":
-            avail = sampling.roundrobin_mask(self.avail.astype(jnp.float32),
-                                             self.round).astype(bool)
-            return sampling.gvr_probabilities(norms_ns, self.d, self.B,
-                                              avail, self.m)
-        if m == "full":
-            # every processor trains every available model (B_i slots cover
-            # S_i models; probability 1 caps at one model per processor but
-            # full participation is emulated with coeff d/B and all active)
-            return jnp.ones((self.V, self.S)) * self._client_to_proc(
-                self.avail.astype(jnp.float32))
-        # random / fedvarp / fedstale / mifa / scaffold: uniform sampling
-        return sampling.random_probabilities(self.d, self.B, self.avail, self.m)
+        """Strategy delegation (kept as a method: benchmarks monkeypatch it
+        to pin a fixed sampling distribution, e.g. Fig. 5)."""
+        return self.strategy.probabilities(self, losses_ns, norms_ns)
+
+    # -- method-state views (stale family / stalevre diagnostics) --------
+    @property
+    def h_valid(self) -> jnp.ndarray:
+        """[N,S]: 1 once client i's stale store for task s was refreshed."""
+        if not self.state or "h_valid" not in self.state[0]:
+            raise AttributeError(
+                f"h_valid: method {self.cfg.method!r} keeps no stale store")
+        return jnp.stack([st["h_valid"] for st in self.state], axis=1)
+
+    @property
+    def beta_state(self) -> stale.BetaState:
+        """StaleVRE bookkeeping stacked back to the paper's [N,S] layout."""
+        if not self.state or "beta" not in self.state[0]:
+            raise AttributeError(
+                f"beta_state: method {self.cfg.method!r} keeps no beta "
+                f"estimator state")
+        cols = [st["beta"] for st in self.state]
+        return stale.BetaState(*[jnp.stack(f, axis=1)
+                                 for f in zip(*cols)])
 
     # ------------------------------------------------------------------
     def run_round(self) -> Dict[str, Any]:
         cfg = self.cfg
-        method = cfg.method
-        lr = cfg.lr * (cfg.lr_decay ** self.round)
+        lr = jnp.float32(cfg.lr * (cfg.lr_decay ** self.round))
+        round_idx = jnp.float32(self.round)
         self.key, k_sample, *k_local = jax.random.split(self.key, 2 + self.S)
 
         # ---- 1) stats for the sampler -----------------------------------
-        losses_ns = jnp.stack(
-            [self._loss_all[s](self.params[s], self.tasks[s].data)
-             for s in range(self.S)], axis=1)                # [N,S]
-        # Methods whose math requires *every* client to train *all* models
-        # (the computation overhead the paper's LVR/StaleVRE avoid):
-        needs_all_G = method in ("gvr", "roundrobin_gvr", "stalevr", "full")
-        G_all, corr_all = [], []
-        for s in range(self.S):
-            corr = None
-            if method == "scaffold":
-                # g_i <- g_i + (c - c_i)
-                corr = jax.tree.map(lambda ci, c: c[None] - ci,
-                                    self.scaffold_ci[s], self.scaffold_c[s])
-            corr_all.append(corr)
-            if needs_all_G:
-                keys = jax.random.split(k_local[s], self.N)
-                G, _ = self._local_all[s](self.params[s], keys,
-                                          self.tasks[s].data, lr, corr)
-                G_all.append(G)
-            else:
-                G_all.append(None)
+        stats = [self._stats[s](self.params[s], self.tasks[s].data,
+                                k_local[s], lr) for s in range(self.S)]
+        losses_ns = jnp.stack([st[0] for st in stats], axis=1)    # [N,S]
+        norms_ns = (jnp.stack([st[2] for st in stats], axis=1)
+                    if self.strategy.needs_grad_norms else None)
 
-        norms_ns = None
-        if method in ("gvr", "roundrobin_gvr"):
-            norms_ns = jnp.stack(
-                [jnp.sqrt(jnp.maximum(stale.batched_tree_dot(G_all[s], G_all[s]),
-                                      0.0)) for s in range(self.S)], axis=1)
+        # ---- 2) sampling -------------------------------------------------
+        p = self._probabilities(losses_ns, norms_ns)              # [V,S]
+        active = self.strategy.sample(k_sample, p, self, losses_ns)
 
-        # ---- 2) sampling --------------------------------------------------
-        p = self._probabilities(losses_ns, norms_ns)          # [V,S]
-        if method == "full":
-            active = self._client_to_proc(self.avail.astype(jnp.float32))
-        else:
-            active = sampling.sample_assignment(k_sample, p)  # [V,S]
-
-        # ---- 3) aggregate per task ---------------------------------------
+        # ---- 3) fused per-task round ------------------------------------
         metrics: Dict[str, Any] = {"round": self.round}
-        d_v = self._client_to_proc(self.d)                    # [V,S]
-        B_v = self.B[self.proc_client]                        # [V]
         for s in range(self.S):
-            # client-level activity: l processors of client i on model s
-            # behave as one update scaled by l (Remark 1)
-            act_v = active[:, s]
-            p_v = p[:, s]
-            coeffs_v = aggregation.unbiased_coeffs(d_v[:, s], B_v, p_v, act_v)
-            # collapse processors -> clients (sum of coefficients)
-            coeff_client = jnp.zeros((self.N,)).at[self.proc_client].add(coeffs_v)
-            act_client = (jnp.zeros((self.N,)).at[self.proc_client]
-                          .add(act_v) > 0).astype(jnp.float32)
-            if G_all[s] is None:
-                # cohort path: only the sampled clients run local training
-                idx = jnp.argsort(-act_client)[: self.cohort_size]
-                keys = jax.random.split(k_local[s], self.cohort_size)
-                data_cohort = jax.tree.map(lambda x: x[idx],
-                                           self.tasks[s].data)
-                corr_c = (None if corr_all[s] is None else
-                          jax.tree.map(lambda x: x[idx], corr_all[s]))
-                G_cohort, _ = self._local_all[s](self.params[s], keys,
-                                                 data_cohort, lr, corr_c)
-                self._aggregate_task(s, coeff_client[idx], act_client[idx],
-                                     G_cohort, losses_ns, idx)
-            else:
-                idx = jnp.arange(self.N)
-                self._aggregate_task(s, coeff_client, act_client, G_all[s],
-                                     losses_ns, idx)
-            mets = convergence.round_metrics(
-                coeffs_v, self._client_to_proc(losses_ns)[:, s],
-                d_v[:, s], B_v)
-            metrics[f"H1/{s}"] = float(mets["H1"])
-            metrics[f"Zp/{s}"] = float(mets["Zp"])
-            metrics[f"Zl/{s}"] = float(mets["Zl"])
-            metrics[f"loss/{s}"] = float(jnp.sum(self.d[:, s] * losses_ns[:, s]))
+            train_in = stats[s][1] if self.strategy.needs_all_updates \
+                else k_local[s]
+            new_w, new_state, mets, extras = self._round_fn[s](
+                self.params[s], self.state[s], train_in, p[:, s],
+                active[:, s], losses_ns[:, s], self.tasks[s].data,
+                lr, round_idx)
+            self.params[s] = new_w
+            self.state[s] = new_state
+            if "beta" in extras:
+                self.last_beta[s] = extras["beta"]    # logged for Fig 3
+            for k in ("H1", "Zp", "Zl", "loss"):
+                metrics[f"{k}/{s}"] = float(mets[k])
 
         self.round += 1
         return metrics
-
-    # ------------------------------------------------------------------
-    def _refresh_h(self, s: int, G: Any, act: jnp.ndarray, idx: jnp.ndarray):
-        """h_i <- G_i for active cohort members (scatter at client idx)."""
-        def leaf(hh, gg):
-            mask = act.reshape((-1,) + (1,) * (gg.ndim - 1)) > 0
-            cur = hh[idx]
-            return hh.at[idx].set(jnp.where(mask, gg.astype(hh.dtype), cur))
-        self.h[s] = jax.tree.map(leaf, self.h[s], G)
-        self.h_valid = self.h_valid.at[idx, s].set(
-            jnp.maximum(self.h_valid[idx, s], act))
-
-    def _aggregate_task(self, s: int, coeff: jnp.ndarray, act: jnp.ndarray,
-                        G: Any, losses_ns: jnp.ndarray, idx: jnp.ndarray):
-        """Apply the method's aggregation rule for task s.
-
-        coeff/act: [A] cohort-level coefficients / participation (0 rows are
-        padding); G: cohort updates [A, ...]; idx: [A] client ids (for
-        all-client methods A == N and idx == arange(N))."""
-        method = self.cfg.method
-        w = self.params[s]
-
-        if method in ("random", "lvr", "gvr", "roundrobin_gvr", "full"):
-            self.params[s] = aggregation.aggregate(w, G, coeff)
-            return
-
-        if method == "scaffold":
-            self.params[s] = aggregation.aggregate(w, G, coeff)
-            # control-variate updates for active cohort members
-            lr = self.cfg.lr * (self.cfg.lr_decay ** self.round)
-            K = self.cfg.local_epochs
-            ci, c = self.scaffold_ci[s], self.scaffold_c[s]
-
-            def upd_ci(cii, cc, g):
-                mask = act.reshape((-1,) + (1,) * (g.ndim - 1)) > 0
-                new_rows = jnp.where(mask, cii[idx] - cc[None] + g / (K * lr),
-                                     cii[idx])
-                return cii.at[idx].set(new_rows)
-
-            new_ci = jax.tree.map(upd_ci, ci, c, G)
-            dc = jax.tree.map(
-                lambda a, b: jnp.sum(a - b, axis=0) / self.N, new_ci, ci)
-            self.scaffold_ci[s] = new_ci
-            self.scaffold_c[s] = jax.tree.map(lambda cc, d_: cc + d_, c, dc)
-            return
-
-        if method == "mifa":
-            self._refresh_h(s, G, act, idx)
-            weights = self.d[:, s] * self.h_valid[:, s]
-            delta = stale.stale_mean(self.h[s], weights)
-            self.params[s] = aggregation.apply_delta(w, delta)
-            return
-
-        # stale variance-reduced family: fedvarp (beta=1), fedstale (beta
-        # const), stalevr (beta* Eq.20), stalevre (beta estimated Eq.21).
-        hv = self.h_valid[:, s]                              # [N]
-        h_cohort = jax.tree.map(lambda x: x[idx], self.h[s])
-        if method == "fedvarp":
-            beta_all = hv                                    # 1 where valid
-        elif method == "fedstale":
-            beta_all = self.cfg.fedstale_beta * hv
-        elif method == "stalevr":
-            # needs every client's fresh G (paper Sec. 5): idx == arange(N)
-            beta_all = stale.optimal_beta(G, self.h[s]) * hv
-        else:  # stalevre: measured beta for the cohort, Eq.21 elsewhere
-            est = stale.estimate_beta(self.beta_state,
-                                      jnp.float32(self.round))[:, s]
-            measured = stale.optimal_beta(G, h_cohort)       # [A]
-            beta_all = est
-            beta_all = beta_all.at[idx].set(
-                jnp.where(act > 0, measured, est[idx]))
-            beta_all = beta_all * hv
-            active_ns = jnp.zeros((self.N, self.S)).at[idx, s].set(
-                act * hv[idx])
-            measured_ns = jnp.zeros((self.N, self.S)).at[idx, s].set(measured)
-            self.beta_state = stale.update_beta_state(
-                self.beta_state, active_ns, measured_ns,
-                jnp.float32(self.round))
-        self.last_beta[s] = beta_all                 # logged for Fig 3
-        # processors of client i share h_i: sum_b (d/B) beta h = d beta h
-        sm = stale.stale_mean(self.h[s], self.d[:, s] * beta_all)
-        delta = aggregation.stale_delta(coeff, G, h_cohort, beta_all[idx], sm)
-        self.params[s] = aggregation.apply_delta(w, delta)
-        self._refresh_h(s, G, act, idx)
 
     # ------------------------------------------------------------------
     def evaluate(self) -> List[float]:

@@ -101,3 +101,54 @@ def make_server(method: str, n_models: int = 3, seed: int = 0,
     tasks, B, avail = build_setting(n_models, seed=seed, small=small)
     cfg = ServerConfig(method=method, seed=seed, **(rounds_cfg or {}))
     return MMFLServer(tasks, B, avail, cfg)
+
+
+# ---------------------------------------------------------------------------
+# micro setting: linear softmax tasks (seconds-fast compiles)
+# ---------------------------------------------------------------------------
+
+
+def _linear_adapter(n_feat: int, n_classes: int) -> ModelAdapter:
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.01 * jax.random.normal(k1, (n_feat, n_classes)),
+                "b": jnp.zeros((n_classes,))}
+
+    def loss_fn(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], 1))
+
+    def accuracy(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        return jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+
+    return ModelAdapter(init=init, loss_fn=loss_fn, accuracy=accuracy)
+
+
+def build_linear_setting(n_models: int = 2, n_clients: int = 16,
+                         n_feat: int = 16, n_classes: int = 4,
+                         cap: int = 32, seed: int = 0
+                         ) -> Tuple[List[Task], np.ndarray, np.ndarray]:
+    """Tiny separable linear-softmax tasks with heterogeneous budgets.
+
+    Compiles in milliseconds — used by the all-methods registry tests and
+    the round-engine benchmark, where the CNN world's compute would mask
+    the orchestration costs under measurement."""
+    rng = np.random.default_rng(seed)
+    tasks: List[Task] = []
+    for s in range(n_models):
+        W = rng.normal(size=(n_feat, n_classes))
+        x = rng.normal(size=(n_clients, cap, n_feat)).astype(np.float32)
+        y = np.argmax(x @ W + 0.5 * rng.normal(
+            size=(n_clients, cap, n_classes)), axis=-1)
+        xt = rng.normal(size=(64, n_feat)).astype(np.float32)
+        yt = np.argmax(xt @ W, axis=-1)
+        tasks.append(Task(
+            name=f"linear-{s}", model=_linear_adapter(n_feat, n_classes),
+            data={"x": jnp.asarray(x), "y": jnp.asarray(y),
+                  "count": jnp.full((n_clients,), cap, jnp.int32)},
+            test={"x": jnp.asarray(xt), "y": jnp.asarray(yt)}))
+    B = rng.integers(1, 4, n_clients)
+    avail = np.ones((n_clients, n_models), bool)
+    return tasks, B, avail

@@ -23,6 +23,13 @@ Two execution modes:
 
 Plus ``stale`` aggregation (Eq. 18) on top of fedavg, and the serving pair
 ``prefill_step`` / ``serve_step`` for the decode input shapes.
+
+Method math comes from ``repro.core.methods`` / ``repro.core.aggregation``
+(the same strategy objects the single-host server runs): the stale step's
+beta is ``StaleStoreMixin.measure_beta`` (Eq. 20) and its correction stream
+is ``aggregation.stale_correction`` (Eq. 18) — this module adds only the
+distributed concerns (sharding constraints, dtype of the cross-client
+reduce, microbatching).
 """
 from __future__ import annotations
 
@@ -35,7 +42,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, FLRoundConfig, InputShape
-from repro.core import stale as stale_mod
+from repro.core import aggregation
+from repro.core.methods import StaleStoreMixin
 from repro.models import sharding as shd
 from repro.models import transformer
 
@@ -220,13 +228,10 @@ def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
                                          - wl.astype(jnp.float32))
                          .astype(stale_dtype), params, w_locals)
         G = jax.lax.with_sharding_constraint(G, _h_shard)
-        beta = stale_mod.optimal_beta(G, h)                  # [C]  (Eq. 20)
-        corr = jax.tree.map(
-            lambda g, hh: jnp.einsum(
-                "c,c...->...", coeff.astype(stale_dtype),
-                g - (beta.reshape((-1,) + (1,) * (hh.ndim - 1))
-                     .astype(stale_dtype)) * hh.astype(stale_dtype)),
-            G, h)
+        beta = StaleStoreMixin.measure_beta(G, h)            # [C]  (Eq. 20)
+        # the correction stream math (in G's dtype = rcfg.stale_dtype) is
+        # the shared Eq. 18 implementation the server strategies use
+        corr = aggregation.stale_correction(coeff, G, h, beta)
         corr = jax.lax.with_sharding_constraint(corr, _p_shard)
         new_params = jax.tree.map(
             lambda a, sm, cr: (a.astype(jnp.float32)
@@ -277,9 +282,16 @@ def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
     return fedavg_step if mode == "fedavg" else weighted_dp_step
 
 
-def build_loss_report_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+def build_loss_report_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                           strategy: Any = None):
     """Forward-only per-client losses f_{i,s}(w^tau) — the only thing
-    MMFL-LVR uploads (scalars), computed on one microbatch per client."""
+    MMFL-LVR uploads (scalars), computed on one microbatch per client.
+
+    When a ``MethodStrategy`` is given and its sampler never consumes loss
+    statistics (uniform baselines), returns None: those methods skip the
+    report upload entirely."""
+    if strategy is not None and not getattr(strategy, "uses_loss_stats", True):
+        return None
     C = shd.dp_size(mesh)
 
     def report(params, batch):

@@ -65,7 +65,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, rcfg: FLRoundConfig,
             compiled = lowered.compile()
             t_compile = time.time()
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = roofline.cost_analysis_dict(compiled)
         coll = roofline.collective_bytes(compiled.as_text())
         record.update({
             "ok": True,

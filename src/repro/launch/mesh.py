@@ -6,14 +6,32 @@ dryrun.py forces 512 host devices before any jax import).
 """
 from __future__ import annotations
 
+from typing import Dict, Sequence, Tuple
+
 import jax
+
+
+def axis_types_kwargs(n_axes: int) -> Dict[str, tuple]:
+    """Version-compat shim: ``jax.sharding.AxisType`` only exists on jax >=
+    0.5 (on 0.4.x every mesh axis is implicitly Auto, and passing the kwarg
+    is impossible).  Returns the ``axis_types=`` kwargs dict when the
+    installed jax supports it, else {} — splat into ``jax.make_mesh``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh_compat(shape: Sequence[int], axes: Tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types on any supported jax."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **axis_types_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
@@ -21,8 +39,7 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     model_axis = min(model_axis, n)
     data = n // model_axis
-    return jax.make_mesh((data, model_axis), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model_axis), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) for the roofline model

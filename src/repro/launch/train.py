@@ -32,7 +32,7 @@ import numpy as np
 from repro.checkpoint import checkpoint
 from repro.configs.base import DEFAULT_ROUND, FLRoundConfig, InputShape
 from repro.configs.registry import get_config
-from repro.core import sampling
+from repro.core import methods
 from repro.data import synthetic
 from repro.fl import steps as fl_steps
 from repro.launch.mesh import make_host_mesh
@@ -56,6 +56,7 @@ def _client_data(rng, cfg, n_clients: int, seq_len: int, per_client: int):
 
 def train(args) -> Dict:
     rng = np.random.default_rng(args.seed)
+    strategy = methods.make(args.method)
     mesh = make_host_mesh()
     C = shd.dp_size(mesh)
     rcfg = dataclasses.replace(
@@ -74,18 +75,20 @@ def train(args) -> Dict:
         params = transformer.init(k, cfg)
         step = fl_steps.build_train_step(cfg, mesh, shape, rcfg,
                                          mode="fedavg")
-        report = fl_steps.build_loss_report_step(cfg, mesh, shape)
+        report = fl_steps.build_loss_report_step(cfg, mesh, shape, strategy)
         data = _client_data(rng, cfg, args.clients, args.seq_len,
                             args.per_client)
         models.append(dict(cfg=cfg, params=params, step=jax.jit(step),
-                           report=jax.jit(report), data=data,
-                           name=f"{arch}#{s}"))
+                           report=jax.jit(report) if report else None,
+                           data=data, name=f"{arch}#{s}"))
 
     N, S = args.clients, len(models)
     avail = jnp.ones((N, S), bool)
     B = jnp.ones((N,))
     d = jnp.full((N, S), 1.0 / N)
     m_budget = args.active_rate * N
+    # clients == processors here (B = 1): the sampler context is [N]-level
+    ctx = methods.SamplerContext(d=d, B=B, avail=avail, m=m_budget)
     history = []
     losses_ns = jnp.ones((N, S))
     os.makedirs(args.out, exist_ok=True)
@@ -93,13 +96,31 @@ def train(args) -> Dict:
     with mesh:
         for r in range(args.rounds):
             t0 = time.time()
+            ctx.round = r
             key, k_sample, k_batch = jax.random.split(key, 3)
-            if args.method == "lvr":
-                p = sampling.lvr_probabilities(losses_ns, d, B, avail,
-                                               m_budget)
-            else:
-                p = sampling.random_probabilities(d, B, avail, m_budget)
-            act = sampling.sample_assignment(k_sample, p)   # [N,S]
+            if r % args.report_every == 0:
+                # scalar loss reports from EVERY client (the paper's only
+                # LVR upload): the sampler sees fresh losses, not ones
+                # frozen at each client's last training round.  Uniform
+                # samplers have report=None and skip the upload entirely.
+                for s, mdl in enumerate(models):
+                    if mdl["report"] is None:
+                        continue
+                    ln = np.array(losses_ns)
+                    for ci in range(int(np.ceil(N / C))):
+                        ids = np.arange(N)[ci * C:(ci + 1) * C]
+                        cohort = np.resize(ids, C)
+                        bidx = rng.integers(0, mdl["data"].shape[1],
+                                            (C, args.local_batch))
+                        toks = np.stack([mdl["data"][c][bi]
+                                         for c, bi in zip(cohort, bidx)])
+                        rep = np.asarray(mdl["report"](
+                            mdl["params"],
+                            {"tokens": jnp.asarray(toks[..., :-1])}))
+                        ln[ids, s] = rep[: len(ids)]
+                    losses_ns = jnp.asarray(ln)
+            p = strategy.probabilities(ctx, losses_ns)
+            act = strategy.sample(k_sample, p, ctx, losses_ns)   # [N,S]
             round_mets = {"round": r}
             for s, mdl in enumerate(models):
                 # ALL active clients for this model, processed in cohorts of
@@ -109,6 +130,12 @@ def train(args) -> Dict:
                 active_ids = np.where(act_s > 0)[0]
                 if len(active_ids) == 0:
                     active_ids = np.array([int(np.argmax(np.asarray(p[:, s])))])
+                act_col = jnp.asarray(act[:, s]).at[active_ids[0]].set(1.0)
+                # the strategy owns the aggregation weighting (unbiased
+                # d/(B p) for the VR family, normalized FedAvg weights for
+                # biased selection like power_of_choice)
+                coeff_n = np.asarray(strategy.coefficients(
+                    d[:, s], B, jnp.clip(p[:, s], 1e-3, None), act_col))
                 n_chunks = int(np.ceil(len(active_ids) / C))
                 params0 = mdl["params"]
                 delta_acc = None
@@ -118,17 +145,14 @@ def train(args) -> Dict:
                     cohort = np.resize(ids, C)        # pad by repeating
                     valid = np.zeros(C)
                     valid[: len(ids)] = 1.0
-                    probs_c = jnp.asarray(np.asarray(p[:, s])[cohort])
-                    dweights_c = (jnp.asarray(np.asarray(d[:, s])[cohort])
-                                  * jnp.asarray(valid))
+                    dweights_c = jnp.asarray(coeff_n[cohort] * valid)
                     bidx = rng.integers(0, mdl["data"].shape[1],
                                         (C, args.local_batch))
                     toks = np.stack([mdl["data"][c][bi]
                                      for c, bi in zip(cohort, bidx)])
                     batch = {"tokens": jnp.asarray(toks[..., :-1])}
                     new_params, mets = mdl["step"](
-                        params0, batch, jnp.clip(probs_c, 1e-3, None),
-                        dweights_c)
+                        params0, batch, jnp.ones((C,)), dweights_c)
                     delta = jax.tree.map(lambda a, b: a - b, params0,
                                          new_params)
                     delta_acc = delta if delta_acc is None else jax.tree.map(
@@ -136,12 +160,16 @@ def train(args) -> Dict:
                     h1 += float(mets["H1"])
                     client_losses = np.asarray(mets["losses"])[: len(ids)]
                     losses_log.append(client_losses)
-                    ln = np.array(losses_ns)
-                    ln[ids, s] = client_losses
-                    losses_ns = jnp.asarray(ln)
                 mdl["params"] = jax.tree.map(lambda a, b: a - b, params0,
                                              delta_acc)
                 all_losses = np.concatenate(losses_log)
+                if mdl["report"] is None or args.report_every > 1:
+                    # keep the sampler's loss view fresh from training
+                    # losses (the report refresh would overwrite this at
+                    # the top of the next round when report_every == 1)
+                    ln = np.array(losses_ns)
+                    ln[active_ids, s] = all_losses
+                    losses_ns = jnp.asarray(ln)
                 round_mets[f"loss/{mdl['name']}"] = float(np.mean(all_losses))
                 round_mets[f"H1/{mdl['name']}"] = h1
                 round_mets[f"active/{mdl['name']}"] = int(len(active_ids))
@@ -174,7 +202,10 @@ def build_parser():
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--active-rate", type=float, default=0.2)
-    ap.add_argument("--method", default="lvr", choices=["lvr", "random"])
+    ap.add_argument("--report-every", type=int, default=1,
+                    help="rounds between all-client loss-report refreshes")
+    ap.add_argument("--method", default="lvr",
+                    choices=methods.distributed_methods())
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)

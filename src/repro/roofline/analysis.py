@@ -40,6 +40,16 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Version-compat: ``Compiled.cost_analysis()`` returns a list of
+    per-computation dicts on jax 0.4.x and a flat dict on jax >= 0.5.
+    Normalizes to the dict of the entry-point computation ({} if absent)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Sum output-shape bytes per collective kind over the compiled HLO."""
     out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}

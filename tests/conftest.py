@@ -1,7 +1,17 @@
 """Shared pytest config.  NOTE: no XLA_FLAGS device forcing here — tests see
 the real single CPU device; multi-device dry-runs run in subprocesses."""
+import os
+
 import pytest
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")
+    # ("slow" marker is registered in pyproject.toml [tool.pytest.ini_options])
+    # persistent XLA compile cache: repeat fast-tier runs skip recompiles
+    # (config update only — does not initialize jax device state)
+    import jax
+    cache_dir = os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.join(os.path.dirname(__file__), os.pardir, ".jax_cache"))
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)

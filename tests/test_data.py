@@ -1,6 +1,7 @@
 """Partitioner property tests (paper §6.1 statistics)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dev dep: skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.data import partition, synthetic

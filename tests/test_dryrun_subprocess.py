@@ -17,10 +17,10 @@ import jax
 from repro.configs.base import DEFAULT_ROUND, INPUT_SHAPES
 from repro.configs.registry import get_config
 from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_mesh_compat
 from repro.roofline import analysis as roofline
 
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 4), ("data", "model"))
 out = {}
 for arch, shape_name in [("qwen3-0.6b", "train_4k"),
                          ("falcon-mamba-7b", "decode_32k"),
@@ -33,7 +33,7 @@ for arch, shape_name in [("qwen3-0.6b", "train_4k"),
     args = specs_mod.input_specs(cfg, mesh, shape, DEFAULT_ROUND, mode=mode)
     with mesh:
         compiled = jax.jit(step).lower(**args).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = roofline.cost_analysis_dict(compiled)
     coll = roofline.collective_bytes(compiled.as_text())
     ma = compiled.memory_analysis()
     out[f"{arch}|{shape_name}"] = {

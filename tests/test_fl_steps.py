@@ -14,10 +14,10 @@ import pytest
 from repro.configs.base import FLRoundConfig, InputShape
 from repro.configs.registry import get_config
 from repro.fl import steps as fl_steps
+from repro.launch.mesh import make_mesh_compat
 from repro.models import transformer
 
-MESH = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+MESH = make_mesh_compat((1, 1), ("data", "model"))
 SHAPE = InputShape("tiny_train", seq_len=16, global_batch=2, kind="train")
 
 
@@ -30,6 +30,7 @@ def _setup(arch="qwen3-0.6b", K=2):
     return cfg, rcfg, params, batch
 
 
+@pytest.mark.slow
 def test_fedavg_step_is_unbiased_aggregation():
     """With C=1, p=1: w_new = w - (d/B) * (w0 - w_local^K)."""
     cfg, rcfg, params, batch = _setup(K=2)
@@ -55,6 +56,7 @@ def test_fedavg_step_is_unbiased_aggregation():
                                    rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_weighted_dp_equals_fedavg_k1():
     """The big-model mode is the exact K=1 algebraic reduction."""
     cfg, rcfg, params, batch = _setup(K=1)
@@ -72,6 +74,7 @@ def test_weighted_dp_equals_fedavg_k1():
                                    rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_stale_step_bookkeeping():
     """Stale step returns G = w0 - w_local and beta = <G,h>/||h||^2."""
     cfg, rcfg, params, batch = _setup(K=1)

@@ -1,0 +1,173 @@
+"""Tests for the pluggable methods subsystem: registry contract, every
+registered strategy end-to-end through the jitted round engine, golden
+pre-refactor metrics, and the behaviours of the two post-paper
+strategies."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import methods
+from repro.core.server import MMFLServer, ServerConfig
+from repro.fl.experiments import build_linear_setting, build_setting
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_engine.json")
+
+# the paper's 11 methods + the two strategies landed on the registry API
+EXPECTED = ["fedstale", "fedvarp", "flammable", "full", "gvr", "lvr",
+            "mifa", "power_of_choice", "random", "roundrobin_gvr",
+            "scaffold", "stalevr", "stalevre"]
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_complete_and_sorted():
+    avail = methods.available_methods()
+    assert avail == sorted(avail)
+    assert avail == EXPECTED
+
+
+def test_unknown_method_raises():
+    with pytest.raises(KeyError, match="unknown MMFL method"):
+        methods.make("definitely_not_a_method")
+    with pytest.raises(KeyError, match="lvr"):      # message lists options
+        methods.get_class("nope")
+
+
+def test_distributed_subset():
+    dist = methods.distributed_methods()
+    assert "lvr" in dist and "random" in dist
+    for name in dist:
+        cls = methods.get_class(name)
+        assert not cls.needs_all_updates and not cls.uses_stale_store
+
+
+def test_server_rejects_unknown_method():
+    tasks, B, avail = build_linear_setting(n_models=1, n_clients=6, seed=0)
+    with pytest.raises(KeyError, match="unknown MMFL method"):
+        MMFLServer(tasks, B, avail, ServerConfig(method="nope"))
+
+
+# ---------------------------------------------------------------------------
+# every registered method runs through the engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def linear_world():
+    return build_linear_setting(n_models=2, n_clients=8, seed=0)
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+def test_every_method_two_rounds_finite(linear_world, method):
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail,
+                     ServerConfig(method=method, local_epochs=2, seed=1,
+                                  active_rate=0.3, batch_size=8))
+    p0 = [np.asarray(jnp.concatenate([x.ravel() for x in jax.tree.leaves(p)]))
+          for p in srv.params]
+    for _ in range(2):
+        mets = srv.run_round()
+        for k, v in mets.items():
+            assert np.all(np.isfinite(v)), (method, k, v)
+    accs = srv.evaluate()
+    assert all(np.isfinite(a) for a in accs), (method, accs)
+    for s, p in enumerate(srv.params):
+        flat = np.asarray(jnp.concatenate(
+            [x.ravel() for x in jax.tree.leaves(p)]))
+        assert np.all(np.isfinite(flat)), (method, s)
+        assert not np.allclose(flat, p0[s]), (method, s, "params unchanged")
+
+
+# ---------------------------------------------------------------------------
+# refactor fidelity: pre-refactor golden metrics (same seed, same world)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["lvr", "stalevre"])
+def test_golden_metrics_reproduced(method):
+    """The strategy engine must reproduce the pre-refactor if/elif server's
+    loss/H1/Zp/Zl trajectories (captured at the refactor boundary)."""
+    golden = json.load(open(GOLDEN))[method]
+    tasks, B, avail = build_setting(n_models=2, n_clients=16, seed=0,
+                                    small=True)
+    srv = MMFLServer(tasks, B, avail,
+                     ServerConfig(method=method, local_epochs=2, seed=1))
+    for want in golden:
+        got = srv.run_round()
+        for k, v in want.items():
+            np.testing.assert_allclose(got[k], v, rtol=2e-3, atol=1e-3,
+                                       err_msg=f"{method} round {k}")
+
+
+# ---------------------------------------------------------------------------
+# new strategies: multi-model engagement + loss-ranked choice
+# ---------------------------------------------------------------------------
+
+
+def test_flammable_multi_model_engagement(linear_world):
+    """With a generous budget some processor must train >1 model in the
+    same round — the engagement pattern the per-processor categorical
+    sampler structurally forbids."""
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail,
+                     ServerConfig(method="flammable", local_epochs=1, seed=0,
+                                  active_rate=0.6))
+    losses = jnp.stack([srv._loss_all[s](srv.params[s], srv.tasks[s].data)
+                        for s in range(srv.S)], axis=1)
+    p = srv._probabilities(losses, None)
+    multi = 0
+    for i in range(6):
+        act = srv.strategy.sample(jax.random.PRNGKey(i), p, srv, losses)
+        multi = max(multi, int(jnp.max(jnp.sum(act, axis=1))))
+    assert multi > 1
+    # budget still met in expectation
+    np.testing.assert_allclose(float(p.sum()), min(srv.m, srv.V * srv.S),
+                               rtol=1e-3)
+
+
+def test_power_of_choice_selects_k_and_normalizes(linear_world):
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail,
+                     ServerConfig(method="power_of_choice", local_epochs=1,
+                                  seed=0, active_rate=0.4))
+    mets = srv.run_round()
+    # d-normalized FedAvg weighting -> unit global step size, zero Zp
+    for s in range(srv.S):
+        np.testing.assert_allclose(mets[f"H1/{s}"], 1.0, atol=1e-5)
+        np.testing.assert_allclose(mets[f"Zp/{s}"], 0.0, atol=1e-9)
+    losses = jnp.stack([srv._loss_all[s](srv.params[s], srv.tasks[s].data)
+                        for s in range(srv.S)], axis=1)
+    p = srv._probabilities(losses, None)
+    act = srv.strategy.sample(jax.random.PRNGKey(0), p, srv, losses)
+    k = max(1, int(round(srv.m / srv.S)))
+    assert np.all(np.asarray(act.sum(axis=0)) == k)
+
+
+# ---------------------------------------------------------------------------
+# engine modes agree
+# ---------------------------------------------------------------------------
+
+
+def test_fused_and_eager_rounds_match(linear_world):
+    """jit_round=False (legacy orchestration) and the fused jit produce the
+    same trajectories — fusion is a pure performance change."""
+    tasks, B, avail = linear_world
+    runs = {}
+    for jit_round in (True, False):
+        srv = MMFLServer(tasks, B, avail,
+                         ServerConfig(method="stalevre", local_epochs=2,
+                                      seed=3, active_rate=0.3,
+                                      jit_round=jit_round))
+        runs[jit_round] = [srv.run_round() for _ in range(3)]
+    for got, want in zip(runs[True], runs[False]):
+        for k in want:
+            np.testing.assert_allclose(got[k], want[k], rtol=1e-4,
+                                       atol=1e-5, err_msg=str(k))

@@ -41,6 +41,7 @@ def test_reduced_forward_and_param_count(arch, rng):
     assert float(loss) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_reduced_train_step(arch, rng):
     """One SGD step decreases nothing catastrophic: loss stays finite and
@@ -60,6 +61,7 @@ def test_reduced_train_step(arch, rng):
     assert np.isfinite(float(loss2))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_reduced_prefill_decode_roundtrip(arch, rng):
     cfg = get_config(arch).reduced()
@@ -101,6 +103,7 @@ def test_decode_matches_prefill_continuation():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_ring_buffer():
     """Ring-buffer SWA decode stays finite once position wraps the window."""
     import dataclasses
@@ -118,6 +121,7 @@ def test_sliding_window_decode_ring_buffer():
         ids = jnp.argmax(logits, -1).astype(jnp.int32)
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_close_to_bf16():
     """Perf-3 path: int8 KV cache decode stays within 1% of full precision
     and argmax-agrees over several steps."""

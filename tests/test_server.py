@@ -6,6 +6,10 @@ import pytest
 from repro.core.server import MMFLServer, ServerConfig
 from repro.fl.experiments import build_setting, make_server
 
+# CNN-world server integration (minutes in total): the fast tier covers the
+# same engine via tests/test_methods.py's linear micro-world
+pytestmark = pytest.mark.slow
+
 METHODS = ["random", "lvr", "stalevre", "fedvarp", "mifa"]
 
 
