@@ -1,31 +1,48 @@
-"""Round-engine micro-benchmark: the fused per-(task, method) jitted round
-function vs the legacy orchestration (jitted local-training pieces, eager
-Python aggregation — ``ServerConfig(jit_round=False)``).
+"""Round-engine micro-benchmarks on the dispatch-bound linear
+micro-setting (64 clients, 3 tasks):
 
-Measured on the dispatch-bound linear micro-setting (64 clients, 3 tasks):
-the paper's CNN world is local-compute-bound on CPU and shows ~1x there,
-but per-round orchestration is exactly what dominates once local training
-is fast or offloaded (the production regime: accelerators own the local
-step, the host owns the round loop).
+  * ``bench_round_engine``  — the fused whole-round jit vs the legacy
+    orchestration (jitted local-training pieces, eager Python aggregation —
+    ``ServerConfig(jit_round=False)``), i.e. how much per-round Python
+    dispatch costs.
+  * ``bench_scan_rollout``  — the functional engine's ``lax.scan`` rollout
+    (ONE dispatch per chunk of rounds, metrics stacked on device) vs the
+    eager per-round ``run_round`` loop (one fused dispatch + host metric
+    syncs per round), i.e. how much the per-round host round-trips cost.
+
+The paper's CNN world is local-compute-bound on CPU and shows ~1x on both;
+per-round orchestration is exactly what dominates once local training is
+fast or offloaded (the production regime: accelerators own the local step,
+the host owns the round loop).
 
 Same output contract as ``kernels_bench``: each bench returns
-(us_per_round_fused, derived) where derived carries the headline
-rounds/sec speedup.
+(us_per_round, derived) with the headline rounds/sec speedup in
+``derived``.  Running the module directly (``python
+benchmarks/engine_bench.py [--smoke]``) writes ``BENCH_engine.json``.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import Tuple
+from typing import Dict, Tuple
 
+import jax
+
+from repro.core.engine import RoundEngine
 from repro.core.server import MMFLServer, ServerConfig
 from repro.fl.experiments import build_linear_setting
 
 
+def _cfg(method: str, jit_round: bool = True) -> ServerConfig:
+    return ServerConfig(method=method, local_epochs=2, seed=0,
+                        active_rate=0.2, jit_round=jit_round)
+
+
 def _rounds_per_sec(tasks, B, avail, method: str, jit_round: bool,
                     reps: int = 10) -> float:
-    srv = MMFLServer(tasks, B, avail,
-                     ServerConfig(method=method, local_epochs=2, seed=0,
-                                  active_rate=0.2, jit_round=jit_round))
+    srv = MMFLServer(tasks, B, avail, _cfg(method, jit_round))
     srv.run_round()                                   # compile / warm up
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -33,14 +50,86 @@ def _rounds_per_sec(tasks, B, avail, method: str, jit_round: bool,
     return reps / (time.perf_counter() - t0)
 
 
-def bench_round_engine(method: str = "stalevre") -> Tuple[float, str]:
-    """Default method is StaleVRE — the paper's headline method and the
-    heaviest aggregation rule (stale store + beta estimator updates), i.e.
-    where eager per-round Python dispatch hurt most."""
+def bench_round_engine(method: str = "stalevre",
+                       reps: int = 10) -> Tuple[float, str]:
+    """Fused whole-round jit vs legacy eager orchestration.  Default method
+    is StaleVRE — the paper's headline method and the heaviest aggregation
+    rule (stale store + beta estimator updates), i.e. where eager per-round
+    Python dispatch hurt most."""
     tasks, B, avail = build_linear_setting(n_models=3, n_clients=64, seed=0)
-    fused = _rounds_per_sec(tasks, B, avail, method, jit_round=True)
-    eager = _rounds_per_sec(tasks, B, avail, method, jit_round=False)
+    fused = _rounds_per_sec(tasks, B, avail, method, jit_round=True,
+                            reps=reps)
+    eager = _rounds_per_sec(tasks, B, avail, method, jit_round=False,
+                            reps=reps)
     us = 1e6 / fused
     derived = (f"speedup={fused / eager:.2f}x;fused_rps={fused:.2f};"
                f"eager_rps={eager:.2f}")
     return us, derived
+
+
+def bench_scan_rollout(method: str = "stalevre", rounds: int = 30,
+                       reps: int = 3) -> Tuple[float, str]:
+    """Scanned rollout (one ``lax.scan`` dispatch per chunk) vs the eager
+    fused per-round loop (the facade's ``run_round``: one jitted dispatch +
+    host metric syncs per round — the pre-scan engine)."""
+    tasks, B, avail = build_linear_setting(n_models=3, n_clients=64, seed=0)
+
+    srv = MMFLServer(tasks, B, avail, _cfg(method))
+    srv.run_round()                                   # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        srv.run_round()
+    eager_rps = rounds / (time.perf_counter() - t0)
+
+    eng = RoundEngine(tasks, B, avail, _cfg(method))
+    state = eng.init_state()
+    jax.block_until_ready(eng.rollout(state, rounds))  # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state, mets = eng.rollout(state, rounds)
+        jax.block_until_ready(mets)
+    scan_rps = reps * rounds / (time.perf_counter() - t0)
+
+    us = 1e6 / scan_rps
+    derived = (f"speedup={scan_rps / eager_rps:.2f}x;"
+               f"scan_rps={scan_rps:.2f};eager_rps={eager_rps:.2f}")
+    return us, derived
+
+
+def _parse(derived: str) -> Dict[str, float]:
+    out = {}
+    for part in derived.split(";"):
+        k, v = part.split("=")
+        out[k] = float(v.rstrip("x"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few reps/rounds (CI): exercises both paths, "
+                         "headline numbers still recorded")
+    ap.add_argument("--method", default="stalevre")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    reps = 3 if args.smoke else 10
+    rounds = 10 if args.smoke else 30
+
+    us_f, d_f = bench_round_engine(args.method, reps=reps)
+    us_s, d_s = bench_scan_rollout(args.method, rounds=rounds,
+                                   reps=2 if args.smoke else 3)
+    report = {
+        "method": args.method,
+        "smoke": bool(args.smoke),
+        "fused_vs_legacy": {"us_per_round": us_f, **_parse(d_f)},
+        "scan_vs_eager": {"us_per_round": us_s, **_parse(d_s)},
+    }
+    print(f"engine_round_{args.method},{us_f:.1f},{d_f}")
+    print(f"engine_scan_{args.method},{us_s:.1f},{d_s}")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

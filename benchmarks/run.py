@@ -69,6 +69,8 @@ def main() -> None:
 
     # --- round engine (derived = fused-jit vs eager rounds/sec) ------------
     timed("engine_round_stalevre", engine_bench.bench_round_engine)
+    # scanned rollout vs eager per-round loop (derived = rounds/sec win)
+    timed("engine_scan_stalevre", engine_bench.bench_scan_rollout)
 
 
 if __name__ == "__main__":

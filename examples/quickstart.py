@@ -1,44 +1,59 @@
-"""Quickstart: the paper's MMFL pipeline in ~60 lines.
+"""Quickstart: the paper's MMFL pipeline on the functional engine API.
 
 Three concurrent FL models, 120-style heterogeneous clients (scaled down),
-MMFL-LVR sampling + StaleVRE aggregation, with the convergence monitors the
-paper's analysis is built on.
+MMFL-LVR sampling + StaleVRE aggregation.  One ``run_experiment(spec)``
+call drives everything: rounds run as ``lax.scan``-fused chunks (one
+dispatch per chunk, metrics stacked on device), and a multi-seed spec vmaps
+independent replicates for error bars in a single compile.
+
+The classic imperative surface (``MMFLServer.run_round``) still exists as a
+thin facade over the same engine — see ``repro.core.server``.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core.methods import available_methods
-from repro.core.server import MMFLServer, ServerConfig
-from repro.fl.experiments import build_setting
+from repro.fl.experiments import ExperimentSpec, run_experiment
 
 
 def main():
     # The paper's Sec. 6.1 world (scaled to 32 clients for a laptop run):
     # 3 image tasks, label-shard non-iid, 10% high-data clients, B_i budgets.
-    tasks, B, avail = build_setting(n_models=3, n_clients=32, seed=0,
-                                    small=True)
-    print(f"clients={len(B)}  processors={int(B.sum())}  models={len(tasks)}")
+    spec = ExperimentSpec(
+        method="stalevre",    # loss-based sampling + estimated-beta stale
+        n_models=3,
+        n_clients=32,
+        small=True,
+        rounds=20,
+        eval_every=5,         # rounds per scanned chunk / host evaluation
+        server=dict(
+            active_rate=0.15,  # server budget m = 15% of processors/round
+            local_epochs=5,    # K
+            lr=0.05,
+        ),
+    )
     print("registered methods:", ", ".join(available_methods()))
 
-    srv = MMFLServer(
-        tasks, B, avail,
-        ServerConfig(
-            method="stalevre",    # loss-based sampling + estimated-beta stale
-            active_rate=0.15,     # server budget m = 15% of processors/round
-            local_epochs=5,       # K
-            lr=0.05,
-            seed=0,
-        ))
+    out = run_experiment(spec)
+    eng = out["engine"]
+    print(f"clients={eng.N}  processors={eng.V}  models={eng.S}")
+    for (r, accs) in out["acc"]:
+        a = ", ".join(f"{x:.3f}" for x in accs)
+        h1 = out["metrics"]["H1"][r - 1, 0]
+        zl = out["metrics"]["Zl"][r - 1, 0]
+        print(f"round {r:3d}  acc=[{a}]  H1={h1:.2f}  Zl={zl:.4f}")
+    print(f"final average accuracy: {np.mean(out['final_acc']):.3f}")
 
-    def log(rec):
-        accs = ", ".join(f"{a:.3f}" for a in rec["acc"])
-        print(f"round {rec['round']:3d}  acc=[{accs}]  "
-              f"H1={rec.get('H1/0', 0):.2f}  Zl={rec.get('Zl/0', 0):.4f}")
-
-    srv.run(rounds=20, eval_every=5, log=log)
-    final = srv.evaluate()
-    print(f"final average accuracy: {np.mean(final):.3f}")
+    # multi-seed fleet (Table-1 error bars) on the seconds-fast linear
+    # micro world: 3 replicates vmapped into one compile
+    fleet = run_experiment(ExperimentSpec(
+        method="lvr", linear=True, n_models=2, n_clients=16,
+        rounds=15, seeds=(0, 1, 2),
+        server=dict(active_rate=0.3, local_epochs=2)))
+    mean, std = fleet["acc_mean"], fleet["acc_std"]
+    accs = "  ".join(f"{m:.3f}+-{s:.3f}" for m, s in zip(mean, std))
+    print(f"linear micro fleet (3 seeds, vmapped): acc = {accs}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,10 +46,7 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> None:
         json.dump(manifest, f, indent=1)
 
 
-def restore(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype template)."""
-    with np.load(path + ".npz") as data:
-        flat = {k: data[k] for k in data.files}
+def _unflatten_like(flat: Dict[str, np.ndarray], like: Any) -> Any:
     paths = jax.tree_util.tree_flatten_with_path(like)[0]
     leaves = []
     for p, leaf in paths:
@@ -58,11 +55,80 @@ def restore(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
         arr = flat[key]
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(jnp.asarray(arr, leaf.dtype))
-    tree = jax.tree_util.tree_unflatten(
+    return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
+
+
+def restore(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with np.load(path + ".npz") as data:
+        flat = {k: data[k] for k in data.files}
+    tree = _unflatten_like(flat, like)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)
     return tree
+
+
+# flattened path prefix of model ``s``'s params inside an ExperimentState
+# payload (NamedTuple fields stringify with a leading dot)
+STATE_PARAMS_PREFIX = ".params/"
+
+
+def is_state_checkpoint(path: str) -> bool:
+    """True when ``path`` holds a FULL ``ExperimentState`` (``save_state``)
+    rather than a bare params pytree."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    return any(k.startswith(STATE_PARAMS_PREFIX) for k in manifest["keys"])
+
+
+def restore_model_params(path: str, like: Any, model: int = 0,
+                         shardings: Optional[Any] = None) -> Any:
+    """Extract ONE model's params from a full ``ExperimentState`` checkpoint
+    (the deploy path: ``serve.py --ckpt results/train/state_20``).
+
+    ``like`` is the params-only template for that model; ``model`` indexes
+    the per-task params tuple."""
+    prefix = f"{STATE_PARAMS_PREFIX}{model}/"
+    with np.load(path + ".npz") as data:
+        flat = {k[len(prefix):]: data[k] for k in data.files
+                if k.startswith(prefix)}
+    if not flat:
+        raise KeyError(
+            f"{path}.npz holds no '{prefix}*' arrays — not a full-state "
+            f"checkpoint, or model index {model} out of range")
+    tree = _unflatten_like(flat, like)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def save_state(directory: str, state: Any, step: int,
+               prefix: str = "state_") -> str:
+    """Checkpoint a FULL experiment state pytree (``ExperimentState``:
+    params + per-task method state + PRNG key + round + sampler loss cache)
+    under ``directory/{prefix}{step}``.  Any pytree works — NamedTuples
+    (BetaState), nested tuples/dicts, and scalar leaves flatten to stable
+    path keys."""
+    path = os.path.join(directory, f"{prefix}{step}")
+    save(path, state, step=step)
+    return path
+
+
+def restore_state(directory: str, like: Any, step: Optional[int] = None,
+                  prefix: str = "state_") -> Tuple[Optional[Any],
+                                                   Optional[int]]:
+    """Restore a full experiment state saved by ``save_state``.
+
+    ``like`` is a shape/dtype template with the same tree structure (e.g. a
+    freshly built ``ExperimentState``).  ``step=None`` picks the latest
+    checkpoint in the directory.  Returns ``(state, step)`` or
+    ``(None, None)`` when no checkpoint exists."""
+    if step is None:
+        step = latest_step(directory, prefix)
+    if step is None:
+        return None, None
+    return restore(os.path.join(directory, f"{prefix}{step}"), like), step
 
 
 def latest_step(directory: str, prefix: str = "ckpt_") -> Optional[int]:

@@ -1,0 +1,418 @@
+"""Functional MMFL round engine: an explicit, immutable ``ExperimentState``
+pytree and pure round transitions.
+
+This is the core the paper's multi-seed, multi-round experiments (Tables
+1-2, Figs. 3-5) actually need: everything a round touches — per-task
+``params``, per-task method ``state`` (stale stores, SCAFFOLD variates,
+StaleVRE beta estimators), the PRNG ``key``, the ``round`` counter, and the
+cached sampler ``losses_ns`` — lives in ONE portable pytree, and the round
+is a pure function of it:
+
+    state' , metrics = round_step(state)
+
+Because the transition is pure and its carry is a pytree,
+
+  * ``rollout(state, n)`` fuses whole chunks of rounds into a single
+    ``lax.scan`` dispatch with stacked on-device metrics (no per-round,
+    per-task host syncs — see ``benchmarks/engine_bench.py``),
+  * ``run_seeds(seeds, n)`` vmaps independent replicates for Table-1 error
+    bars in one compile,
+  * ``repro.checkpoint`` can save/restore the ENTIRE experiment (not just
+    params) and a killed run resumes bit-identically,
+  * method state is an ordinary shardable pytree, which is what lets the
+    distributed trainer (``launch/train.py``) carry the ``StaleVRFamily``
+    stale stores like any other state.
+
+``repro.core.server.MMFLServer`` is a thin stateful facade over this module
+(attribute views like ``h_valid``/``beta_state`` preserved); the strategy
+protocol is unchanged (``repro.core.methods``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convergence, methods, stale
+
+
+@dataclasses.dataclass
+class ModelAdapter:
+    """Functional model interface for the FL engine."""
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray]
+    accuracy: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray]
+
+
+@dataclasses.dataclass
+class Task:
+    """One FL model + its federated data.
+
+    data: {"x": [N, cap, ...], "y": [N, cap, ...], "count": [N]} — per-client
+    padded arrays; test: {"x": [T, ...], "y": [T]} server-held eval set.
+    """
+    name: str
+    model: ModelAdapter
+    data: Dict[str, jnp.ndarray]
+    test: Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    method: str = "lvr"
+    active_rate: float = 0.1          # m = active_rate * V
+    local_epochs: int = 5             # E
+    batch_size: int = 16
+    lr: float = 0.05
+    lr_decay: float = 1.0             # eta_tau = lr * decay^tau
+    fedstale_beta: float = 0.5        # global beta for fedstale
+    eta_cap: Optional[float] = None   # footnote-3 per-client cap sum_s p <= eta
+    seed: int = 0
+    jit_round: bool = True            # fused whole-round jit (False = legacy)
+
+
+class ExperimentState(NamedTuple):
+    """The complete state of an MMFL experiment as one pytree.
+
+    params/method_state are per-task tuples (heterogeneous models allowed);
+    ``round`` is a traced int32 scalar so lr schedules and round-robin
+    policies stay scan/vmap-safe; ``losses_ns`` caches the latest [N, S]
+    loss reports the sampler saw (checkpointed so a resumed run samples
+    from the same view)."""
+    params: Tuple[Any, ...]
+    method_state: Tuple[Any, ...]
+    key: jax.Array
+    round: jax.Array          # int32 scalar
+    losses_ns: jax.Array      # [N, S]
+
+
+class RoundEngine:
+    """Builds the pure per-round transition for one (world, method) pair.
+
+    The engine owns the static world (task data, budgets, availability,
+    the strategy object, the fused per-task round closures); all mutable
+    quantities live in the ``ExperimentState`` it threads."""
+
+    def __init__(self, tasks: Sequence[Task], B: np.ndarray,
+                 avail: np.ndarray, cfg: ServerConfig):
+        self.tasks = list(tasks)
+        self.cfg = cfg
+        self.S = len(tasks)
+        self.N = int(np.asarray(B).shape[0])
+        self.B = jnp.asarray(B, jnp.float32)
+        self.B_int = np.asarray(B, np.int64)
+        self._B_host = np.asarray(B, np.float32)
+        self.V = int(self.B_int.sum())
+        self.avail = jnp.asarray(avail, bool)                 # [N,S]
+        self.m = cfg.active_rate * self.V
+        # d_{i,s}: dataset fractions among available clients
+        counts = jnp.stack(
+            [t.data["count"].astype(jnp.float32) for t in tasks], axis=1)
+        counts = jnp.where(self.avail, counts, 0.0)
+        self.d = counts / jnp.maximum(jnp.sum(counts, axis=0, keepdims=True),
+                                      1.0)
+        # map processors -> clients
+        self.proc_client = jnp.asarray(
+            np.repeat(np.arange(self.N), self.B_int), jnp.int32)    # [V]
+        self.strategy = methods.make(cfg.method, cfg)
+        # fixed cohort size for methods where only sampled clients train
+        self.cohort_size = self.strategy.cohort_size(self.N, self.m, self.S)
+        self._d_v = self.d[self.proc_client]                  # [V,S]
+        self._B_v = self.B[self.proc_client]                  # [V]
+        # sampling-distribution override hook (ctx, losses_ns, norms_ns) ->
+        # p [V,S]; the server facade routes its monkeypatchable
+        # ``_probabilities`` through this (e.g. Fig. 5's pinned sampler)
+        self.probabilities_hook: Optional[Callable] = None
+        # per-task pure building blocks
+        self._local_all = [self._make_local_all(t) for t in self.tasks]
+        self._loss_all = [self._make_loss_all(t) for t in self.tasks]
+        self._stats_pure = [self.make_stats_fn(s) for s in range(self.S)]
+        self._round_pure = [self.make_round_fn(s) for s in range(self.S)]
+        self.loss_all_jit = [jax.jit(f) for f in self._loss_all]
+        self.eval_jit = [jax.jit(lambda params, test, acc=t.model.accuracy:
+                                 acc(params, test)) for t in self.tasks]
+        self.round_step = jax.jit(self.round_step_fn)
+        self._rollout_cache: Dict[int, Callable] = {}
+        self._run_seeds_cache: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------
+    # per-task pure computations
+    # ------------------------------------------------------------------
+    def _make_local_all(self, t: Task):
+        loss_fn = t.model.loss_fn
+        E, mb = self.cfg.local_epochs, self.cfg.batch_size
+
+        def local_update(params, key, x, y, count, lr, corr):
+            """One client's K=E epochs of minibatch SGD.  Returns
+            (G = w0 - w_final, first-epoch loss)."""
+            def step(carry, k):
+                p, first_loss, i = carry
+                idx = jax.random.randint(k, (mb,), 0, jnp.maximum(count, 1))
+                batch = {"x": x[idx], "y": y[idx]}
+                l, g = jax.value_and_grad(loss_fn)(p, batch)
+                if corr is not None:
+                    g = jax.tree.map(lambda a, b: a + b, g, corr)
+                p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+                first_loss = jnp.where(i == 0, l, first_loss)
+                return (p, first_loss, i + 1), None
+
+            keys = jax.random.split(key, E)
+            (pf, l0, _), _ = jax.lax.scan(step, (params, 0.0, 0), keys)
+            G = jax.tree.map(lambda a, b: a - b, params, pf)
+            return G, l0
+
+        def local_all(params, keys, data, lr, corr=None):
+            """vmap over the cohort's clients -> (G [A,...], losses [A])."""
+            if corr is None:
+                A = keys.shape[0]
+                corr = jax.tree.map(
+                    lambda a: jnp.zeros((A,) + (1,) * a.ndim), params)
+            return jax.vmap(
+                lambda k, x, y, c, cr: local_update(params, k, x, y, c, lr, cr)
+            )(keys, data["x"], data["y"], data["count"], corr)
+
+        return local_all
+
+    def _make_loss_all(self, t: Task):
+        loss_fn = t.model.loss_fn
+        # probe batch sliced ONCE at build time: inside jit/scan the task
+        # data is a closed-over constant, and slicing it in-trace makes XLA
+        # constant-fold a second copy of the dataset into the executable
+        cap = t.data["x"].shape[1]
+        take = min(cap, 64)
+        probe_x, probe_y = t.data["x"][:, :take], t.data["y"][:, :take]
+
+        def loss_all(params, data=None):
+            """Per-client loss estimate on a (subsampled) local batch.
+            Padded rows wrap real rows, so the padded-batch mean is a
+            reweighted local loss.  ``data=None`` (the engine's round path)
+            uses the build-time probe slice; explicit ``data`` (external
+            probes through ``MMFLServer._loss_all``) is honored."""
+            if data is None:
+                x, y = probe_x, probe_y
+            else:
+                x, y = data["x"][:, :take], data["y"][:, :take]
+
+            def one(xc, yc):
+                return loss_fn(params, {"x": xc, "y": yc})
+
+            return jax.vmap(one)(x, y)
+
+        return loss_all
+
+    def make_stats_fn(self, s: int, loss_all: Optional[Callable] = None,
+                      local_all: Optional[Callable] = None) -> Callable:
+        """Sampler inputs for task s; for needs-all methods also every
+        client's fresh update G (and its norm if the sampler consumes
+        gradient magnitudes).  ``loss_all``/``local_all`` default to the
+        engine's pure pieces — the facade's legacy mode passes its own
+        individually-jitted versions."""
+        strat = self.strategy
+        N = self.N
+        loss_all = loss_all or self._loss_all[s]
+        local_all = local_all or self._local_all[s]
+
+        def stats_fn(params, data, key, lr):
+            # data=None -> the probe slice bound at build time (in-trace
+            # slicing of the closed-over dataset would constant-fold a
+            # second copy of it into the executable)
+            losses = loss_all(params)
+            if not strat.needs_all_updates:
+                return losses, None, None
+            keys = jax.random.split(key, N)
+            G, _ = local_all(params, keys, data, lr)
+            norms = None
+            if strat.needs_grad_norms:
+                norms = jnp.sqrt(jnp.maximum(
+                    stale.batched_tree_dot(G, G), 0.0))
+            return losses, G, norms
+
+        return stats_fn
+
+    def make_round_fn(self, s: int,
+                      local_all: Optional[Callable] = None) -> Callable:
+        """The fused per-round work for task s: cohort gather + local
+        training + strategy aggregation + Sec. 3.3 monitors, as one pure
+        function."""
+        strat = self.strategy
+        N, cohort = self.N, self.cohort_size
+        B_v, proc = self._B_v, self.proc_client
+        d_col, d_v_col = self.d[:, s], self._d_v[:, s]
+        local_all = local_all or self._local_all[s]
+
+        def round_fn(params, state, train_in, p_col, act_v, losses,
+                     data, lr, round_idx):
+            """``train_in`` is the task's PRNG key (cohort methods train
+            here) or the precomputed all-client G (needs-all methods)."""
+            coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
+            # client-level activity: l processors of client i on model
+            # s behave as one update scaled by l (Remark 1)
+            coeff_client = (jnp.zeros((N,)).at[proc].add(coeffs_v))
+            act_client = (jnp.zeros((N,)).at[proc]
+                          .add(act_v) > 0).astype(jnp.float32)
+            if strat.needs_all_updates:
+                idx = jnp.arange(N)
+                G, coeff, act = train_in, coeff_client, act_client
+            else:
+                # cohort path: only the sampled clients run training
+                idx = jnp.argsort(-act_client)[:cohort]
+                keys = jax.random.split(train_in, cohort)
+                data_c = jax.tree.map(lambda x: x[idx], data)
+                corr = strat.local_correction(state, idx)
+                G, _ = local_all(params, keys, data_c, lr, corr)
+                coeff, act = coeff_client[idx], act_client[idx]
+            new_w, new_state, extras = strat.aggregate(
+                params, state, G, coeff, act, idx,
+                d_col=d_col, lr=lr, round_idx=round_idx)
+            mets = convergence.round_metrics(coeffs_v, losses[proc],
+                                             d_v_col, B_v)
+            mets["loss"] = jnp.sum(d_col * losses)
+            return new_w, new_state, mets, extras
+
+        return round_fn
+
+    # ------------------------------------------------------------------
+    # state constructors
+    # ------------------------------------------------------------------
+    def init_state(self, seed: Optional[int] = None,
+                   key: Optional[jax.Array] = None) -> ExperimentState:
+        """Fresh experiment state.  Key-splitting order matches the
+        pre-refactor server exactly (golden metrics stay pinned).  ``seed``
+        may be a traced int32 (``run_seeds`` vmaps over it)."""
+        if key is None:
+            key = jax.random.PRNGKey(self.cfg.seed if seed is None else seed)
+        params: List[Any] = []
+        for t in self.tasks:
+            key, k = jax.random.split(key)
+            params.append(t.model.init(k))
+        mstate = tuple(self.strategy.init_state(params[s], self.N)
+                       for s in range(self.S))
+        return ExperimentState(
+            params=tuple(params), method_state=mstate, key=key,
+            round=jnp.asarray(0, jnp.int32),
+            losses_ns=jnp.ones((self.N, self.S), jnp.float32))
+
+    def sampler_ctx(self, round_idx: Any) -> methods.SamplerContext:
+        """Sampler context usable INSIDE a traced round: ``B`` is a host
+        (numpy) array so the strategies' client->processor expansion
+        (``processor_budget_utilities``'s static repeat lengths) stays
+        concrete under jit/scan/vmap."""
+        return methods.SamplerContext(d=self.d, B=self._B_host,
+                                      avail=self.avail, m=self.m,
+                                      round=round_idx)
+
+    # ------------------------------------------------------------------
+    # the pure round transition
+    # ------------------------------------------------------------------
+    def round_step_fn(self, state: ExperimentState
+                      ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
+        """state -> (state', metrics).  Pure and jittable: safe under
+        ``jax.jit``, ``lax.scan`` (rollout) and ``jax.vmap`` (seed fleets).
+
+        Metrics are [S]-stacked device arrays ({H1, Zp, Zl, loss}; plus
+        ``beta`` [S, N] for the stale family) — no host syncs here."""
+        cfg, S = self.cfg, self.S
+        strat = self.strategy
+        round_f = state.round.astype(jnp.float32)
+        lr = jnp.float32(cfg.lr) * jnp.float32(cfg.lr_decay) ** round_f
+        keys = jax.random.split(state.key, 2 + S)
+        new_key, k_sample = keys[0], keys[1]
+
+        # ---- 1) stats for the sampler -----------------------------------
+        stats = [self._stats_pure[s](state.params[s], self.tasks[s].data,
+                                     keys[2 + s], lr) for s in range(S)]
+        losses_ns = jnp.stack([st[0] for st in stats], axis=1)    # [N,S]
+        norms_ns = (jnp.stack([st[2] for st in stats], axis=1)
+                    if strat.needs_grad_norms else None)
+
+        # ---- 2) sampling -------------------------------------------------
+        ctx = self.sampler_ctx(state.round)
+        if self.probabilities_hook is not None:
+            p = self.probabilities_hook(ctx, losses_ns, norms_ns)
+        else:
+            p = strat.probabilities(ctx, losses_ns, norms_ns)     # [V,S]
+        active = strat.sample(k_sample, p, ctx, losses_ns)
+
+        # ---- 3) fused per-task round ------------------------------------
+        new_params, new_mstate, betas = [], [], []
+        per_key: Dict[str, List[jnp.ndarray]] = {
+            k: [] for k in ("H1", "Zp", "Zl", "loss")}
+        for s in range(S):
+            train_in = stats[s][1] if strat.needs_all_updates else keys[2 + s]
+            new_w, new_st, mets, extras = self._round_pure[s](
+                state.params[s], state.method_state[s], train_in, p[:, s],
+                active[:, s], losses_ns[:, s], self.tasks[s].data,
+                lr, round_f)
+            new_params.append(new_w)
+            new_mstate.append(new_st)
+            for k in per_key:
+                per_key[k].append(mets[k])
+            if "beta" in extras:
+                betas.append(extras["beta"])
+        metrics = {k: jnp.stack(v) for k, v in per_key.items()}    # [S]
+        if betas:
+            metrics["beta"] = jnp.stack(betas)                     # [S,N]
+        new_state = ExperimentState(
+            params=tuple(new_params), method_state=tuple(new_mstate),
+            key=new_key, round=state.round + 1, losses_ns=losses_ns)
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    # scanned rollouts + vmapped seed fleets
+    # ------------------------------------------------------------------
+    def _rollout_fn(self, n_rounds: int) -> Callable:
+        def roll(state):
+            def body(st, _):
+                return self.round_step_fn(st)
+            return jax.lax.scan(body, state, None, length=n_rounds)
+        return roll
+
+    def rollout(self, state: ExperimentState, n_rounds: int
+                ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
+        """Run ``n_rounds`` rounds as ONE ``lax.scan`` dispatch.  Metrics
+        come back stacked on-device ([n_rounds, S] per key) — equivalent to
+        n sequential ``round_step`` calls, minus every per-round dispatch
+        and host sync."""
+        n_rounds = int(n_rounds)
+        fn = self._rollout_cache.get(n_rounds)
+        if fn is None:
+            fn = jax.jit(self._rollout_fn(n_rounds))
+            self._rollout_cache[n_rounds] = fn
+        return fn(state)
+
+    def run_seeds(self, seeds: Any, n_rounds: int
+                  ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray],
+                             jnp.ndarray]:
+        """Vmap independent replicates over seeds in a single compile.
+
+        Returns (final_states, metrics, final_accs) with a leading
+        [n_seeds] axis everywhere ([n_seeds, n_rounds, S] metrics,
+        [n_seeds, S] accuracies) — Table-1 error bars in one dispatch."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        n_rounds = int(n_rounds)
+        fn = self._run_seeds_cache.get(n_rounds)
+        if fn is None:
+            roll = self._rollout_fn(n_rounds)
+
+            def one(seed):
+                st0 = self.init_state(key=jax.random.PRNGKey(seed))
+                stf, mets = roll(st0)
+                return stf, mets, self.evaluate_fn(stf)
+
+            fn = jax.jit(jax.vmap(one))
+            self._run_seeds_cache[n_rounds] = fn
+        return fn(seeds)
+
+    # ------------------------------------------------------------------
+    def evaluate_fn(self, state: ExperimentState) -> jnp.ndarray:
+        """[S] test accuracies as a pure function (vmap-safe)."""
+        return jnp.stack([t.model.accuracy(state.params[s], t.test)
+                          for s, t in enumerate(self.tasks)])
+
+    def evaluate(self, state: ExperimentState) -> List[float]:
+        return [float(self.eval_jit[s](state.params[s], self.tasks[s].test))
+                for s in range(self.S)]

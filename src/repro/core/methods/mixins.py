@@ -12,11 +12,27 @@ from repro.core import sampling, stale
 
 class LossSamplingMixin:
     """Water-filling over loss utilities (MMFL-LVR, Thm 2/9) — shared by
-    LVR and the stale variance-reduced family."""
+    LVR and the stale variance-reduced family.
+
+    ``cfg.eta_cap`` (``ServerConfig.eta_cap`` / ``--eta-cap``) switches the
+    solver to the footnote-3 capped water-filling: every client's total
+    participation is bounded by sum_s p_{s|v} <= eta (client-side
+    communication constraints).  ``eta_cap`` may be a scalar or a per-client
+    [N] array; ``eta_cap=1`` (or None) is exactly ``solve_waterfilling``."""
+
+    def _eta(self, ctx):
+        eta = getattr(self.cfg, "eta_cap", None) if self.cfg else None
+        if eta is None:
+            return None
+        eta = jnp.asarray(eta, jnp.float32)
+        if eta.ndim == 0:
+            eta = jnp.full((ctx.B.shape[0],), eta)
+        return eta
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
         return sampling.lvr_probabilities(losses_ns, ctx.d, ctx.B,
-                                          ctx.avail, ctx.m)
+                                          ctx.avail, ctx.m,
+                                          eta=self._eta(ctx))
 
 
 class UniformSamplingMixin:

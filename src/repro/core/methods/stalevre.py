@@ -22,6 +22,11 @@ def _init_beta_state(n_clients: int) -> stale.BetaState:
 
 @register("stalevre")
 class StaleVREMethod(LossSamplingMixin, StaleVRFamily):
+    # the stale store + beta estimator are ordinary [N,...] pytrees carried
+    # in the shared ExperimentState, so the distributed trainer
+    # (launch/train.py) runs StaleVRE at production scale: sampling stays
+    # loss-report-only and the h refresh is a per-active-client row scatter
+    distributed_ok = True
 
     def init_state(self, params, n_clients):
         state = super().init_state(params, n_clients)

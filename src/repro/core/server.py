@@ -1,320 +1,226 @@
-"""MMFL server: the paper's training procedure (Sec. 3.2) as a
-method-agnostic round engine over pluggable strategies.
+"""MMFL server: a thin stateful facade over the functional round engine
+(``repro.core.engine``).
 
-The engine knows NOTHING about individual methods — every round is
+The paper's training procedure (Sec. 3.2) lives in ``RoundEngine`` as a
+pure transition ``round_step(state) -> (state, metrics)`` over an immutable
+``ExperimentState`` pytree; this class keeps the familiar imperative
+surface on top of it:
 
-  stats -> strategy.probabilities -> strategy.sample -> cohort gather ->
-  local training -> strategy.aggregate -> convergence monitors (Sec. 3.3)
+  * ``run_round()`` / ``run(rounds)`` — eager per-round loop (one fused
+    jitted dispatch per round, metrics pulled to host each round),
+  * ``rollout(n)`` — delegate whole chunks of rounds to the engine's
+    ``lax.scan`` (stacked on-device metrics, no per-round host syncs),
+  * attribute views (``params``, ``state``, ``h_valid``, ``beta_state``,
+    ``last_beta``) — pre-refactor diagnostics preserved, reading through
+    to the current ``ExperimentState``,
+  * ``_probabilities`` — monkeypatchable sampling hook (Fig. 5 pins a
+    fixed distribution through it) wired into the engine's traced path.
 
-with the method family (``random | lvr | gvr | roundrobin_gvr | stalevr |
-stalevre | fedvarp | fedstale | mifa | scaffold | full | flammable |
-power_of_choice``) provided by ``repro.core.methods`` (see its docs for how
-to add one).
+``ServerConfig(jit_round=False)`` keeps the legacy orchestration (jitted
+local-training pieces, eager per-task aggregation) for A/B — it shares the
+engine's pure per-task closures, so ``benchmarks/engine_bench.py`` still
+measures fused vs eager on identical math.
 
-Performance: each task's per-round heavy work — cohort gather, K local
-epochs, the strategy's aggregation rule, and the method-state update — is
-fused into ONE jitted function per (task, method), built once at
-construction and reused every round.  ``ServerConfig(jit_round=False)``
-falls back to the legacy orchestration (jitted local-training pieces, eager
-aggregation) — ``benchmarks/engine_bench.py`` reports the rounds/sec delta.
-
-This engine drives the paper-reproduction experiments (CNN/LSTM tasks) on a
-single host; the *distributed* production path for the assigned
-architectures lives in ``repro.fl.steps`` and consumes the same strategy
-objects for its sampling and stale-beta logic.
+Method family (``random | lvr | gvr | roundrobin_gvr | stalevr | stalevre |
+fedvarp | fedstale | mifa | scaffold | full | flammable | power_of_choice``)
+is provided by ``repro.core.methods``; the *distributed* production path
+lives in ``repro.fl.steps``/``repro.launch.train`` and consumes the same
+strategy objects and the same ``ExperimentState`` container.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import convergence, methods, stale
+from repro.core import stale
+# re-exported for back-compat: the canonical definitions moved to
+# repro.core.engine with the functional API redesign
+from repro.core.engine import (ExperimentState, ModelAdapter, RoundEngine,
+                               ServerConfig, Task)
 
-
-@dataclasses.dataclass
-class ModelAdapter:
-    """Functional model interface for the FL engine."""
-    init: Callable[[jax.Array], Any]
-    loss_fn: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray]
-    accuracy: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray]
-
-
-@dataclasses.dataclass
-class Task:
-    """One FL model + its federated data.
-
-    data: {"x": [N, cap, ...], "y": [N, cap, ...], "count": [N]} — per-client
-    padded arrays; test: {"x": [T, ...], "y": [T]} server-held eval set.
-    """
-    name: str
-    model: ModelAdapter
-    data: Dict[str, jnp.ndarray]
-    test: Dict[str, jnp.ndarray]
-
-
-@dataclasses.dataclass
-class ServerConfig:
-    method: str = "lvr"
-    active_rate: float = 0.1          # m = active_rate * V
-    local_epochs: int = 5             # E
-    batch_size: int = 16
-    lr: float = 0.05
-    lr_decay: float = 1.0             # eta_tau = lr * decay^tau
-    fedstale_beta: float = 0.5        # global beta for fedstale
-    seed: int = 0
-    jit_round: bool = True            # fused per-(task, method) round jit
+__all__ = ["ExperimentState", "MMFLServer", "ModelAdapter", "RoundEngine",
+           "ServerConfig", "Task"]
 
 
 class MMFLServer:
     def __init__(self, tasks: List[Task], B: np.ndarray, avail: np.ndarray,
                  cfg: ServerConfig):
-        self.tasks = tasks
-        self.cfg = cfg
-        self.S = len(tasks)
-        self.N = int(B.shape[0])
-        self.B = jnp.asarray(B, jnp.float32)
-        self.B_int = np.asarray(B, np.int64)
-        self.V = int(self.B_int.sum())
-        self.avail = jnp.asarray(avail, bool)                 # [N,S]
-        self.m = cfg.active_rate * self.V
-        self.key = jax.random.PRNGKey(cfg.seed)
-        # d_{i,s}: dataset fractions among available clients
-        counts = jnp.stack(
-            [t.data["count"].astype(jnp.float32) for t in tasks], axis=1)
-        counts = jnp.where(self.avail, counts, 0.0)
-        self.d = counts / jnp.maximum(jnp.sum(counts, axis=0, keepdims=True), 1.0)
-        # map processors -> clients
-        self.proc_client = jnp.asarray(
-            np.repeat(np.arange(self.N), self.B_int), jnp.int32)    # [V]
-        # per-task state
-        self.params = []
-        for s, t in enumerate(tasks):
-            self.key, k = jax.random.split(self.key)
-            self.params.append(t.model.init(k))
-        self.round = 0
+        self.engine = RoundEngine(tasks, B, avail, cfg)
+        eng = self.engine
+        self.tasks, self.cfg = eng.tasks, cfg
+        self.S, self.N, self.V = eng.S, eng.N, eng.V
+        self.B, self.B_int = eng.B, eng.B_int
+        self.avail, self.m, self.d = eng.avail, eng.m, eng.d
+        self.proc_client = eng.proc_client
+        self.strategy = eng.strategy
+        self.cohort_size = eng.cohort_size
         self.last_beta: Dict[int, Any] = {}
-        self.strategy = methods.make(cfg.method, cfg)
-        # fixed cohort size for methods where only sampled clients train
-        # (strategy-advised: depends on how the sampler spreads the budget)
-        self.cohort_size = self.strategy.cohort_size(self.N, self.m, self.S)
-        self.state = [self.strategy.init_state(self.params[s], self.N)
-                      for s in range(self.S)]
-        self._build_engine()
+        # tests/benchmarks probe per-task losses and eval through these
+        self._loss_all = eng.loss_all_jit
+        self._eval = eng.eval_jit
+        # route the engine's traced sampling through the monkeypatchable
+        # facade hook (read at trace time: patch before the first round)
+        eng.probabilities_hook = (
+            lambda ctx, losses, norms: self._probabilities(losses, norms, ctx))
+        if not cfg.jit_round:
+            self._build_legacy()
+        self._state = eng.init_state()
 
     # ------------------------------------------------------------------
-    # per-task jitted computations
+    # state views (imperative surface over the functional state)
     # ------------------------------------------------------------------
-    def _make_local_all(self, t: Task):
-        loss_fn = t.model.loss_fn
-        E, mb = self.cfg.local_epochs, self.cfg.batch_size
+    @property
+    def state_pytree(self) -> ExperimentState:
+        """The full functional state (checkpoint this, not the facade)."""
+        return self._state
 
-        def local_update(params, key, x, y, count, lr, corr):
-            """One client's K=E epochs of minibatch SGD.  Returns
-            (G = w0 - w_final, first-epoch loss)."""
-            def step(carry, k):
-                p, first_loss, i = carry
-                idx = jax.random.randint(k, (mb,), 0, jnp.maximum(count, 1))
-                batch = {"x": x[idx], "y": y[idx]}
-                l, g = jax.value_and_grad(loss_fn)(p, batch)
-                if corr is not None:
-                    g = jax.tree.map(lambda a, b: a + b, g, corr)
-                p = jax.tree.map(lambda a, b: a - lr * b, p, g)
-                first_loss = jnp.where(i == 0, l, first_loss)
-                return (p, first_loss, i + 1), None
+    @state_pytree.setter
+    def state_pytree(self, st: ExperimentState) -> None:
+        self._state = st
 
-            keys = jax.random.split(key, E)
-            (pf, l0, _), _ = jax.lax.scan(step, (params, 0.0, 0), keys)
-            G = jax.tree.map(lambda a, b: a - b, params, pf)
-            return G, l0
+    @property
+    def params(self) -> List[Any]:
+        return list(self._state.params)
 
-        def local_all(params, keys, data, lr, corr=None):
-            """vmap over the cohort's clients -> (G [A,...], losses [A])."""
-            if corr is None:
-                A = keys.shape[0]
-                corr = jax.tree.map(
-                    lambda a: jnp.zeros((A,) + (1,) * a.ndim), params)
-            return jax.vmap(
-                lambda k, x, y, c, cr: local_update(params, k, x, y, c, lr, cr)
-            )(keys, data["x"], data["y"], data["count"], corr)
+    @property
+    def state(self) -> List[Any]:
+        """Per-task method state (stale stores / variates / estimators)."""
+        return list(self._state.method_state)
 
-        return local_all
+    @property
+    def key(self) -> jax.Array:
+        return self._state.key
 
-    def _make_loss_all(self, t: Task):
-        loss_fn = t.model.loss_fn
+    @property
+    def round(self) -> int:
+        return int(self._state.round)
 
-        def loss_all(params, data):
-            """Per-client loss estimate on a (subsampled) local batch.
-            Padded rows wrap real rows, so the padded-batch mean is a
-            reweighted local loss."""
-            cap = data["x"].shape[1]
-            take = min(cap, 64)
-
-            def one(x, y, count):
-                batch = {"x": x[:take], "y": y[:take]}
-                return loss_fn(params, batch)
-
-            return jax.vmap(one)(data["x"], data["y"], data["count"])
-
-        return loss_all
-
-    # ------------------------------------------------------------------
-    def _build_engine(self):
-        """Per task: a stats function (sampler inputs) and ONE fused round
-        function (cohort gather + local training + strategy aggregation +
-        metrics) built per (task, method) and jitted once."""
-        strat = self.strategy
-        d_v = self._client_to_proc(self.d)                    # [V,S]
-        B_v = self.B[self.proc_client]                        # [V]
-        N, cohort = self.N, self.cohort_size
-
-        self._stats, self._round_fn = [], []
-        self._loss_all, self._eval = [], []
-        for s, t in enumerate(self.tasks):
-            local_all = self._make_local_all(t)
-            loss_all = self._make_loss_all(t)
-            # legacy mode jits the pieces and orchestrates eagerly — the
-            # pre-fusion baseline engine_bench compares against
-            local_impl = (local_all if self.cfg.jit_round
-                          else jax.jit(local_all))
-            loss_impl = (loss_all if self.cfg.jit_round
-                         else jax.jit(loss_all))
-            d_col = self.d[:, s]
-            d_v_col, proc = d_v[:, s], self.proc_client
-
-            def stats_fn(params, data, key, lr, loss_all=loss_impl,
-                         local_all=local_impl):
-                """Sampler inputs; for needs-all methods also every
-                client's fresh update G (and its norm if the sampler
-                consumes gradient magnitudes)."""
-                losses = loss_all(params, data)
-                if not strat.needs_all_updates:
-                    return losses, None, None
-                keys = jax.random.split(key, N)
-                G, _ = local_all(params, keys, data, lr)
-                norms = None
-                if strat.needs_grad_norms:
-                    norms = jnp.sqrt(jnp.maximum(
-                        stale.batched_tree_dot(G, G), 0.0))
-                return losses, G, norms
-
-            def round_fn(params, state, train_in, p_col, act_v, losses,
-                         data, lr, round_idx, local_all=local_impl,
-                         d_col=d_col, d_v_col=d_v_col):
-                """The fused per-round work for one task.  ``train_in`` is
-                the task's PRNG key (cohort methods train here) or the
-                precomputed all-client G (needs-all methods)."""
-                coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
-                # client-level activity: l processors of client i on model
-                # s behave as one update scaled by l (Remark 1)
-                coeff_client = (jnp.zeros((N,)).at[proc].add(coeffs_v))
-                act_client = (jnp.zeros((N,)).at[proc]
-                              .add(act_v) > 0).astype(jnp.float32)
-                if strat.needs_all_updates:
-                    idx = jnp.arange(N)
-                    G, coeff, act = train_in, coeff_client, act_client
-                else:
-                    # cohort path: only the sampled clients run training
-                    idx = jnp.argsort(-act_client)[:cohort]
-                    keys = jax.random.split(train_in, cohort)
-                    data_c = jax.tree.map(lambda x: x[idx], data)
-                    corr = strat.local_correction(state, idx)
-                    G, _ = local_all(params, keys, data_c, lr, corr)
-                    coeff, act = coeff_client[idx], act_client[idx]
-                new_w, new_state, extras = strat.aggregate(
-                    params, state, G, coeff, act, idx,
-                    d_col=d_col, lr=lr, round_idx=round_idx)
-                mets = convergence.round_metrics(coeffs_v, losses[proc],
-                                                 d_v_col, B_v)
-                mets["loss"] = jnp.sum(d_col * losses)
-                return new_w, new_state, mets, extras
-
-            if self.cfg.jit_round:
-                stats_fn = jax.jit(stats_fn)
-                round_fn = jax.jit(round_fn)
-            self._stats.append(stats_fn)
-            self._round_fn.append(round_fn)
-            def evaluate(params, test, acc=t.model.accuracy):
-                return acc(params, test)
-
-            self._loss_all.append(jax.jit(loss_all))      # tests / probes
-            self._eval.append(jax.jit(evaluate))
-
-    # ------------------------------------------------------------------
-    def _client_to_proc(self, arr_ns: jnp.ndarray) -> jnp.ndarray:
-        """[N,S] -> [V,S] by repeating each client's row B_i times."""
-        return arr_ns[self.proc_client]
-
-    def _probabilities(self, losses_ns: Optional[jnp.ndarray],
-                       norms_ns: Optional[jnp.ndarray]) -> jnp.ndarray:
-        """Strategy delegation (kept as a method: benchmarks monkeypatch it
-        to pin a fixed sampling distribution, e.g. Fig. 5)."""
-        return self.strategy.probabilities(self, losses_ns, norms_ns)
+    @property
+    def losses_ns(self) -> jnp.ndarray:
+        """Cached [N,S] loss reports from the last round's stats phase."""
+        return self._state.losses_ns
 
     # -- method-state views (stale family / stalevre diagnostics) --------
     @property
     def h_valid(self) -> jnp.ndarray:
         """[N,S]: 1 once client i's stale store for task s was refreshed."""
-        if not self.state or "h_valid" not in self.state[0]:
+        st = self.state
+        if not st or "h_valid" not in st[0]:
             raise AttributeError(
                 f"h_valid: method {self.cfg.method!r} keeps no stale store")
-        return jnp.stack([st["h_valid"] for st in self.state], axis=1)
+        return jnp.stack([t["h_valid"] for t in st], axis=1)
 
     @property
     def beta_state(self) -> stale.BetaState:
         """StaleVRE bookkeeping stacked back to the paper's [N,S] layout."""
-        if not self.state or "beta" not in self.state[0]:
+        st = self.state
+        if not st or "beta" not in st[0]:
             raise AttributeError(
                 f"beta_state: method {self.cfg.method!r} keeps no beta "
                 f"estimator state")
-        cols = [st["beta"] for st in self.state]
+        cols = [t["beta"] for t in st]
         return stale.BetaState(*[jnp.stack(f, axis=1)
                                  for f in zip(*cols)])
 
     # ------------------------------------------------------------------
+    def _probabilities(self, losses_ns: Optional[jnp.ndarray],
+                       norms_ns: Optional[jnp.ndarray] = None,
+                       ctx: Any = None) -> jnp.ndarray:
+        """Strategy delegation (kept as a method: benchmarks monkeypatch it
+        to pin a fixed sampling distribution, e.g. Fig. 5).  ``ctx`` is the
+        engine's traced sampler context inside the fused round; the legacy
+        eager path passes the server itself."""
+        return self.strategy.probabilities(self if ctx is None else ctx,
+                                           losses_ns, norms_ns)
+
+    # ------------------------------------------------------------------
     def run_round(self) -> Dict[str, Any]:
+        if not self.cfg.jit_round:
+            return self._run_round_legacy()
+        r0 = int(self._state.round)
+        self._state, mets = self.engine.round_step(self._state)
+        metrics: Dict[str, Any] = {"round": r0}
+        host = {k: np.asarray(v) for k, v in mets.items()}
+        for s in range(self.S):
+            if "beta" in host:
+                self.last_beta[s] = host["beta"][s]     # logged for Fig 3
+            for k in ("H1", "Zp", "Zl", "loss"):
+                metrics[f"{k}/{s}"] = float(host[k][s])
+        return metrics
+
+    # ------------------------------------------------------------------
+    def rollout(self, n_rounds: int) -> Dict[str, np.ndarray]:
+        """Advance ``n_rounds`` rounds via the engine's ``lax.scan`` (one
+        dispatch, no per-round host syncs) and return the stacked metrics
+        ([n_rounds, S] per key) on host."""
+        self._state, mets = self.engine.rollout(self._state, n_rounds)
+        return {k: np.asarray(v) for k, v in mets.items()}
+
+    # ------------------------------------------------------------------
+    # legacy eager orchestration (ServerConfig(jit_round=False))
+    # ------------------------------------------------------------------
+    def _build_legacy(self):
+        """Pre-fusion baseline: the per-task pieces are jitted individually
+        and the round is orchestrated eagerly in Python — what
+        ``engine_bench`` compares the fused/scanned paths against."""
+        eng = self.engine
+        self._legacy_stats, self._legacy_round = [], []
+        for s in range(self.S):
+            local_jit = jax.jit(eng._local_all[s])
+            loss_jit = jax.jit(eng._loss_all[s])
+            self._legacy_stats.append(
+                eng.make_stats_fn(s, loss_all=loss_jit, local_all=local_jit))
+            self._legacy_round.append(
+                eng.make_round_fn(s, local_all=local_jit))
+
+    def _run_round_legacy(self) -> Dict[str, Any]:
         cfg = self.cfg
-        lr = jnp.float32(cfg.lr * (cfg.lr_decay ** self.round))
-        round_idx = jnp.float32(self.round)
-        self.key, k_sample, *k_local = jax.random.split(self.key, 2 + self.S)
+        r = int(self._state.round)
+        lr = jnp.float32(cfg.lr * (cfg.lr_decay ** r))
+        round_idx = jnp.float32(r)
+        key, k_sample, *k_local = jax.random.split(self._state.key,
+                                                   2 + self.S)
+        params = list(self._state.params)
+        mstate = list(self._state.method_state)
 
         # ---- 1) stats for the sampler -----------------------------------
-        stats = [self._stats[s](self.params[s], self.tasks[s].data,
-                                k_local[s], lr) for s in range(self.S)]
+        stats = [self._legacy_stats[s](params[s], self.tasks[s].data,
+                                       k_local[s], lr) for s in range(self.S)]
         losses_ns = jnp.stack([st[0] for st in stats], axis=1)    # [N,S]
         norms_ns = (jnp.stack([st[2] for st in stats], axis=1)
                     if self.strategy.needs_grad_norms else None)
 
-        # ---- 2) sampling -------------------------------------------------
+        # ---- 2) sampling (server itself is the ctx: .d/.B/.avail/.m/.round)
         p = self._probabilities(losses_ns, norms_ns)              # [V,S]
         active = self.strategy.sample(k_sample, p, self, losses_ns)
 
-        # ---- 3) fused per-task round ------------------------------------
-        metrics: Dict[str, Any] = {"round": self.round}
+        # ---- 3) eager per-task round ------------------------------------
+        metrics: Dict[str, Any] = {"round": r}
         for s in range(self.S):
             train_in = stats[s][1] if self.strategy.needs_all_updates \
                 else k_local[s]
-            new_w, new_state, mets, extras = self._round_fn[s](
-                self.params[s], self.state[s], train_in, p[:, s],
+            new_w, new_state, mets, extras = self._legacy_round[s](
+                params[s], mstate[s], train_in, p[:, s],
                 active[:, s], losses_ns[:, s], self.tasks[s].data,
                 lr, round_idx)
-            self.params[s] = new_w
-            self.state[s] = new_state
+            params[s] = new_w
+            mstate[s] = new_state
             if "beta" in extras:
-                self.last_beta[s] = extras["beta"]    # logged for Fig 3
+                self.last_beta[s] = extras["beta"]
             for k in ("H1", "Zp", "Zl", "loss"):
                 metrics[f"{k}/{s}"] = float(mets[k])
 
-        self.round += 1
+        self._state = ExperimentState(
+            params=tuple(params), method_state=tuple(mstate), key=key,
+            round=self._state.round + 1, losses_ns=losses_ns)
         return metrics
 
     # ------------------------------------------------------------------
     def evaluate(self) -> List[float]:
-        return [float(self._eval[s](self.params[s], self.tasks[s].test))
-                for s in range(self.S)]
+        return self.engine.evaluate(self._state)
 
     def run(self, rounds: int, eval_every: int = 5,
             log: Optional[Callable[[Dict[str, Any]], None]] = None

@@ -32,7 +32,13 @@ def serve(args):
     if args.ckpt:
         like = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
-        params = checkpoint.restore(args.ckpt, like)
+        if checkpoint.is_state_checkpoint(args.ckpt):
+            # full ExperimentState from train.py --ckpt-every: pull one
+            # model's params out of the state payload
+            params = checkpoint.restore_model_params(args.ckpt, like,
+                                                     model=args.ckpt_model)
+        else:
+            params = checkpoint.restore(args.ckpt, like)
 
     B = args.batch
     prompt = {"tokens": jax.random.randint(key, (B, args.prompt_len), 0,
@@ -81,7 +87,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="params checkpoint OR a full-state checkpoint "
+                         "from train.py --ckpt-every (state_N)")
+    ap.add_argument("--ckpt-model", type=int, default=0,
+                    help="which model's params to serve from a full-state "
+                         "checkpoint")
     ap.add_argument("--seed", type=int, default=0)
     serve(ap.parse_args())
 

@@ -12,9 +12,18 @@ Multiple models (--models or repeated --arch) train concurrently: each
 round, every model's cohort is drawn from the same shared client population
 under the shared server budget m — the MMFL coupling.
 
+The loop is built on the SAME ``ExperimentState`` pytree as the single-host
+engine (``repro.core.engine``): per-model params, per-model method state
+(the StaleVR family's stale store + beta estimator ride along as ordinary
+shardable pytrees — ``--method stalevre`` runs at production scale), the
+PRNG key, the round counter, and the sampler's loss cache.  Every random
+draw is derived from the state's key, so ``--ckpt-every N`` checkpoints the
+full state and ``--resume`` continues a killed run with IDENTICAL metrics.
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b-reduced \
-      --models 2 --rounds 20 --clients 64 --method lvr
+      --models 2 --rounds 20 --clients 64 --method stalevre \
+      --ckpt-every 5 --resume
 """
 from __future__ import annotations
 
@@ -32,7 +41,8 @@ import numpy as np
 from repro.checkpoint import checkpoint
 from repro.configs.base import DEFAULT_ROUND, FLRoundConfig, InputShape
 from repro.configs.registry import get_config
-from repro.core import methods
+from repro.core import methods, stale
+from repro.core.engine import ExperimentState
 from repro.data import synthetic
 from repro.fl import steps as fl_steps
 from repro.launch.mesh import make_host_mesh
@@ -54,9 +64,21 @@ def _client_data(rng, cfg, n_clients: int, seq_len: int, per_client: int):
     return np.stack(data)  # [N, per_client, seq+1]
 
 
-def train(args) -> Dict:
+def _batch_ids(key, data: np.ndarray, cohort: np.ndarray,
+               local_batch: int) -> np.ndarray:
+    """Cohort minibatch token tensor, indices derived from the state key
+    (NOT a host RNG) so a resumed run replays the identical schedule."""
+    C = len(cohort)
+    bidx = np.asarray(jax.random.randint(
+        key, (C, local_batch), 0, data.shape[1]))
+    return np.stack([data[c][bi] for c, bi in zip(cohort, bidx)])
+
+
+def _init_models(args, key):
+    """Static per-model machinery (configs, jitted steps, client shards) —
+    everything that is NOT part of the experiment state."""
     rng = np.random.default_rng(args.seed)
-    strategy = methods.make(args.method)
+    strategy = methods.make(args.method, args)   # args carries eta_cap etc.
     mesh = make_host_mesh()
     C = shd.dp_size(mesh)
     rcfg = dataclasses.replace(
@@ -65,39 +87,78 @@ def train(args) -> Dict:
         param_dtype="float32")
     shape = InputShape("train_cli", args.seq_len, C * args.local_batch,
                        "train")
-
     archs = args.arch if len(args.arch) > 1 else args.arch * args.models
-    models = []
-    key = jax.random.PRNGKey(args.seed)
+    models, params = [], []
     for s, arch in enumerate(archs):
         cfg = get_config(arch)
         key, k = jax.random.split(key)
-        params = transformer.init(k, cfg)
+        params.append(transformer.init(k, cfg))
         step = fl_steps.build_train_step(cfg, mesh, shape, rcfg,
-                                         mode="fedavg")
+                                         mode="fedavg",
+                                         stale=strategy.uses_stale_store)
         report = fl_steps.build_loss_report_step(cfg, mesh, shape, strategy)
         data = _client_data(rng, cfg, args.clients, args.seq_len,
                             args.per_client)
-        models.append(dict(cfg=cfg, params=params, step=jax.jit(step),
+        models.append(dict(cfg=cfg, step=jax.jit(step),
                            report=jax.jit(report) if report else None,
                            data=data, name=f"{arch}#{s}"))
+    return strategy, mesh, C, models, params, key
 
+
+def _init_state(strategy, params: List, key, N: int, S: int
+                ) -> ExperimentState:
+    """The full round state as one pytree: per-model params, per-model
+    method state (stale stores / beta estimators for the StaleVR family,
+    empty for stateless samplers), PRNG key, round, sampler loss cache."""
+    mstate = tuple(strategy.init_state(p, N) for p in params)
+    return ExperimentState(params=tuple(params), method_state=mstate,
+                           key=key, round=jnp.asarray(0, jnp.int32),
+                           losses_ns=jnp.ones((N, S), jnp.float32))
+
+
+def train(args) -> Dict:
+    strategy, mesh, C, models, params0, key = _init_models(
+        args, jax.random.PRNGKey(args.seed))
     N, S = args.clients, len(models)
     avail = jnp.ones((N, S), bool)
     B = jnp.ones((N,))
     d = jnp.full((N, S), 1.0 / N)
     m_budget = args.active_rate * N
-    # clients == processors here (B = 1): the sampler context is [N]-level
-    ctx = methods.SamplerContext(d=d, B=B, avail=avail, m=m_budget)
-    history = []
-    losses_ns = jnp.ones((N, S))
     os.makedirs(args.out, exist_ok=True)
 
+    state = _init_state(strategy, params0, key, N, S)
+    start_round, history = 0, []
+    if args.resume:
+        restored, step = checkpoint.restore_state(args.out, state)
+        if restored is not None:
+            state, start_round = restored, int(step)
+            print(f"resumed from {args.out} at round {start_round}",
+                  flush=True)
+            hist_path = os.path.join(args.out, "history.json")
+            if os.path.exists(hist_path):
+                history = [h for h in json.load(open(hist_path))
+                           if h["round"] < start_round]
+
     with mesh:
-        for r in range(args.rounds):
+        for r in range(start_round, args.rounds):
             t0 = time.time()
-            ctx.round = r
-            key, k_sample, k_batch = jax.random.split(key, 3)
+            # clients == processors here (B = 1): [N]-level sampler context
+            ctx = methods.SamplerContext(d=d, B=B, avail=avail, m=m_budget,
+                                         round=r)
+            # every draw this round forks from the carried key — the only
+            # RNG authority, so kill/--resume replays identically.  Streams
+            # are made disjoint by nesting fold_in per dimension (phase tag
+            # first), not by arithmetic on a shared id space.
+            new_key, k_round = jax.random.split(state.key)
+            k_sample = jax.random.fold_in(k_round, 0)
+
+            def stream(phase: int, s: int, ci: int):
+                k = jax.random.fold_in(k_round, phase)
+                return jax.random.fold_in(jax.random.fold_in(k, s), ci)
+            params = list(state.params)
+            mstate = list(state.method_state)
+            losses_ns = state.losses_ns
+
             if r % args.report_every == 0:
                 # scalar loss reports from EVERY client (the paper's only
                 # LVR upload): the sampler sees fresh losses, not ones
@@ -110,12 +171,10 @@ def train(args) -> Dict:
                     for ci in range(int(np.ceil(N / C))):
                         ids = np.arange(N)[ci * C:(ci + 1) * C]
                         cohort = np.resize(ids, C)
-                        bidx = rng.integers(0, mdl["data"].shape[1],
-                                            (C, args.local_batch))
-                        toks = np.stack([mdl["data"][c][bi]
-                                         for c, bi in zip(cohort, bidx)])
+                        toks = _batch_ids(stream(1, s, ci), mdl["data"],
+                                          cohort, args.local_batch)
                         rep = np.asarray(mdl["report"](
-                            mdl["params"],
+                            params[s],
                             {"tokens": jnp.asarray(toks[..., :-1])}))
                         ln[ids, s] = rep[: len(ids)]
                     losses_ns = jnp.asarray(ln)
@@ -137,31 +196,50 @@ def train(args) -> Dict:
                 coeff_n = np.asarray(strategy.coefficients(
                     d[:, s], B, jnp.clip(p[:, s], 1e-3, None), act_col))
                 n_chunks = int(np.ceil(len(active_ids) / C))
-                params0 = mdl["params"]
+                params0_s = params[s]
+                use_stale = strategy.uses_stale_store
+                zero_sm = (jax.tree.map(jnp.zeros_like, params0_s)
+                           if use_stale else None)
                 delta_acc = None
                 h1, losses_log = 0.0, []
+                g_rows = []
                 for ci in range(n_chunks):
                     ids = active_ids[ci * C:(ci + 1) * C]
                     cohort = np.resize(ids, C)        # pad by repeating
                     valid = np.zeros(C)
                     valid[: len(ids)] = 1.0
                     dweights_c = jnp.asarray(coeff_n[cohort] * valid)
-                    bidx = rng.integers(0, mdl["data"].shape[1],
-                                        (C, args.local_batch))
-                    toks = np.stack([mdl["data"][c][bi]
-                                     for c, bi in zip(cohort, bidx)])
+                    toks = _batch_ids(stream(2, s, ci), mdl["data"],
+                                      cohort, args.local_batch)
                     batch = {"tokens": jnp.asarray(toks[..., :-1])}
-                    new_params, mets = mdl["step"](
-                        params0, batch, jnp.ones((C,)), dweights_c)
-                    delta = jax.tree.map(lambda a, b: a - b, params0,
+                    if use_stale:
+                        # Eq. 18's fresh-update half per chunk; the stale
+                        # mean over ALL clients is applied once, after the
+                        # chunks (zero stale_sum here)
+                        h_c = jax.tree.map(lambda x: x[cohort],
+                                           mstate[s]["h"])
+                        new_params, mets, G, _beta_c = mdl["step"](
+                            params0_s, batch, jnp.ones((C,)), dweights_c,
+                            h_c, zero_sm)
+                        g_rows.append(jax.tree.map(
+                            lambda x: x[: len(ids)], G))
+                    else:
+                        new_params, mets = mdl["step"](
+                            params0_s, batch, jnp.ones((C,)), dweights_c)
+                    delta = jax.tree.map(lambda a, b: a - b, params0_s,
                                          new_params)
                     delta_acc = delta if delta_acc is None else jax.tree.map(
                         lambda a, b: a + b, delta_acc, delta)
                     h1 += float(mets["H1"])
                     client_losses = np.asarray(mets["losses"])[: len(ids)]
                     losses_log.append(client_losses)
-                mdl["params"] = jax.tree.map(lambda a, b: a - b, params0,
-                                             delta_acc)
+                new_w = jax.tree.map(lambda a, b: a - b, params0_s,
+                                     delta_acc)
+                if use_stale:
+                    new_w, mstate[s] = _apply_stale(
+                        strategy, mstate[s], new_w, d[:, s], r,
+                        active_ids, g_rows)
+                params[s] = new_w
                 all_losses = np.concatenate(losses_log)
                 if mdl["report"] is None or args.report_every > 1:
                     # keep the sampler's loss view fresh from training
@@ -173,20 +251,56 @@ def train(args) -> Dict:
                 round_mets[f"loss/{mdl['name']}"] = float(np.mean(all_losses))
                 round_mets[f"H1/{mdl['name']}"] = h1
                 round_mets[f"active/{mdl['name']}"] = int(len(active_ids))
+            state = ExperimentState(
+                params=tuple(params), method_state=tuple(mstate),
+                key=new_key, round=jnp.asarray(r + 1, jnp.int32),
+                losses_ns=losses_ns)
             round_mets["time_s"] = round(time.time() - t0, 2)
             history.append(round_mets)
             if (r + 1) % args.log_every == 0:
                 print(json.dumps(round_mets), flush=True)
             if args.ckpt_every and (r + 1) % args.ckpt_every == 0:
-                for mdl in models:
-                    checkpoint.save(
-                        os.path.join(args.out,
-                                     f"{mdl['name']}_ckpt_{r + 1}"),
-                        mdl["params"], step=r + 1)
+                checkpoint.save_state(args.out, state, r + 1)
+                # flush metrics alongside the state: a killed run must not
+                # lose its pre-kill history on --resume
+                _write_history(args.out, history)
 
-    with open(os.path.join(args.out, "history.json"), "w") as f:
+    _write_history(args.out, history)
+    return {"history": history, "models": [m["name"] for m in models],
+            "state": state}
+
+
+def _write_history(out_dir: str, history: List[Dict]) -> None:
+    with open(os.path.join(out_dir, "history.json"), "w") as f:
         json.dump(history, f, indent=1)
-    return {"history": history, "models": [m["name"] for m in models]}
+
+
+def _apply_stale(strategy, ms: Dict, w_after_corr, d_col: jnp.ndarray,
+                 r: int, active_ids: np.ndarray, g_rows: List):
+    """Finish Eq. 18 for one model and advance its stale state.
+
+    ``w_after_corr`` already carries the per-chunk fresh-update corrections
+    sum_active P (G - beta h) from ``fl.steps.stale_step``; the epilogue is
+    the SAME sequence ``StaleVRFamily.aggregate`` runs on the server —
+    ``strategy._beta`` (measured/estimated merge + estimator update),
+    h_valid masking, the stale mean over the pre-refresh store, then
+    ``StaleStoreMixin.refresh`` — called on the concatenated active-cohort
+    rows, so the method math keeps a single authority in
+    ``repro.core.methods``."""
+    idx = jnp.asarray(active_ids, jnp.int32)
+    act = jnp.ones((len(active_ids),), jnp.float32)
+    # per-chunk [len(ids), ...] update slices, in the order the chunks
+    # consumed active_ids -> one [A, ...] cohort pytree
+    G = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *g_rows)
+    h_cohort = jax.tree.map(lambda x: x[idx], ms["h"])
+    beta_all, ms = strategy._beta(ms, G, h_cohort, act, idx,
+                                  jnp.float32(r))
+    beta_all = beta_all * ms["h_valid"]      # stale term only if valid
+    sm = stale.stale_mean(ms["h"], d_col * beta_all)
+    new_w = jax.tree.map(lambda a, b: a - b.astype(a.dtype),
+                         w_after_corr, sm)
+    h, hv = strategy.refresh(ms, G, act, idx)
+    return new_w, {**ms, "h": h, "h_valid": hv}
 
 
 def build_parser():
@@ -206,10 +320,16 @@ def build_parser():
                     help="rounds between all-client loss-report refreshes")
     ap.add_argument("--method", default="lvr",
                     choices=methods.distributed_methods())
+    ap.add_argument("--eta-cap", type=float, default=None,
+                    help="footnote-3 per-client participation cap "
+                         "(capped water-filling; 1.0 == uncapped)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)
-    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint the FULL ExperimentState every N rounds")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest state checkpoint in --out")
     ap.add_argument("--out", default="results/train")
     return ap
 

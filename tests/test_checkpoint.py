@@ -26,6 +26,52 @@ def test_checkpoint_roundtrip(tmp_path):
     assert checkpoint.latest_step(str(tmp_path)) == 1
 
 
+def test_save_restore_state_helpers(tmp_path):
+    """Full-state checkpoint helpers: step naming, latest-pick, NamedTuple
+    leaves (the ExperimentState/BetaState shapes) round-trip exactly."""
+    from repro.core.stale import BetaState
+    state = {"params": ({"w": jnp.arange(6.0).reshape(2, 3)},),
+             "beta": BetaState(jnp.ones((4,)), jnp.zeros((4,)),
+                               jnp.zeros((4,)), jnp.zeros((4,))),
+             "round": jnp.asarray(7, jnp.int32)}
+    checkpoint.save_state(str(tmp_path), state, step=3)
+    checkpoint.save_state(str(tmp_path), state, step=7)
+    restored, step = checkpoint.restore_state(str(tmp_path), state)
+    assert step == 7          # latest wins
+    for got, want in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    restored, step = checkpoint.restore_state(str(tmp_path), state, step=3)
+    assert step == 3
+    none, nstep = checkpoint.restore_state(str(tmp_path / "empty"), state)
+    assert none is None and nstep is None
+
+
+def test_restore_model_params_from_state(tmp_path):
+    """The deploy path: serve.py pulls ONE model's params out of a full
+    ExperimentState checkpoint written by train.py --ckpt-every."""
+    from repro.core.engine import ExperimentState
+    p0 = {"w": jnp.arange(4.0)}
+    p1 = {"w": jnp.arange(4.0) + 10.0}
+    state = ExperimentState(params=(p0, p1), method_state=({}, {}),
+                            key=jax.random.PRNGKey(0),
+                            round=jnp.asarray(3, jnp.int32),
+                            losses_ns=jnp.ones((2, 2)))
+    path = checkpoint.save_state(str(tmp_path), state, step=3)
+    assert checkpoint.is_state_checkpoint(path)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), p0)
+    for model, want in ((0, p0), (1, p1)):
+        got = checkpoint.restore_model_params(path, like, model=model)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(want["w"]))
+    with np.testing.assert_raises(KeyError):
+        checkpoint.restore_model_params(path, like, model=2)
+    # a bare params checkpoint is NOT a state checkpoint
+    bare = os.path.join(tmp_path, "params_only")
+    checkpoint.save(bare, p0)
+    assert not checkpoint.is_state_checkpoint(bare)
+
+
 def _quadratic(params):
     return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum((params["b"] + 1) ** 2)
 

@@ -1,0 +1,284 @@
+"""Tests for the functional engine API (``repro.core.engine``):
+
+  * scanned ``rollout`` == n eager ``run_round`` calls for EVERY registered
+    method (the facade and the scan share one pure transition),
+  * vmapped ``run_seeds`` == per-seed sequential rollouts,
+  * full ``ExperimentState`` checkpoint round-trips (stale stores, SCAFFOLD
+    variates, beta estimators included) and mid-run resume equality,
+  * the footnote-3 ``eta_cap`` config option,
+  * the ``run_experiment(spec)`` entry point.
+
+Everything runs on the linear micro-setting (ms compiles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.core import methods, sampling
+from repro.core.engine import ExperimentState, RoundEngine, ServerConfig
+from repro.core.server import MMFLServer
+from repro.fl.experiments import (ExperimentSpec, build_linear_setting,
+                                  run_experiment)
+
+
+@pytest.fixture(scope="module")
+def linear_world():
+    return build_linear_setting(n_models=2, n_clients=8, seed=0)
+
+
+def _cfg(method, **kw):
+    base = dict(method=method, local_epochs=2, seed=1, active_rate=0.3,
+                batch_size=8)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _tree_allclose(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **kw)
+
+
+# ---------------------------------------------------------------------------
+# rollout (lax.scan) == eager run_round, for every registered method
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+def test_rollout_matches_eager_rounds(linear_world, method):
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail, _cfg(method))
+    eager = [srv.run_round() for _ in range(3)]
+
+    eng = RoundEngine(tasks, B, avail, _cfg(method))
+    state, mets = eng.rollout(eng.init_state(), 3)
+    for r in range(3):
+        for k in ("H1", "Zp", "Zl", "loss"):
+            for s in range(eng.S):
+                np.testing.assert_allclose(
+                    eager[r][f"{k}/{s}"], np.asarray(mets[k])[r, s],
+                    rtol=1e-4, atol=1e-6, err_msg=f"{method} {k} r{r} s{s}")
+    for s in range(eng.S):
+        _tree_allclose(srv.params[s], state.params[s], rtol=1e-4, atol=1e-6)
+    # method state converged identically too (stale stores, variates, ...)
+    _tree_allclose(list(srv.state), list(state.method_state),
+                   rtol=1e-4, atol=1e-6)
+    assert int(state.round) == 3 == srv.round
+
+
+def test_rollout_chunks_compose(linear_world):
+    """rollout(2) then rollout(2) == rollout(4) (scan chunking is exact)."""
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    s1, _ = eng.rollout(eng.init_state(), 4)
+    mid, _ = eng.rollout(eng.init_state(), 2)
+    s2, _ = eng.rollout(mid, 2)
+    _tree_allclose(s1, s2, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# run_seeds (vmap) == per-seed sequential rollouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["lvr", "stalevre", "scaffold"])
+def test_run_seeds_matches_sequential(linear_world, method):
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg(method))
+    seeds = [0, 1, 2]
+    _, mets_b, accs_b = eng.run_seeds(seeds, 3)
+    assert np.asarray(accs_b).shape == (3, eng.S)
+    for i, sd in enumerate(seeds):
+        stf, mets = eng.rollout(eng.init_state(seed=sd), 3)
+        for k in mets:
+            np.testing.assert_allclose(
+                np.asarray(mets_b[k])[i], np.asarray(mets[k]),
+                rtol=1e-4, atol=1e-6, err_msg=f"{method} seed {sd} {k}")
+        np.testing.assert_allclose(np.asarray(accs_b)[i],
+                                   np.asarray(eng.evaluate_fn(stf)),
+                                   atol=1e-6)
+
+
+def test_run_seeds_seeds_differ(linear_world):
+    """Replicates must be independent: different seeds, different params."""
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg("lvr"))
+    states, _, _ = eng.run_seeds([0, 1], 2)
+    w = np.asarray(states.params[0]["w"])           # [n_seeds, ...]
+    assert not np.allclose(w[0], w[1])
+
+
+# ---------------------------------------------------------------------------
+# full-state checkpointing: round-trip + mid-run resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+def test_state_checkpoint_roundtrip(linear_world, tmp_path, method):
+    """save/restore must be exact for every method's full state — params,
+    stale stores, SCAFFOLD variates, and StaleVRE beta estimators."""
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg(method))
+    state, _ = eng.rollout(eng.init_state(), 2)
+    checkpoint.save_state(str(tmp_path), state, step=2)
+    restored, step = checkpoint.restore_state(str(tmp_path),
+                                              eng.init_state())
+    assert step == 2
+    for got, want in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+    assert int(restored.round) == 2
+
+
+def test_resume_continues_identically(linear_world, tmp_path):
+    """2 rounds + checkpoint + restore + 2 rounds == 4 straight rounds."""
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    straight, mets4 = eng.rollout(eng.init_state(), 4)
+
+    half, _ = eng.rollout(eng.init_state(), 2)
+    checkpoint.save_state(str(tmp_path), half, step=2)
+    # a FRESH engine (new process semantics) restores and continues
+    eng2 = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    restored, _ = checkpoint.restore_state(str(tmp_path), eng2.init_state())
+    resumed, mets_tail = eng2.rollout(restored, 2)
+    _tree_allclose(straight, resumed, rtol=1e-6, atol=1e-7)
+    for k in mets_tail:
+        np.testing.assert_allclose(np.asarray(mets_tail[k]),
+                                   np.asarray(mets4[k])[2:],
+                                   rtol=1e-5, atol=1e-7, err_msg=k)
+
+
+def test_restore_state_empty_dir(tmp_path, linear_world):
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg("lvr"))
+    restored, step = checkpoint.restore_state(str(tmp_path),
+                                              eng.init_state())
+    assert restored is None and step is None
+
+
+# ---------------------------------------------------------------------------
+# footnote-3 capped water-filling as a config option
+# ---------------------------------------------------------------------------
+
+
+def test_eta_cap_binds(linear_world):
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail,
+                     _cfg("lvr", eta_cap=0.25, active_rate=0.5))
+    losses = jnp.asarray(
+        np.random.default_rng(0).uniform(0.5, 2.0, (srv.N, srv.S)),
+        jnp.float32)
+    p = np.asarray(srv._probabilities(losses))
+    assert np.all(p.sum(axis=1) <= 0.25 + 1e-5)
+    # still trains end-to-end through the engine
+    mets = srv.run_round()
+    assert np.isfinite(mets["loss/0"])
+
+
+def test_eta_cap_one_reproduces_uncapped(linear_world):
+    """eta_cap=1 must reproduce the paper's uncapped Thm 8/9 solution
+    EXACTLY (the capped KKT generalization degenerates to it)."""
+    tasks, B, avail = linear_world
+    losses = jnp.asarray(
+        np.random.default_rng(1).uniform(0.5, 2.0, (len(B), len(tasks))),
+        jnp.float32)
+    p_ref = MMFLServer(tasks, B, avail,
+                       _cfg("lvr", active_rate=0.4))._probabilities(losses)
+    p_one = MMFLServer(tasks, B, avail,
+                       _cfg("lvr", eta_cap=1.0,
+                            active_rate=0.4))._probabilities(losses)
+    np.testing.assert_allclose(np.asarray(p_one), np.asarray(p_ref),
+                               atol=1e-6)
+
+
+def test_eta_cap_routes_to_capped_solver(linear_world):
+    """The mixin must call solve_waterfilling_capped with the per-client
+    eta expanded over processors."""
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail, _cfg("stalevre", eta_cap=0.3))
+    losses = jnp.ones((srv.N, srv.S))
+    util = jnp.abs(losses) * srv.d / srv.B[:, None]
+    U = sampling.processor_budget_utilities(
+        jnp.where(srv.avail, util, 0.0), srv.B)
+    eta_v = sampling.processor_budget_utilities(
+        jnp.full((srv.N, 1), 0.3), srv.B)[:, 0]
+    want = sampling.solve_waterfilling_capped(U, srv.m, eta_v)
+    np.testing.assert_allclose(np.asarray(srv._probabilities(losses)),
+                               np.asarray(want), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# run_experiment entry point
+# ---------------------------------------------------------------------------
+
+
+def test_run_experiment_single_seed():
+    out = run_experiment(ExperimentSpec(
+        method="lvr", linear=True, n_models=2, n_clients=8, rounds=4,
+        eval_every=2, server=dict(local_epochs=2, active_rate=0.3)))
+    assert out["metrics"]["loss"].shape == (4, 2)
+    assert [r for r, _ in out["acc"]] == [2, 4]
+    assert int(out["state"].round) == 4
+    assert all(np.isfinite(a) for a in out["final_acc"])
+
+
+def test_run_experiment_seed_fleet_matches_single_runs():
+    spec = ExperimentSpec(
+        method="lvr", linear=True, n_models=2, n_clients=8, rounds=3,
+        seeds=(0, 1), server=dict(local_epochs=2, active_rate=0.3))
+    fleet = run_experiment(spec)
+    assert fleet["final_acc"].shape == (2, 2)
+    for i, sd in enumerate(spec.seeds):
+        single = run_experiment(ExperimentSpec(
+            method="lvr", linear=True, n_models=2, n_clients=8, rounds=3,
+            seeds=(sd,), eval_every=3,
+            server=dict(local_epochs=2, active_rate=0.3)))
+        np.testing.assert_allclose(fleet["final_acc"][i],
+                                   single["final_acc"], atol=1e-6)
+        np.testing.assert_allclose(fleet["metrics"]["loss"][i],
+                                   single["metrics"]["loss"],
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# facade fidelity
+# ---------------------------------------------------------------------------
+
+
+def test_facade_views_read_through(linear_world):
+    """The imperative views (params/state/h_valid/beta_state/losses_ns)
+    must reflect the current functional state."""
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail, _cfg("stalevre"))
+    assert srv.round == 0
+    srv.run_round()
+    assert srv.round == 1
+    assert srv.h_valid.shape == (srv.N, srv.S)
+    assert srv.beta_state.beta_hat.shape == (srv.N, srv.S)
+    assert srv.losses_ns.shape == (srv.N, srv.S)
+    # state_pytree is the checkpointable whole
+    st = srv.state_pytree
+    assert isinstance(st, ExperimentState)
+    assert int(st.round) == 1
+
+
+def test_probabilities_monkeypatch_respected(linear_world):
+    """Fig. 5 pins a fixed sampling distribution by monkeypatching
+    ``_probabilities`` — the traced engine path must honor it when patched
+    before the first round."""
+    tasks, B, avail = linear_world
+    srv = MMFLServer(tasks, B, avail, _cfg("fedvarp", active_rate=0.4))
+    fixed = np.full((srv.V, srv.S), 0.1, np.float32)
+    srv._probabilities = lambda *a, _p=jnp.asarray(fixed): _p
+    mets = srv.run_round()
+    # with p pinned at 0.1 and d/(B p) coefficients, H1 is fully determined
+    # by which clients fired — just check the round ran and stayed finite
+    assert np.isfinite(mets["H1/0"])
+    srv2 = MMFLServer(tasks, B, avail, _cfg("fedvarp", active_rate=0.4))
+    srv2._probabilities = lambda *a, _p=jnp.asarray(fixed): _p
+    # same seed + same pinned p -> identical round
+    mets2 = srv2.run_round()
+    assert mets == mets2

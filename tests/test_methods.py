@@ -43,9 +43,13 @@ def test_unknown_method_raises():
 def test_distributed_subset():
     dist = methods.distributed_methods()
     assert "lvr" in dist and "random" in dist
+    # the stale store is an ordinary [N,...] pytree in ExperimentState now,
+    # so StaleVRE runs under the distributed trainer
+    assert "stalevre" in dist
     for name in dist:
         cls = methods.get_class(name)
-        assert not cls.needs_all_updates and not cls.uses_stale_store
+        # all-client fresh updates (GVR/StaleVR/full) remain server-only
+        assert not cls.needs_all_updates
 
 
 def test_server_rejects_unknown_method():
