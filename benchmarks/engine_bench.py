@@ -9,6 +9,11 @@ micro-setting (64 clients, 3 tasks):
     (ONE dispatch per chunk of rounds, metrics stacked on device) vs the
     eager per-round ``run_round`` loop (one fused dispatch + host metric
     syncs per round), i.e. how much the per-round host round-trips cost.
+  * ``bench_sweep``         — the sweep harness's vmapped seed fleet
+    (``run_seeds``: init+rollout+eval for EVERY seed in one dispatch) vs
+    the per-seed Python loop the legacy paper-table harness ran (one
+    init + scanned rollout + eval dispatch per seed), i.e. what Table-1
+    error bars cost before the sweep subsystem.
 
 The paper's CNN world is local-compute-bound on CPU and shows ~1x on both;
 per-round orchestration is exactly what dominates once local training is
@@ -96,6 +101,64 @@ def bench_scan_rollout(method: str = "stalevre", rounds: int = 30,
     return us, derived
 
 
+def bench_sweep(method: str = "lvr", n_seeds: int = 8, rounds: int = 20,
+                reps: int = 3) -> Tuple[float, str]:
+    """Vmapped seed fleet (``run_seeds``) vs the per-seed loops it
+    replaced, on the dispatch-bound 16-client linear micro world:
+
+      * ``loop``      — the legacy ``paper_tables`` shape: eager per-round
+        ``run_round`` + final eval per seed (generously sharing ONE
+        compiled server across seeds; the real legacy harness also paid a
+        fresh compile per (seed, method)),
+      * ``scan_loop`` — the strongest manual loop on the functional
+        engine: one scanned rollout + eval dispatch per seed.
+
+    Throughput unit is seed-rounds/sec; ``derived`` leads with the
+    fleet-vs-legacy-loop speedup the acceptance gate checks (>= 1.5x)."""
+    tasks, B, avail = build_linear_setting(n_models=3, n_clients=16, seed=0)
+    seeds = list(range(n_seeds))
+
+    srv = MMFLServer(tasks, B, avail, _cfg(method))
+
+    def eager_loop():
+        for sd in seeds:
+            srv.state_pytree = srv.engine.init_state(seed=sd)
+            for _ in range(rounds):
+                srv.run_round()
+            srv.evaluate()
+
+    eager_loop()                                      # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eager_loop()
+    loop_srps = reps * n_seeds * rounds / (time.perf_counter() - t0)
+
+    eng = RoundEngine(tasks, B, avail, _cfg(method))
+
+    def scan_loop():
+        for sd in seeds:
+            state, _ = eng.rollout(eng.init_state(seed=sd), rounds)
+            eng.evaluate(state)
+
+    scan_loop()                                       # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        scan_loop()
+    scan_srps = reps * n_seeds * rounds / (time.perf_counter() - t0)
+
+    jax.block_until_ready(eng.run_seeds(seeds, rounds))   # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(eng.run_seeds(seeds, rounds))
+    fleet_srps = reps * n_seeds * rounds / (time.perf_counter() - t0)
+
+    us = 1e6 / fleet_srps
+    derived = (f"speedup={fleet_srps / loop_srps:.2f}x;"
+               f"fleet_srps={fleet_srps:.2f};loop_srps={loop_srps:.2f};"
+               f"scanloop_srps={scan_srps:.2f}")
+    return us, derived
+
+
 def _parse(derived: str) -> Dict[str, float]:
     out = {}
     for part in derived.split(";"):
@@ -118,14 +181,18 @@ def main():
     us_f, d_f = bench_round_engine(args.method, reps=reps)
     us_s, d_s = bench_scan_rollout(args.method, rounds=rounds,
                                    reps=2 if args.smoke else 3)
+    us_w, d_w = bench_sweep(args.method, n_seeds=4 if args.smoke else 8,
+                            rounds=rounds, reps=2 if args.smoke else 3)
     report = {
         "method": args.method,
         "smoke": bool(args.smoke),
         "fused_vs_legacy": {"us_per_round": us_f, **_parse(d_f)},
         "scan_vs_eager": {"us_per_round": us_s, **_parse(d_s)},
+        "sweep_fleet_vs_loop": {"us_per_seed_round": us_w, **_parse(d_w)},
     }
     print(f"engine_round_{args.method},{us_f:.1f},{d_f}")
     print(f"engine_scan_{args.method},{us_s:.1f},{d_s}")
+    print(f"engine_sweep_{args.method},{us_w:.1f},{d_w}")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {os.path.abspath(args.out)}")

@@ -34,20 +34,31 @@ def render() -> str:
     if t3 or t5:
         sc = (t3 or t5).get("_scale", {})
         scale_txt = (f"{sc.get('n_clients', '?')} clients, "
-                     f"{sc.get('rounds', '?')} rounds" if sc
+                     f"{sc.get('rounds', '?')} rounds, "
+                     f"{sc.get('n_seeds', '?')}-seed fleets" if sc
                      else "synthetic §6.1 world")
         lines.append("**Table 1 (relative final accuracy vs full "
                      f"participation; {scale_txt}, synthetic §6.1 "
                      "world):**\n")
         lines.append("| method | 3 tasks | 5 tasks |")
         lines.append("|---|---|---|")
+        def _cell(table, k):
+            # the ± must live on the same scale as the value: divide the
+            # absolute-accuracy spread by the full-participation baseline
+            if not (table and k in table):
+                return "-"
+            if "relative" not in table[k]:
+                # no full-participation baseline in this run: absolute
+                # accuracies, labeled so (never silently passed off as
+                # relative-to-full)
+                return f"{table[k]['acc']:.3f} ± {table[k]['std']:.3f} (abs)"
+            base = table.get("full", {}).get("acc") or 1.0
+            return (f"{table[k]['relative']:.3f} ± "
+                    f"{table[k]['std'] / base:.3f}")
+
         keys = [k for k in PRETTY if (t3 and k in t3) or (t5 and k in t5)]
         for k in keys:
-            c3 = f"{t3[k]['relative']:.3f} ± {t3[k]['std']:.3f}" \
-                if t3 and k in t3 else "-"
-            c5 = f"{t5[k]['relative']:.3f} ± {t5[k]['std']:.3f}" \
-                if t5 and k in t5 else "-"
-            lines.append(f"| {PRETTY[k]} | {c3} | {c5} |")
+            lines.append(f"| {PRETTY[k]} | {_cell(t3, k)} | {_cell(t5, k)} |")
         lines.append("")
 
     f2 = _load("fig2_step_size")
@@ -83,12 +94,14 @@ def render() -> str:
                      + "; ".join(rows) + "\n")
     f5 = _load("fig5_stale")
     if f5:
-        static = {k: v for k, v in f5.items() if k != "stalevr"}
+        # sweep-harness schema: {"acc": {label: acc}, "n_seeds": n}
+        acc = f5["acc"] if "acc" in f5 else f5
+        static = {k: v for k, v in acc.items() if k != "stalevr"}
         best_static = max(static.values())
         lines.append(
             f"**Fig 5** fixed-sampling accuracy: StaleVR "
-            f"{f5['stalevr']:.3f} vs best static-β {best_static:.3f} "
-            f"({'✓' if f5['stalevr'] >= best_static - 0.01 else '✗'} "
+            f"{acc['stalevr']:.3f} vs best static-β {best_static:.3f} "
+            f"({'✓' if acc['stalevr'] >= best_static - 0.01 else '✗'} "
             "dynamic β at least matches any fixed β)\n")
     ab = _load("ablation_budget")
     if ab:

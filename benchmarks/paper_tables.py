@@ -1,23 +1,36 @@
-"""Paper-experiment benchmarks: one function per table/figure of the paper.
+"""Paper-experiment benchmarks: one function per table/figure of the paper,
+all running through the declarative sweep harness (``repro.fl.sweep``).
 
 Each returns (rows, derived) where rows are dicts destined for
 ``results/paper/*.json`` and derived is the headline scalar for the CSV.
 Scale: the paper's client/partition statistics with synthetic data
 (DESIGN.md §6); ``fast=True`` shrinks rounds/seeds for the CI harness while
 the full runs (examples/paper_repro.py) persist the EXPERIMENTS.md numbers.
+
+Every cell executes as a vmapped ``run_seeds`` fleet — one ``lax.scan``
+dispatch per method with all seeds' metrics stacked on device — so multi-
+seed error bars cost one compile, not one per seed.  Seeds vary the model
+init + training/sampling randomness on a fixed world (``data_seed``);
+mean/std/ci95/n_seeds come from the stacked statistics
+(``SweepCell.stats``).  There is no per-round server loop left here: the
+legacy ``MMFLServer.run()`` path was retired for the fleet sweep
+(equivalence pinned by tests/test_paper_tables.py).
+
+CLI (the CI ``sweep-smoke`` job):  PYTHONPATH=src python
+benchmarks/paper_tables.py --fast  [--only table1 fig2 ...]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
-import time
-from typing import Dict, List, Tuple
+from typing import Dict, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.methods import available_methods
-from repro.core.server import MMFLServer, ServerConfig
-from repro.fl.experiments import build_setting
+from repro.fl.sweep import MethodRun, SweepSetting, SweepSpec, run_sweep
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "paper")
 
@@ -32,41 +45,40 @@ def _save(name: str, payload) -> None:
         json.dump(payload, f, indent=1)
 
 
-def _final_acc(srv: MMFLServer, rounds: int) -> List[float]:
-    hist = srv.run(rounds, eval_every=max(rounds // 4, 1))
-    return hist["acc"][-1][1], hist
-
-
 def table1_relative_accuracy(fast: bool = True, n_models: int = 3,
-                             methods=None, seeds=None, rounds: int = None,
-                             n_clients: int = None):
+                             methods=None, seeds=None,
+                             rounds: Optional[int] = None,
+                             n_clients: Optional[int] = None):
     """Table 1: final average accuracy relative to full participation.
 
     Scale note: the full run uses 60 clients (paper: 120) with the same
     partition statistics (label fraction, high/low-data split, B_i mix,
-    m = 0.1 V) — orderings/relative gaps are the claims under test."""
+    m = 0.1 V) — orderings/relative gaps are the claims under test.
+
+    Error-bar note: seeds vary the model init + training/sampling
+    randomness on ONE fixed world (``data_seed = seeds[0]``) so the fleet
+    vmaps into a single dispatch; the retired loop rebuilt the world per
+    seed, so its std also mixed in partition variance.  Single-seed runs
+    match it bit-for-bit (tests/test_paper_tables.py)."""
     methods = methods or (["random", "lvr", "stalevre", "fedvarp", "full"]
                           if fast else TABLE1_METHODS)
-    seeds = seeds or ([0] if fast else [0, 1, 2])
+    seeds = list(seeds or ([0] if fast else [0, 1, 2]))
     rounds = rounds or (12 if fast else 60)
     n_clients = n_clients or (32 if fast else 60)
-    accs: Dict[str, List[float]] = {m: [] for m in methods}
-    for seed in seeds:
-        tasks, B, avail = build_setting(n_models, n_clients=n_clients,
-                                        seed=seed, small=fast)
-        for m in methods:
-            srv = MMFLServer(tasks, B, avail,
-                             ServerConfig(method=m, seed=seed,
-                                          local_epochs=5, lr=0.05))
-            acc, _ = _final_acc(srv, rounds)
-            accs[m].append(float(np.mean(acc)))
-    full = np.mean(accs.get("full", [1.0])) or 1.0
-    table = {m: {"acc": float(np.mean(a)), "std": float(np.std(a)),
-                 "relative": float(np.mean(a) / full)}
-             for m, a in accs.items()}
+    setting = SweepSetting(name=f"{n_models}tasks", n_models=n_models,
+                           n_clients=n_clients, small=fast,
+                           data_seed=seeds[0])
+    sweep = run_sweep(SweepSpec(
+        settings=[setting], runs=list(methods), seeds=seeds, rounds=rounds,
+        server=dict(local_epochs=5, lr=0.05)))
+    # absolute rows when the caller dropped the "full" ceiling baseline
+    table: Dict[str, Dict] = dict(sweep.table(
+        relative_to="full" if "full" in methods else None))
+    table["_scale"] = {"n_clients": n_clients, "rounds": rounds,
+                      "n_seeds": len(seeds), "seeds": seeds}
     _save(f"table1_{n_models}tasks" + ("_fast" if fast else ""), table)
-    best = max((v["relative"], k) for k, v in table.items()
-               if k not in ("full",))
+    best = max((v.get("relative", v["acc"]), k) for k, v in table.items()
+               if not k.startswith("_") and k != "full")
     return table, best[0]
 
 
@@ -74,57 +86,59 @@ def fig2_step_size_variance(fast: bool = True):
     """Fig 2: summed global step size Sum_s ||H_{tau,s}||_1 — GVR unstable,
     LVR stable."""
     rounds = 10 if fast else 60
+    setting = SweepSetting(name="fig2", n_models=3,
+                           n_clients=24 if fast else 60, small=fast)
+    sweep = run_sweep(SweepSpec(
+        settings=[setting], runs=["gvr", "lvr"], seeds=(0,), rounds=rounds,
+        server=dict(local_epochs=3)))
     out = {}
-    tasks, B, avail = build_setting(3, n_clients=24 if fast else 60,
-                                    seed=0, small=fast)
-    for m in ["gvr", "lvr"]:
-        srv = MMFLServer(tasks, B, avail,
-                         ServerConfig(method=m, seed=0, local_epochs=3))
-        hist = srv.run(rounds, eval_every=rounds)
-        h1 = [sum(mm[f"H1/{s}"] for s in range(3))
-              for mm in hist["metrics"]]
-        out[m] = {"trace": h1, "var": float(np.var(h1))}
+    for m in ("gvr", "lvr"):
+        cell = sweep.cell(m)
+        h1 = cell.metrics["H1"][0].sum(axis=1)          # [rounds]
+        out[m] = {"trace": [float(x) for x in h1], "var": float(h1.var()),
+                  "n_seeds": cell.n_seeds}
     _save("fig2_step_size" + ("_fast" if fast else ""), out)
     ratio = out["gvr"]["var"] / max(out["lvr"]["var"], 1e-12)
     return out, ratio
 
 
 def fig3_beta_trajectory(fast: bool = True):
-    """Fig 3: optimal beta for sampled clients across rounds (S=1)."""
+    """Fig 3: optimal beta (Eq. 20) for two tracked clients across rounds
+    (S=1) — read from the scanned rollout's stacked ``beta`` monitor."""
     rounds = 12 if fast else 50
-    tasks, B, avail = build_setting(1, n_clients=16 if fast else 40,
-                                    seed=0, small=fast)
-    srv = MMFLServer(tasks, B, avail,
-                     ServerConfig(method="stalevr", seed=0, local_epochs=3,
-                                  active_rate=0.15))
-    betas = []
-    for r in range(rounds):
-        srv.run_round()
-        # optimal beta (Eq. 20) for two tracked clients this round
-        betas.append([float(srv.last_beta[0][i]) for i in (0, 1)])
-    _save("fig3_beta" + ("_fast" if fast else ""), {"beta": betas})
+    setting = SweepSetting(name="fig3", n_models=1,
+                           n_clients=16 if fast else 40, small=fast)
+    sweep = run_sweep(SweepSpec(
+        settings=[setting], runs=["stalevr"], seeds=(0,), rounds=rounds,
+        server=dict(local_epochs=3, active_rate=0.15)))
+    beta = sweep.cell("stalevr").metrics["beta"][0]     # [rounds, S=1, N]
+    betas = [[float(beta[r, 0, i]) for i in (0, 1)] for r in range(rounds)]
+    _save("fig3_beta" + ("_fast" if fast else ""),
+          {"beta": betas, "n_seeds": 1})
     arr = np.asarray(betas)
     return betas, float(arr[arr > 0].mean()) if (arr > 0).any() else 0.0
 
 
 def fig4_mmfl_vs_roundrobin(fast: bool = True):
     """Fig 4: rounds needed to hit target accuracy, MMFL-GVR vs
-    RoundRobin-GVR."""
+    RoundRobin-GVR — per-round accuracies from the chunked fleet cadence
+    (``eval_every=1``: stacked evaluation after every scanned round)."""
     rounds = 12 if fast else 80
     targets = [0.3, 0.4] if fast else [0.3, 0.4, 0.5, 0.55]
+    setting = SweepSetting(name="fig4", n_models=3,
+                           n_clients=24 if fast else 60, small=fast)
+    sweep = run_sweep(SweepSpec(
+        settings=[setting], runs=["gvr", "roundrobin_gvr"], seeds=(0,),
+        rounds=rounds, eval_every=1, server=dict(local_epochs=3, lr=0.08)))
     out = {}
-    tasks, B, avail = build_setting(3, n_clients=24 if fast else 60,
-                                    seed=0, small=fast)
-    for m in ["gvr", "roundrobin_gvr"]:
-        srv = MMFLServer(tasks, B, avail,
-                         ServerConfig(method=m, seed=0, local_epochs=3,
-                                      lr=0.08))
-        hist = srv.run(rounds, eval_every=1)
-        acc_by_round = {r: float(np.mean(a)) for r, a in hist["acc"]}
+    for m in ("gvr", "roundrobin_gvr"):
+        cell = sweep.cell(m)
+        acc_by_round = {r: float(a.mean()) for r, a in cell.acc_trace}
         out[m] = {
             str(t): next((r for r, a in sorted(acc_by_round.items())
                           if a >= t), None) for t in targets}
         out[m]["trace"] = acc_by_round
+        out[m]["n_seeds"] = cell.n_seeds
     _save("fig4_roundrobin" + ("_fast" if fast else ""), out)
     # derived: how many targets MMFL reaches first (or RR misses)
     wins = sum(
@@ -135,29 +149,78 @@ def fig4_mmfl_vs_roundrobin(fast: bool = True):
     return out, wins
 
 
+def _two_group_sampler(engine):
+    """Fig. 5's FIXED heterogeneous sampling distribution: first half of
+    the processors at 4%, second half at 16% (S=1)."""
+    fixed = np.full((engine.V, engine.S), 0.04, np.float32)
+    fixed[engine.V // 2:] = 0.16
+    p = jnp.asarray(fixed)
+    return lambda ctx, losses, norms: p
+
+
 def fig5_fixed_sampling_stale(fast: bool = True):
     """Fig 5: dynamic beta (StaleVR) vs static-beta FedStale/FedVARP under a
     FIXED heterogeneous sampling distribution (S=1, 4%/16% groups)."""
     rounds = 12 if fast else 60
-    n_clients = 16 if fast else 40
-    out = {}
-    for m, kw in [("stalevr", {}), ("fedvarp", {}),
-                  ("fedstale", {"fedstale_beta": 0.5}),
-                  ("fedstale_b02", {"fedstale_beta": 0.2}),
-                  ("fedstale_b08", {"fedstale_beta": 0.8})]:
-        method = "fedstale" if m.startswith("fedstale_") else m
-        tasks, B, avail = build_setting(1, n_clients=n_clients, seed=0,
-                                        small=fast)
-        srv = MMFLServer(tasks, B, avail,
-                         ServerConfig(method=method, seed=0, local_epochs=3,
-                                      **kw))
-        # fixed two-group sampling: first half 4%, second half 16%
-        import jax.numpy as jnp
-        fixed = np.full((srv.V, 1), 0.04)
-        fixed[srv.V // 2:] = 0.16
-        srv._probabilities = lambda *a, _p=jnp.asarray(fixed): _p  # type: ignore
-        acc, _ = _final_acc(srv, rounds)
-        out[m] = float(np.mean(acc))
-    _save("fig5_stale" + ("_fast" if fast else ""), out)
-    static_best = max(v for k, v in out.items() if k != "stalevr")
-    return out, out["stalevr"] - static_best
+    setting = SweepSetting(name="fig5", n_models=1,
+                           n_clients=16 if fast else 40, small=fast)
+    runs = [
+        MethodRun("stalevr", probabilities=_two_group_sampler),
+        MethodRun("fedvarp", probabilities=_two_group_sampler),
+        MethodRun("fedstale", probabilities=_two_group_sampler,
+                  server={"fedstale_beta": 0.5}),
+        MethodRun("fedstale", label="fedstale_b02",
+                  probabilities=_two_group_sampler,
+                  server={"fedstale_beta": 0.2}),
+        MethodRun("fedstale", label="fedstale_b08",
+                  probabilities=_two_group_sampler,
+                  server={"fedstale_beta": 0.8}),
+    ]
+    sweep = run_sweep(SweepSpec(
+        settings=[setting], runs=runs, seeds=(0,), rounds=rounds,
+        server=dict(local_epochs=3)))
+    acc = {run.label: float(sweep.cell(run.label).acc_per_seed.mean())
+           for run in runs}
+    _save("fig5_stale" + ("_fast" if fast else ""),
+          {"acc": acc, "n_seeds": 1})
+    static_best = max(v for k, v in acc.items() if k != "stalevr")
+    return acc, acc["stalevr"] - static_best
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI sweep-smoke entry point
+# ---------------------------------------------------------------------------
+
+ALL = {
+    "table1": lambda fast: table1_relative_accuracy(fast),
+    "fig2": fig2_step_size_variance,
+    "fig3": fig3_beta_trajectory,
+    "fig4": fig4_mmfl_vs_roundrobin,
+    "fig5": fig5_fixed_sampling_stale,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="CI scale: few clients/rounds/seeds")
+    ap.add_argument("--only", nargs="*", default=[], choices=sorted(ALL),
+                    help="subset of tables/figures to run")
+    args = ap.parse_args()
+    # persistent XLA compile cache (same location as tests/conftest.py):
+    # repeat sweep-smoke runs skip the CNN-world scan compiles
+    import jax
+    jax.config.update("jax_compilation_cache_dir", os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.join(os.path.dirname(__file__), "..", ".jax_cache")))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+    for name, fn in ALL.items():
+        if args.only and name not in args.only:
+            continue
+        _, derived = fn(args.fast)
+        print(f"paper_{name},{derived}", flush=True)
+    print(f"wrote {os.path.abspath(RESULTS)}")
+
+
+if __name__ == "__main__":
+    main()

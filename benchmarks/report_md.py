@@ -1,14 +1,19 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
-results/dryrun cache + the calibrated analytic model.
+results/dryrun cache + the calibrated analytic model, plus the Table-1
+sweep results (mean ± std over seed fleets) from results/paper.
 
   PYTHONPATH=src:. python -m benchmarks.report_md > results/tables.md
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 
 from benchmarks.roofline_report import load_dryrun, roofline_rows, summarize
+
+PAPER_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                             "paper")
 
 
 def _fmt_s(x):
@@ -73,11 +78,44 @@ def roofline_table(chips=256) -> str:
     return "\n".join(lines)
 
 
+def paper_sweep_table() -> str:
+    """Table-1 fleets in markdown: acc mean ± std, relative-to-full and the
+    seed count, straight from the sweep harness's error-bar schema."""
+    lines = []
+    for path in sorted(glob.glob(os.path.join(PAPER_RESULTS,
+                                              "table1_*.json"))):
+        if path.endswith("_fast.json"):
+            continue        # CI smoke artifacts are not paper validation
+        with open(path) as f:
+            table = json.load(f)
+        sc = table.get("_scale", {})
+        name = os.path.splitext(os.path.basename(path))[0]
+        lines.append(f"**{name}** ({sc.get('n_clients', '?')} clients, "
+                     f"{sc.get('rounds', '?')} rounds, "
+                     f"{sc.get('n_seeds', '?')}-seed fleet):\n")
+        lines.append("| method | acc (mean ± std) | relative to full | "
+                     "n seeds |")
+        lines.append("|---|---|---|---|")
+        rows = sorted(((k, v) for k, v in table.items()
+                       if not k.startswith("_")),
+                      key=lambda kv: -kv[1].get("relative", kv[1]["acc"]))
+        for method, row in rows:
+            rel = (f"{row['relative']:.3f}" if "relative" in row else "-")
+            lines.append(
+                f"| {method} | {row['acc']:.3f} ± {row['std']:.3f} | "
+                f"{rel} | {row.get('n_seeds', '-')} |")
+        lines.append("")
+    return "\n".join(lines) if lines else "(no paper sweep results yet)"
+
+
 def main():
     print("## Generated: §Dry-run table\n")
     print(dryrun_table())
     print("\n## Generated: §Roofline table (single-pod 16x16, 256 chips)\n")
     print(roofline_table())
+    print("\n## Generated: §Paper Table-1 sweep (mean ± std over seed "
+          "fleets)\n")
+    print(paper_sweep_table())
 
 
 if __name__ == "__main__":

@@ -71,6 +71,8 @@ def main() -> None:
     timed("engine_round_stalevre", engine_bench.bench_round_engine)
     # scanned rollout vs eager per-round loop (derived = rounds/sec win)
     timed("engine_scan_stalevre", engine_bench.bench_scan_rollout)
+    # vmapped seed fleet vs per-seed loop (derived = seed-rounds/sec win)
+    timed("engine_sweep_lvr", engine_bench.bench_sweep)
 
 
 if __name__ == "__main__":

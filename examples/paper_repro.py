@@ -2,6 +2,10 @@
 (120 clients, 60 rounds, multiple seeds).  Persists results/paper/*.json
 which EXPERIMENTS.md §Paper-validation cites.
 
+Everything executes on the sweep harness (``repro.fl.sweep``): each
+(method, setting) cell is ONE vmapped ``run_seeds`` fleet, so the
+multi-seed error bars cost a single compile instead of one per seed.
+
 This is the LONG run (hours on 1 CPU core).  ``--quick`` cuts it to a
 30-minute validation pass.
 

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.methods import available_methods
 from repro.fl.experiments import ExperimentSpec, run_experiment
+from repro.fl.sweep import SweepSetting, SweepSpec, run_sweep
 
 
 def main():
@@ -46,14 +47,29 @@ def main():
     print(f"final average accuracy: {np.mean(out['final_acc']):.3f}")
 
     # multi-seed fleet (Table-1 error bars) on the seconds-fast linear
-    # micro world: 3 replicates vmapped into one compile
+    # micro world: 3 replicates vmapped into one compile (eval_every=0 =
+    # the fully fused fleet; set it below rounds for stacked per-chunk
+    # accuracy traces instead)
     fleet = run_experiment(ExperimentSpec(
         method="lvr", linear=True, n_models=2, n_clients=16,
-        rounds=15, seeds=(0, 1, 2),
+        rounds=15, seeds=(0, 1, 2), eval_every=0,
         server=dict(active_rate=0.3, local_epochs=2)))
     mean, std = fleet["acc_mean"], fleet["acc_std"]
     accs = "  ".join(f"{m:.3f}+-{s:.3f}" for m, s in zip(mean, std))
     print(f"linear micro fleet (3 seeds, vmapped): acc = {accs}")
+
+    # the declarative sweep harness (what benchmarks/paper_tables.py runs):
+    # a (methods x seeds) grid as one vmapped fleet dispatch per method,
+    # error bars from the stacked statistics
+    sweep = run_sweep(SweepSpec(
+        settings=[SweepSetting(name="micro", linear=True, n_models=2,
+                               n_clients=16)],
+        runs=["random", "lvr", "full"], seeds=(0, 1, 2), rounds=15,
+        server=dict(active_rate=0.3, local_epochs=2)))
+    print("sweep (3-seed fleets, one dispatch per method):")
+    for label, row in sweep.table(relative_to="full").items():
+        print(f"  {label:8s} acc={row['acc']:.3f}+-{row['std']:.3f} "
+              f"relative={row['relative']:.3f} (n={row['n_seeds']})")
 
 
 if __name__ == "__main__":

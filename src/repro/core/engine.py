@@ -138,6 +138,9 @@ class RoundEngine:
         self.round_step = jax.jit(self.round_step_fn)
         self._rollout_cache: Dict[int, Callable] = {}
         self._run_seeds_cache: Dict[int, Callable] = {}
+        self._fleet_init_fn: Optional[Callable] = None
+        self._fleet_rollout_cache: Dict[int, Callable] = {}
+        self._fleet_eval_fn: Optional[Callable] = None
 
     # ------------------------------------------------------------------
     # per-task pure computations
@@ -406,6 +409,40 @@ class RoundEngine:
             fn = jax.jit(jax.vmap(one))
             self._run_seeds_cache[n_rounds] = fn
         return fn(seeds)
+
+    # ------------------------------------------------------------------
+    # stacked seed fleets as composable pieces (sweep harness substrate):
+    # ``run_seeds`` fuses init+rollout+eval into one dispatch, but a sweep
+    # with an eval CADENCE needs to stop the fleet every ``eval_every``
+    # rounds — these hooks expose the same vmapped stages individually so
+    # chunked rollouts interleave with stacked evaluations at equal
+    # compile cost (one executable per stage, reused across chunks).
+    # ------------------------------------------------------------------
+    def init_states(self, seeds: Any) -> ExperimentState:
+        """Vmapped ``init_state`` over seeds: one ``ExperimentState`` whose
+        every leaf carries a leading [n_seeds] axis."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        if self._fleet_init_fn is None:
+            self._fleet_init_fn = jax.jit(jax.vmap(
+                lambda sd: self.init_state(key=jax.random.PRNGKey(sd))))
+        return self._fleet_init_fn(seeds)
+
+    def rollout_states(self, states: ExperimentState, n_rounds: int
+                       ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
+        """``rollout`` vmapped over a stacked fleet state: ONE dispatch for
+        all seeds x ``n_rounds`` rounds, metrics [n_seeds, n_rounds, S]."""
+        n_rounds = int(n_rounds)
+        fn = self._fleet_rollout_cache.get(n_rounds)
+        if fn is None:
+            fn = jax.jit(jax.vmap(self._rollout_fn(n_rounds)))
+            self._fleet_rollout_cache[n_rounds] = fn
+        return fn(states)
+
+    def evaluate_states(self, states: ExperimentState) -> jnp.ndarray:
+        """[n_seeds, S] test accuracies for a stacked fleet state."""
+        if self._fleet_eval_fn is None:
+            self._fleet_eval_fn = jax.jit(jax.vmap(self.evaluate_fn))
+        return self._fleet_eval_fn(states)
 
     # ------------------------------------------------------------------
     def evaluate_fn(self, state: ExperimentState) -> jnp.ndarray:

@@ -167,11 +167,14 @@ class ExperimentSpec:
     """Declarative description of one MMFL experiment.
 
     ``seeds`` with more than one entry runs a vmapped seed fleet
-    (``RoundEngine.run_seeds``) — Table-1 error bars in a single compile;
-    a single seed runs a chunked ``lax.scan`` rollout with host
-    evaluations every ``eval_every`` rounds.  ``linear=True`` swaps the
-    CNN/LSTM world for the seconds-fast linear micro-setting (benchmarks,
-    CI)."""
+    (``RoundEngine.run_seeds``) — Table-1 error bars in a single compile.
+    ``eval_every`` means the same thing on both paths: a single seed runs
+    chunked ``lax.scan`` rollouts with a host evaluation between chunks;
+    a fleet with ``eval_every`` < ``rounds`` runs the chunked cadence of
+    ``run_seed_fleet`` (stacked accuracy traces, one dispatch per chunk)
+    — set ``eval_every=0`` (or >= ``rounds``) for the fully fused
+    init+rollout+eval fleet dispatch.  ``linear=True`` swaps the CNN/LSTM
+    world for the seconds-fast linear micro-setting (benchmarks, CI)."""
     method: str = "lvr"
     n_models: int = 3
     n_clients: int = 120
@@ -184,15 +187,23 @@ class ExperimentSpec:
     server: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+def build_world(n_models: int, n_clients: int, data_seed: int = 0,
+                small: bool = False, linear: bool = False
+                ) -> Tuple[List[Task], np.ndarray, np.ndarray]:
+    """The (tasks, B, avail) triple an ``ExperimentSpec``/``SweepSetting``
+    names.  One world is shared by every method/seed cell evaluated on it
+    (the sweep harness builds each setting exactly once)."""
+    if linear:
+        return build_linear_setting(n_models=n_models, n_clients=n_clients,
+                                    seed=data_seed)
+    return build_setting(n_models, n_clients=n_clients, seed=data_seed,
+                         small=small)
+
+
 def build_engine(spec: ExperimentSpec) -> RoundEngine:
-    if spec.linear:
-        tasks, B, avail = build_linear_setting(
-            n_models=spec.n_models, n_clients=spec.n_clients,
-            seed=spec.data_seed)
-    else:
-        tasks, B, avail = build_setting(
-            spec.n_models, n_clients=spec.n_clients, seed=spec.data_seed,
-            small=spec.small)
+    tasks, B, avail = build_world(spec.n_models, spec.n_clients,
+                                  data_seed=spec.data_seed, small=spec.small,
+                                  linear=spec.linear)
     cfg = ServerConfig(method=spec.method, seed=spec.seeds[0], **spec.server)
     return RoundEngine(tasks, B, avail, cfg)
 
@@ -205,19 +216,16 @@ def run_experiment(spec: ExperimentSpec) -> Dict[str, Any]:
        "final_acc": [S], "state": ExperimentState, "engine": RoundEngine}
     or (seed fleet)
       {"metrics": {key: [n_seeds, rounds, S] np}, "final_acc": [n_seeds, S],
-       "acc_mean"/"acc_std": [S], "engine": RoundEngine}.
+       "acc_mean"/"acc_std": [S], "engine": RoundEngine; plus "acc":
+       [(round, [n_seeds, S])...] when ``eval_every`` < ``rounds`` — the
+       chunked fleet cadence of ``run_seed_fleet``}.
     """
     engine = build_engine(spec)
     if len(spec.seeds) > 1:
-        _, mets, accs = engine.run_seeds(
-            jnp.asarray(list(spec.seeds), jnp.int32), spec.rounds)
-        accs = np.asarray(accs)
-        return {
-            "metrics": {k: np.asarray(v) for k, v in mets.items()},
-            "final_acc": accs,
-            "acc_mean": accs.mean(axis=0), "acc_std": accs.std(axis=0),
-            "engine": engine,
-        }
+        out = run_seed_fleet(engine, spec.seeds, spec.rounds,
+                             eval_every=spec.eval_every)
+        out["engine"] = engine
+        return out
     state = engine.init_state(seed=spec.seeds[0])
     ev = max(1, spec.eval_every or spec.rounds)
     chunks: List[Dict[str, np.ndarray]] = []
@@ -235,3 +243,48 @@ def run_experiment(spec: ExperimentSpec) -> Dict[str, Any]:
         "metrics": metrics, "acc": acc_hist,
         "final_acc": acc_hist[-1][1], "state": state, "engine": engine,
     }
+
+
+def run_seed_fleet(engine: RoundEngine, seeds: Sequence[int], rounds: int,
+                   eval_every: int = 0) -> Dict[str, Any]:
+    """Run a vmapped seed fleet on ``engine`` with an optional eval cadence.
+
+    ``eval_every`` in (0, None) or >= ``rounds`` runs the fully fused
+    ``run_seeds`` (init+rollout+eval in ONE dispatch); otherwise the fleet
+    advances in scanned chunks of ``eval_every`` rounds with a stacked
+    evaluation between chunks (``init_states``/``rollout_states``/
+    ``evaluate_states``) — per-round accuracy traces (Fig. 4's
+    rounds-to-target) at one dispatch per chunk instead of per (seed,
+    round).
+
+    Returns {"metrics": {key: [n_seeds, rounds, S]}, "final_acc":
+    [n_seeds, S], "acc_mean"/"acc_std": [S], and — when the cadence is
+    active — "acc": [(round, [n_seeds, S])...]}.
+    """
+    seeds_arr = jnp.asarray(list(seeds), jnp.int32)
+    out: Dict[str, Any] = {}
+    if not eval_every or eval_every >= rounds:
+        _, mets, accs = engine.run_seeds(seeds_arr, rounds)
+        metrics = {k: np.asarray(v) for k, v in mets.items()}
+        accs = np.asarray(accs)
+    else:
+        states = engine.init_states(seeds_arr)
+        chunks: List[Dict[str, np.ndarray]] = []
+        acc_hist: List[Tuple[int, np.ndarray]] = []
+        done = 0
+        while done < rounds:
+            n = min(eval_every, rounds - done)
+            states, mets = engine.rollout_states(states, n)
+            chunks.append({k: np.asarray(v) for k, v in mets.items()})
+            done += n
+            acc_hist.append((done, np.asarray(
+                engine.evaluate_states(states))))
+        metrics = {k: np.concatenate([c[k] for c in chunks], axis=1)
+                   for k in chunks[0]}
+        accs = acc_hist[-1][1]
+        out["acc"] = acc_hist
+    out.update({
+        "metrics": metrics, "final_acc": accs,
+        "acc_mean": accs.mean(axis=0), "acc_std": accs.std(axis=0),
+    })
+    return out

@@ -1,0 +1,240 @@
+"""Declarative sweep harness: paper tables on vmapped seed fleets.
+
+A ``SweepSpec`` names a grid of (method-config x setting x seeds) and
+``run_sweep`` executes it on the functional engine
+(``repro.core.engine.RoundEngine``) with the grid's axes mapped onto the
+cheapest execution structure they admit:
+
+  * **settings** (worlds) are built exactly once each (``build_world``) and
+    shared by every method/seed cell evaluated on them;
+  * **method configs** group cells by *compile signature* — cells that
+    share (setting, method, server overrides, sampling hook) share one
+    ``RoundEngine`` and therefore one compiled executable;
+  * **seeds** are vmapped: each group runs ALL its seeds as one
+    ``run_seeds`` fleet — a single ``lax.scan`` dispatch per method with
+    every replicate's metrics stacked on device.  With an ``eval_every``
+    cadence the fleet instead advances in scanned chunks with stacked
+    evaluations between chunks (``repro.fl.experiments.run_seed_fleet``).
+
+Error-bar statistics (mean/std/CI over seeds) are computed from the stacked
+arrays — no per-seed Python loops anywhere.  ``benchmarks/paper_tables.py``
+produces every paper table/figure through this module, and
+``benchmarks/engine_bench.py::bench_sweep`` measures the fleet-vs-loop
+throughput win on the linear micro-setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
+
+import numpy as np
+
+from repro.core.engine import RoundEngine, ServerConfig
+from repro.fl.experiments import build_world, run_seed_fleet
+
+# two-sided 95% Student-t quantiles by degrees of freedom: seed fleets are
+# SMALL (3-5 replicates), where the normal z=1.96 would understate the CI
+# half-width ~2-3x.  Between table entries we round df DOWN (conservative:
+# t grows as df shrinks); beyond 30 df the limit 1.96 is close enough.
+_T95 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+        7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228, 12: 2.179, 15: 2.131,
+        20: 2.086, 30: 2.042}
+
+
+def t95(df: int) -> float:
+    """Two-sided 95% t quantile, conservative table lookup."""
+    keys = [k for k in _T95 if k <= df]
+    return _T95[max(keys)] if keys else _T95[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSetting:
+    """One experiment world of the grid (frozen: usable as a cache key).
+
+    ``data_seed`` seeds the world construction (partitions, budgets,
+    availability); model/training randomness comes from the sweep's seed
+    axis instead, so replicates share the world and vmap into one fleet."""
+    name: str
+    n_models: int = 3
+    n_clients: int = 120
+    small: bool = False
+    linear: bool = False
+    data_seed: int = 0
+
+    def build(self):
+        return build_world(self.n_models, self.n_clients,
+                           data_seed=self.data_seed, small=self.small,
+                           linear=self.linear)
+
+
+@dataclasses.dataclass
+class MethodRun:
+    """One method configuration of the grid.
+
+    ``label`` names the result cell (defaults to ``method``; Fig. 5 runs
+    ``fedstale`` three times under different labels/betas).  ``server``
+    overrides the spec-level ``ServerConfig`` kwargs.  ``probabilities`` is
+    an optional hook factory ``engine -> (ctx, losses, norms) -> p [V,S]``
+    pinning the sampling distribution inside the traced round (Fig. 5's
+    fixed two-group sampler)."""
+    method: str
+    label: str = ""
+    server: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    probabilities: Optional[Callable[[RoundEngine], Callable]] = None
+
+    def __post_init__(self):
+        self.label = self.label or self.method
+
+
+@dataclasses.dataclass
+class SweepSpec:
+    """The declarative grid: (runs x settings) cells, each a vmapped fleet
+    over ``seeds``.  ``eval_every`` > 0 records stacked accuracy traces
+    every that many rounds (chunked fleet cadence)."""
+    settings: Sequence[SweepSetting]
+    runs: Sequence[Union[str, MethodRun]]
+    seeds: Sequence[int] = (0,)
+    rounds: int = 20
+    eval_every: int = 0
+    server: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def method_runs(self) -> List[MethodRun]:
+        return [r if isinstance(r, MethodRun) else MethodRun(method=r)
+                for r in self.runs]
+
+
+@dataclasses.dataclass
+class SweepCell:
+    """One (setting, method-config) result: every seed's stacked outputs
+    plus the derived error-bar statistics."""
+    setting: str
+    label: str
+    method: str
+    seeds: Tuple[int, ...]
+    final_acc: np.ndarray                 # [n_seeds, S]
+    metrics: Dict[str, np.ndarray]        # [n_seeds, rounds, S] (+ beta)
+    acc_trace: Optional[List[Tuple[int, np.ndarray]]] = None
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+    @property
+    def acc_per_seed(self) -> np.ndarray:
+        """[n_seeds] task-averaged final accuracy (Table 1's scalar)."""
+        return self.final_acc.mean(axis=1)
+
+    def stats(self) -> Dict[str, float]:
+        """``std`` is the population spread across replicates (the legacy
+        table's ± column); ``ci95`` is the Student-t 95% half-width of the
+        MEAN (sample std, t quantile) — the slack the ordering-invariant
+        tests use."""
+        a = self.acc_per_seed
+        n = self.n_seeds
+        return {
+            "acc": float(a.mean()),
+            "std": float(a.std()),
+            "ci95": (float(t95(n - 1) * a.std(ddof=1) / np.sqrt(n))
+                     if n > 1 else 0.0),
+            "n_seeds": n,
+        }
+
+
+class SweepResult:
+    """Cells keyed by (setting name, run label)."""
+
+    def __init__(self, spec: SweepSpec):
+        self.spec = spec
+        self.cells: Dict[Tuple[str, str], SweepCell] = {}
+
+    def add(self, cell: SweepCell) -> None:
+        key = (cell.setting, cell.label)
+        if key in self.cells:
+            raise ValueError(
+                f"duplicate sweep cell {key}: give MethodRuns that share a "
+                f"method distinct labels")
+        self.cells[key] = cell
+
+    def cell(self, label: str, setting: Optional[str] = None) -> SweepCell:
+        if setting is None:
+            matches = [c for (s, lb), c in self.cells.items() if lb == label]
+            if len(matches) != 1:
+                raise KeyError(
+                    f"label {label!r} matches {len(matches)} cells; pass "
+                    f"setting= (have: {sorted(self.cells)})")
+            return matches[0]
+        return self.cells[(setting, label)]
+
+    def labels(self, setting: str) -> List[str]:
+        return [lb for (s, lb) in self.cells if s == setting]
+
+    def table(self, setting: Optional[str] = None,
+              relative_to: Optional[str] = "full"
+              ) -> Dict[str, Dict[str, float]]:
+        """Per-label {acc, std, ci95, n_seeds, relative} rows — the
+        ``results/paper/table1_*.json`` schema.  ``relative`` divides by
+        ``relative_to``'s mean accuracy (Table 1's 'relative to full
+        participation' column); a missing baseline cell is a KeyError, not
+        a silent fallback.  ``relative_to=None`` skips the column."""
+        if setting is None:
+            names = {s for (s, _) in self.cells}
+            if len(names) != 1:
+                raise KeyError(f"pass setting= (have: {sorted(names)})")
+            setting = names.pop()
+        rows = {lb: self.cell(lb, setting).stats()
+                for lb in self.labels(setting)}
+        if relative_to is None:
+            return rows
+        if relative_to not in rows:
+            raise KeyError(
+                f"relative_to={relative_to!r} is not a cell of setting "
+                f"{setting!r} (have: {sorted(rows)}); pass "
+                f"relative_to=None for absolute rows")
+        base = rows[relative_to]["acc"] or 1.0
+        for row in rows.values():
+            row["relative"] = row["acc"] / base
+        return rows
+
+
+def run_sweep(spec: SweepSpec) -> SweepResult:
+    """Execute the grid: one world build per setting, one engine per
+    compile signature, one vmapped fleet dispatch per (setting, method
+    config) covering every seed."""
+    result = SweepResult(spec)
+    labels = [r.label for r in spec.method_runs()]
+    if len(set(labels)) != len(labels):
+        dup = sorted({lb for lb in labels if labels.count(lb) > 1})
+        raise ValueError(
+            f"duplicate run labels {dup}: give MethodRuns that share a "
+            f"method distinct labels")
+    names = [s.name for s in spec.settings]
+    if len(set(names)) != len(names):
+        dup = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate setting names {dup}: give every "
+                         f"SweepSetting a distinct name")
+    seeds = tuple(int(s) for s in spec.seeds)
+    for setting in spec.settings:
+        tasks, B, avail = setting.build()
+        engines: Dict[Any, RoundEngine] = {}
+        for run in spec.method_runs():
+            server_kw = {**spec.server, **run.server}
+            sig = (run.method, tuple(sorted(server_kw.items())),
+                   id(run.probabilities) if run.probabilities else None)
+            eng = engines.get(sig)
+            if eng is None:
+                cfg = ServerConfig(method=run.method, seed=seeds[0],
+                                   **server_kw)
+                eng = RoundEngine(tasks, B, avail, cfg)
+                if run.probabilities is not None:
+                    # read at trace time: must be set before the first
+                    # compile of this engine
+                    eng.probabilities_hook = run.probabilities(eng)
+                engines[sig] = eng
+            out = run_seed_fleet(eng, seeds, spec.rounds,
+                                 eval_every=spec.eval_every)
+            result.add(SweepCell(
+                setting=setting.name, label=run.label, method=run.method,
+                seeds=seeds, final_acc=np.asarray(out["final_acc"]),
+                metrics=out["metrics"], acc_trace=out.get("acc")))
+    return result

@@ -1,0 +1,142 @@
+"""Property-based tests over EVERY registered method's sampling surface.
+
+For random world draws (budgets, availability, dataset fractions, losses,
+gradient norms), each strategy's ``probabilities`` must land on the
+processor simplex (p in [0,1], at most one expected model per processor —
+except ``flammable``, whose whole point is multi-model engagement),
+respect the server budget ``sum p <= m`` (except ``full``, the unbudgeted
+ceiling baseline) and the footnote-3 ``eta_cap`` (loss-sampling family),
+and never place mass on unavailable (client, model) pairs.  The
+``coefficients`` must be unbiased: the expected aggregate weight
+``E[sum_v act_v * P_v] = sum_{support} d_v / B_v`` equals 1 wherever the
+sampler keeps the full support (Assumption 5's utility floor).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dep: skip, not error
+from hypothesis import given, settings, strategies as st
+
+from repro.core import methods
+from repro.core.engine import ServerConfig
+from repro.core.methods.base import SamplerContext
+from repro.core.methods.mixins import LossSamplingMixin
+
+settings.register_profile("ci_methods", max_examples=15, deadline=None)
+settings.load_profile("ci_methods")
+
+TOL = 1e-4
+
+
+def _world(seed: int, N: int, S: int, active_rate: float):
+    """A random heterogeneous world mirroring the engine's construction:
+    integer budgets, availability with every task reachable, engine-style
+    d (counts masked by avail, normalized per task), positive losses and
+    gradient norms.  ``B`` stays a HOST numpy array — the strategies'
+    client->processor expansion needs static repeat lengths."""
+    rng = np.random.default_rng(seed)
+    B = rng.integers(1, 4, N)
+    avail = rng.random((N, S)) < 0.8
+    for s in range(S):
+        if not avail[:, s].any():
+            avail[rng.integers(0, N), s] = True
+    counts = np.where(avail, rng.integers(1, 60, (N, S)), 0).astype(
+        np.float32)
+    d = counts / np.maximum(counts.sum(axis=0, keepdims=True), 1.0)
+    V = int(B.sum())
+    ctx = SamplerContext(
+        d=jnp.asarray(d), B=np.asarray(B, np.float32),
+        avail=jnp.asarray(avail), m=active_rate * V,
+        round=int(rng.integers(0, 6)))
+    losses = jnp.asarray(rng.uniform(0.1, 3.0, (N, S)), jnp.float32)
+    norms = jnp.asarray(rng.uniform(0.05, 2.0, (N, S)), jnp.float32)
+    d_v = np.repeat(d, B, axis=0)                       # [V, S]
+    B_v = np.repeat(B, B).astype(np.float32)            # [V]
+    avail_v = np.repeat(avail, B, axis=0)               # [V, S]
+    return ctx, losses, norms, d_v, B_v, avail_v
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.1, 0.6))
+def test_probabilities_simplex_and_budget(method, seed, N, S, active_rate):
+    ctx, losses, norms, _, _, avail_v = _world(seed, N, S, active_rate)
+    strat = methods.make(method, ServerConfig(method=method))
+    p = np.asarray(strat.probabilities(ctx, losses, norms))
+
+    V = avail_v.shape[0]
+    assert p.shape == (V, S)
+    assert np.all(np.isfinite(p))
+    assert np.all(p >= -TOL) and np.all(p <= 1 + TOL)
+    # no mass on unavailable (client, model) pairs
+    assert np.all(p[~avail_v] == 0.0)
+    if method not in ("flammable", "full"):
+        # processor simplex: at most one expected engagement per processor
+        # (flammable engages multiple models by design; full trains every
+        # available model on every processor)
+        assert np.all(p.sum(axis=1) <= 1 + TOL)
+    if method != "full":
+        # server budget: sum of expected engagements bounded by m
+        assert p.sum() <= ctx.m + 1e-3
+
+
+@pytest.mark.parametrize(
+    "method", [m for m in methods.available_methods()
+               if isinstance(methods.make(m), LossSamplingMixin)])
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.2, 0.9))
+def test_eta_cap_respected(method, seed, N, S, eta):
+    """Footnote-3 cap: with ``eta_cap`` set, no processor's total
+    participation may exceed eta (loss-sampling water-filling family)."""
+    ctx, losses, norms, _, _, _ = _world(seed, N, S, active_rate=0.5)
+    strat = methods.make(method, ServerConfig(method=method, eta_cap=eta))
+    p = np.asarray(strat.probabilities(ctx, losses, norms))
+    assert np.all(p.sum(axis=1) <= eta + 1e-4)
+    assert p.sum() <= ctx.m + 1e-3
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.15, 0.6))
+def test_coefficients_unbiased(method, seed, N, S, active_rate):
+    """E[sum_v act_v * coeff_v] over the sampling draw must equal the
+    support's d/B mass — and therefore 1 (full aggregate weight) for every
+    full-support method.  ``power_of_choice`` is biased by design; its
+    d-normalized FedAvg weights must instead sum to exactly 1 over any
+    DRAWN cohort."""
+    ctx, losses, norms, d_v, B_v, _ = _world(seed, N, S, active_rate)
+    strat = methods.make(method, ServerConfig(method=method))
+    p = np.asarray(strat.probabilities(ctx, losses, norms))
+
+    if method == "power_of_choice":
+        act = np.asarray(strat.sample(jax.random.PRNGKey(seed),
+                                      jnp.asarray(p), ctx, losses))
+        for s in range(S):
+            if act[:, s].sum() == 0:
+                continue
+            c = np.asarray(strat.coefficients(
+                jnp.asarray(d_v[:, s]), jnp.asarray(B_v),
+                jnp.asarray(p[:, s]), jnp.asarray(act[:, s])))
+            np.testing.assert_allclose((act[:, s] * c).sum(), 1.0,
+                                       rtol=1e-4)
+        return
+
+    for s in range(S):
+        support = p[:, s] > 0
+        act = support.astype(np.float32)
+        c = np.asarray(strat.coefficients(
+            jnp.asarray(d_v[:, s]), jnp.asarray(B_v),
+            jnp.asarray(p[:, s]), jnp.asarray(act)))
+        # expectation over independent participation draws:
+        #   E[sum act * coeff] = sum_{p>0} p * d/(B p) = sum_{p>0} d/B
+        expected = float((p[:, s] * c).sum())
+        support_mass = float((d_v[support, s] / B_v[support]).sum())
+        np.testing.assert_allclose(expected, support_mass, rtol=1e-3,
+                                   atol=1e-5)
+        if method != "roundrobin_gvr":
+            # full-support methods (Assumption 5 floor): the support holds
+            # ALL of the task's d mass, so the aggregate weight is exactly
+            # 1 in expectation.  (roundrobin zeroes the off-round tasks.)
+            np.testing.assert_allclose(support_mass, 1.0, rtol=1e-3)

@@ -1,0 +1,156 @@
+"""Statistical regression suite for the sweep harness + paper tables.
+
+The paper's headline claims (Table 1) are guarded as *ordering invariants*
+with seed-fleet error bars, not just point values:
+
+  * loss-based water-filling beats blind sampling: acc(lvr) >= acc(random)
+    (up to the combined 95% CI half-widths of the two fleets),
+  * full participation is the ceiling: acc(full) >= acc(lvr) within CI,
+
+plus golden mean-accuracy tolerances (tests/golden_sweep.json) as a drift
+alarm.  The fast tier runs the paper family on the linear micro world
+(seconds); the CNN-world variant of the same invariants is ``slow``.
+
+The equivalence test pins the sweep harness to the retired legacy loop:
+one vmapped ``run_seeds`` fleet must reproduce what a stateful
+``MMFLServer.run()`` per (method, seed) produced, bit-for-bit at fixed
+seed — which is what justified deleting that loop from
+``benchmarks/paper_tables.py``.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.server import MMFLServer, ServerConfig
+from repro.fl.experiments import build_linear_setting
+from repro.fl.sweep import SweepSetting, SweepSpec, run_sweep
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sweep.json")
+
+# the paper family under test: proposed methods + the bracketing baselines
+PAPER_FAMILY = ["lvr", "stalevr", "stalevre", "random", "full"]
+MICRO = SweepSetting(name="micro", linear=True, n_models=2, n_clients=16,
+                     data_seed=0)
+MICRO_SERVER = dict(local_epochs=2, active_rate=0.3, batch_size=8)
+
+
+@pytest.fixture(scope="module")
+def micro_sweep():
+    return run_sweep(SweepSpec(
+        settings=[MICRO], runs=PAPER_FAMILY, seeds=(0, 1, 2), rounds=12,
+        server=MICRO_SERVER))
+
+
+def _assert_orderings(sweep):
+    """The paper's Table-1 ordering invariants, with CI-half-width slack."""
+    stats = {m: sweep.cell(m).stats() for m in PAPER_FAMILY}
+    for m, st in stats.items():
+        assert np.isfinite(st["acc"]), (m, st)
+        assert st["n_seeds"] >= 2
+    slack = lambda a, b: stats[a]["ci95"] + stats[b]["ci95"]
+    assert stats["lvr"]["acc"] >= stats["random"]["acc"] \
+        - slack("lvr", "random"), stats
+    assert stats["full"]["acc"] >= stats["lvr"]["acc"] \
+        - slack("full", "lvr"), stats
+
+
+def test_paper_family_orderings(micro_sweep):
+    _assert_orderings(micro_sweep)
+
+
+def test_golden_mean_accuracies(micro_sweep):
+    """Drift alarm: fleet mean accuracies against checked-in goldens.  The
+    tolerance (2 test-point flips) absorbs platform fp wiggle while still
+    catching any method/engine regression."""
+    golden = json.load(open(GOLDEN))
+    tol = golden["tolerance"]
+    for m, want in golden["acc"].items():
+        got = micro_sweep.cell(m).stats()["acc"]
+        assert abs(got - want) <= tol, (m, got, want)
+
+
+def test_sweep_stats_schema(micro_sweep):
+    """Every cell must expose the error-bar schema the paper JSONs carry
+    (the CI sweep-smoke job gates on std/n_seeds in the emitted files)."""
+    table = micro_sweep.table(relative_to="full")
+    assert set(table) == set(PAPER_FAMILY)
+    for m, row in table.items():
+        assert {"acc", "std", "ci95", "n_seeds", "relative"} <= set(row)
+        assert row["n_seeds"] == 3
+        assert 0.0 <= row["relative"] <= 1.5
+    np.testing.assert_allclose(table["full"]["relative"], 1.0)
+    cell = micro_sweep.cell("lvr")
+    assert cell.final_acc.shape == (3, MICRO.n_models)
+    assert cell.metrics["loss"].shape == (3, 12, MICRO.n_models)
+
+
+@pytest.mark.slow
+def test_paper_family_orderings_cnn_world():
+    """Same invariants on the (small) CNN world of §6.1."""
+    sweep = run_sweep(SweepSpec(
+        settings=[SweepSetting(name="cnn", n_models=2, n_clients=16,
+                               small=True, data_seed=0)],
+        runs=PAPER_FAMILY, seeds=(0, 1), rounds=10,
+        server=dict(local_epochs=3, lr=0.05)))
+    _assert_orderings(sweep)
+
+
+# ---------------------------------------------------------------------------
+# sweep harness == the retired legacy per-server loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["lvr", "stalevre", "random"])
+def test_sweep_matches_legacy_server_loop(method):
+    """One vmapped fleet must reproduce the legacy paper_tables loop — a
+    stateful ``MMFLServer`` run per (method, seed) — bit-for-bit at fixed
+    seed on the linear micro-setting."""
+    kw = dict(local_epochs=2, active_rate=0.3, batch_size=8, lr=0.05)
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=16, seed=0)
+    srv = MMFLServer(tasks, B, avail, ServerConfig(method=method, seed=0,
+                                                   **kw))
+    hist = srv.run(12, eval_every=3)
+    legacy_acc = np.asarray(hist["acc"][-1][1])
+
+    sweep = run_sweep(SweepSpec(
+        settings=[MICRO], runs=[method], seeds=(0,), rounds=12, server=kw))
+    np.testing.assert_array_equal(sweep.cell(method).final_acc[0],
+                                  legacy_acc)
+
+
+def test_duplicate_labels_rejected_before_running():
+    """Two runs resolving to the same (setting, label) would silently
+    shadow each other's results — refused up front, before any fleet
+    compiles."""
+    from repro.fl.sweep import MethodRun
+    with pytest.raises(ValueError, match="duplicate run labels"):
+        run_sweep(SweepSpec(
+            settings=[MICRO], seeds=(0,), rounds=1,
+            runs=[MethodRun("fedstale", server={"fedstale_beta": 0.2}),
+                  MethodRun("fedstale", server={"fedstale_beta": 0.8})]))
+
+
+def test_table_missing_baseline_raises(micro_sweep):
+    """A typo'd/absent relative_to must not silently emit absolute
+    accuracies labeled 'relative'."""
+    with pytest.raises(KeyError, match="relative_to"):
+        micro_sweep.table(relative_to="nope")
+    rows = micro_sweep.table(relative_to=None)
+    assert all("relative" not in r for r in rows.values())
+
+
+def test_paper_tables_has_no_legacy_server_loop():
+    """The acceptance gate in code: benchmarks/paper_tables.py runs
+    everything through SweepSpec -> run_seeds, never MMFLServer.run()."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "benchmarks",
+                        "paper_tables.py")
+    src = open(path).read()
+    # no server facade usage (the docstring may still NAME the retired
+    # path): no import, no instantiation, no .run( loop
+    assert "from repro.core.server" not in src
+    assert "import server" not in src
+    assert "MMFLServer(" not in src
+    assert "srv.run(" not in src and "server.run(" not in src
+    assert "SweepSpec" in src and "run_sweep" in src
