@@ -14,6 +14,13 @@ micro-setting (64 clients, 3 tasks):
     the per-seed Python loop the legacy paper-table harness ran (one
     init + scanned rollout + eval dispatch per seed), i.e. what Table-1
     error bars cost before the sweep subsystem.
+  * ``bench_world_vmap``    — the padded mask-aware world grid
+    (``run_worlds``: K heterogeneous worlds x seeds as ONE vmapped
+    dispatch on one compiled executable) vs the per-world loop (one
+    ``RoundEngine`` + ``run_seeds`` fleet per world — a fresh compile
+    and dispatch chain per world), i.e. what a world-sensitivity table
+    (client counts x availability rates) cost before padding made the
+    world axis vmappable.
 
 The paper's CNN world is local-compute-bound on CPU and shows ~1x on both;
 per-round orchestration is exactly what dominates once local training is
@@ -37,7 +44,7 @@ import jax
 
 from repro.core.engine import RoundEngine
 from repro.core.server import MMFLServer, ServerConfig
-from repro.fl.experiments import build_linear_setting
+from repro.fl.experiments import build_linear_setting, world_fleet
 
 
 def _cfg(method: str, jit_round: bool = True) -> ServerConfig:
@@ -159,6 +166,60 @@ def bench_sweep(method: str = "lvr", n_seeds: int = 8, rounds: int = 20,
     return us, derived
 
 
+def bench_world_vmap(method: str = "lvr", n_worlds: int = 3,
+                     n_seeds: int = 4, rounds: int = 20,
+                     reps: int = 3) -> Tuple[float, str]:
+    """Vmapped (worlds x seeds) grid (``run_worlds``) vs the per-world
+    loop it replaced: one ``RoundEngine`` + vmapped ``run_seeds`` fleet
+    per world.  Worlds vary BOTH sensitivity axes (client count +
+    availability rate) — exactly a paper world-sensitivity row.
+
+    The headline ``speedup`` is the COLD cost of producing the table once
+    (engine build + trace + XLA compile + run), which is how sensitivity
+    grids are actually consumed: the loop compiles K executables, the
+    grid exactly one.  ``steady`` is the warmed re-dispatch ratio — it
+    can dip below 1x because every padded world pays the template world's
+    shapes, which is the price of the single compile.  Throughput unit is
+    world-seed-rounds/sec on the warmed grid."""
+    worlds = [build_linear_setting(n_models=3, n_clients=12 + 2 * i,
+                                   seed=i, avail_rate=0.5 + 0.25 * (i % 3))
+              for i in range(n_worlds)]
+    seeds = list(range(n_seeds))
+    units = reps * n_worlds * n_seeds * rounds
+
+    t0 = time.perf_counter()
+    engines = [RoundEngine(t, B, a, _cfg(method)) for t, B, a in worlds]
+    for e in engines:
+        jax.block_until_ready(e.run_seeds(seeds, rounds))
+    cold_loop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    eng, stacked = world_fleet(worlds, _cfg(method))
+    jax.block_until_ready(eng.run_worlds(stacked, seeds, rounds))
+    cold_grid = time.perf_counter() - t0
+
+    def per_world_loop():
+        for e in engines:
+            jax.block_until_ready(e.run_seeds(seeds, rounds))
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        per_world_loop()
+    loop_wsr = units / (time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(eng.run_worlds(stacked, seeds, rounds))
+    grid_wsr = units / (time.perf_counter() - t0)
+
+    us = 1e6 / grid_wsr
+    derived = (f"speedup={cold_loop / cold_grid:.2f}x;"
+               f"steady={grid_wsr / loop_wsr:.2f}x;"
+               f"cold_grid_s={cold_grid:.2f};cold_loop_s={cold_loop:.2f};"
+               f"grid_wsrps={grid_wsr:.2f};loop_wsrps={loop_wsr:.2f}")
+    return us, derived
+
+
 def _parse(derived: str) -> Dict[str, float]:
     out = {}
     for part in derived.split(";"):
@@ -183,16 +244,22 @@ def main():
                                    reps=2 if args.smoke else 3)
     us_w, d_w = bench_sweep(args.method, n_seeds=4 if args.smoke else 8,
                             rounds=rounds, reps=2 if args.smoke else 3)
+    us_g, d_g = bench_world_vmap(args.method, n_worlds=3,
+                                 n_seeds=4 if args.smoke else 8,
+                                 rounds=rounds, reps=2 if args.smoke else 3)
     report = {
         "method": args.method,
         "smoke": bool(args.smoke),
         "fused_vs_legacy": {"us_per_round": us_f, **_parse(d_f)},
         "scan_vs_eager": {"us_per_round": us_s, **_parse(d_s)},
         "sweep_fleet_vs_loop": {"us_per_seed_round": us_w, **_parse(d_w)},
+        "world_vmap_vs_loop": {"us_per_world_seed_round": us_g,
+                               **_parse(d_g)},
     }
     print(f"engine_round_{args.method},{us_f:.1f},{d_f}")
     print(f"engine_scan_{args.method},{us_s:.1f},{d_s}")
     print(f"engine_sweep_{args.method},{us_w:.1f},{d_w}")
+    print(f"engine_worlds_{args.method},{us_g:.1f},{d_g}")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {os.path.abspath(args.out)}")

@@ -187,6 +187,46 @@ def fig5_fixed_sampling_stale(fast: bool = True):
     return acc, acc["stalevr"] - static_best
 
 
+def world_sweep_sensitivity(fast: bool = True):
+    """World-axis sensitivity table (the paper's '19.1% over random' is a
+    sensitivity claim over exactly these axes): lvr/random/full across
+    availability rates x client counts, every (world, method, seed) cell
+    of a signature in ONE vmapped ``run_worlds`` dispatch per method
+    (``SweepSpec(vmap_worlds=True)`` pads the worlds to a template shape —
+    the mask contract of repro.core.engine.World).
+
+    Emits ``world_sweep[_fast].json``: per world cell the mean/std/ci95/
+    n_seeds rows plus the per-cell lvr-vs-random gap; derived is the
+    number of world cells where lvr >= random within combined CIs
+    (the ordering invariant tests/test_world_padding.py guards)."""
+    rates = [0.6, 1.0] if fast else [0.6, 0.8, 1.0]
+    clients = [16] if fast else [16, 24]
+    rounds = 12 if fast else 40
+    seeds = [0, 1, 2] if fast else [0, 1, 2, 3, 4]
+    settings = [
+        SweepSetting(name=f"n{n}_avail{int(r * 100)}", linear=True,
+                     n_models=2, n_clients=n, data_seed=0, avail_rate=r)
+        for n in clients for r in rates]
+    sweep = run_sweep(SweepSpec(
+        settings=settings, runs=["random", "lvr", "full"], seeds=seeds,
+        rounds=rounds, vmap_worlds=True,
+        server=dict(local_epochs=2, active_rate=0.3, batch_size=8)))
+    out: Dict[str, Dict] = {}
+    wins = 0
+    for s in settings:
+        rows = sweep.table(setting=s.name, relative_to="full")
+        gap = rows["lvr"]["acc"] - rows["random"]["acc"]
+        slack = rows["lvr"]["ci95"] + rows["random"]["ci95"]
+        wins += gap >= -slack
+        out[s.name] = {**rows, "_world": {
+            "n_clients": s.n_clients, "avail_rate": s.avail_rate,
+            "lvr_minus_random": gap}}
+    out["_scale"] = {"rounds": rounds, "n_seeds": len(seeds),
+                     "seeds": seeds, "n_worlds": len(settings)}
+    _save("world_sweep" + ("_fast" if fast else ""), out)
+    return out, wins
+
+
 # ---------------------------------------------------------------------------
 # CLI: the CI sweep-smoke entry point
 # ---------------------------------------------------------------------------
@@ -197,6 +237,7 @@ ALL = {
     "fig3": fig3_beta_trajectory,
     "fig4": fig4_mmfl_vs_roundrobin,
     "fig5": fig5_fixed_sampling_stale,
+    "world_sweep": world_sweep_sensitivity,
 }
 
 
@@ -206,7 +247,12 @@ def main():
                     help="CI scale: few clients/rounds/seeds")
     ap.add_argument("--only", nargs="*", default=[], choices=sorted(ALL),
                     help="subset of tables/figures to run")
+    ap.add_argument("--world-sweep", action="store_true",
+                    help="run only the world-axis sensitivity table "
+                         "(shorthand for --only world_sweep)")
     args = ap.parse_args()
+    if args.world_sweep:
+        args.only = ["world_sweep"]
     # persistent XLA compile cache (same location as tests/conftest.py):
     # repeat sweep-smoke runs skip the CNN-world scan compiles
     import jax

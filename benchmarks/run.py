@@ -73,6 +73,9 @@ def main() -> None:
     timed("engine_scan_stalevre", engine_bench.bench_scan_rollout)
     # vmapped seed fleet vs per-seed loop (derived = seed-rounds/sec win)
     timed("engine_sweep_lvr", engine_bench.bench_sweep)
+    # vmapped (worlds x seeds) grid vs per-world loop (padded mask-aware
+    # worlds; derived = world-seed-rounds/sec win)
+    timed("engine_worlds_lvr", engine_bench.bench_world_vmap)
 
 
 if __name__ == "__main__":

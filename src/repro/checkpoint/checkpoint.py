@@ -52,7 +52,13 @@ def _unflatten_like(flat: Dict[str, np.ndarray], like: Any) -> Any:
     for p, leaf in paths:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                        for q in p)
-        arr = flat[key]
+        arr = flat.get(key)
+        if arr is None:
+            raise KeyError(
+                f"checkpoint is missing leaf {key!r} required by the "
+                f"restore template — it was written under an older state "
+                f"schema (e.g. before ExperimentState.client_mask); "
+                f"restart the run or restore with a matching template")
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(jnp.asarray(arr, leaf.dtype))
     return jax.tree_util.tree_unflatten(

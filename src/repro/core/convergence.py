@@ -26,9 +26,12 @@ def participation_var(coeffs: jnp.ndarray) -> jnp.ndarray:
 
 def surrogate_variance(coeffs: jnp.ndarray, losses_v: jnp.ndarray,
                        d_v: jnp.ndarray, B_v: jnp.ndarray) -> jnp.ndarray:
-    """Eq. (10): (sum_active P_v f_v - sum_v (d_v/B_v) f_v)^2  (per model)."""
+    """Eq. (10): (sum_active P_v f_v - sum_v (d_v/B_v) f_v)^2  (per model).
+
+    B_v >= 1 on real processors; the maximum only guards the dangling rows
+    of padded worlds (B 0, d 0), which must contribute exactly 0."""
     surrogate = jnp.sum(coeffs * losses_v)
-    target = jnp.sum(d_v / B_v * losses_v)
+    target = jnp.sum(d_v / jnp.maximum(B_v, 1.0) * losses_v)
     return (surrogate - target) ** 2
 
 

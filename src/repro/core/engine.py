@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import convergence, methods, stale
+from repro.core import convergence, methods, sampling, stale
 
 
 @dataclasses.dataclass
@@ -82,12 +82,98 @@ class ExperimentState(NamedTuple):
     ``round`` is a traced int32 scalar so lr schedules and round-robin
     policies stay scan/vmap-safe; ``losses_ns`` caches the latest [N, S]
     loss reports the sampler saw (checkpointed so a resumed run samples
-    from the same view)."""
+    from the same view); ``client_mask`` [N] records which client rows are
+    real (1) vs padding (0) — checkpointed so a padded run resumes with
+    the same world contract.  None only on states built by legacy
+    in-memory constructors (all clients real); checkpoints written before
+    this field cannot restore into a current template (restore raises a
+    schema error — cross-version resume is moot anyway since the
+    index-keyed RNG re-baseline changed every stream)."""
     params: Tuple[Any, ...]
     method_state: Tuple[Any, ...]
     key: jax.Array
     round: jax.Array          # int32 scalar
     losses_ns: jax.Array      # [N, S]
+    client_mask: Optional[jax.Array] = None   # [N] 1 real / 0 padding
+
+
+class World(NamedTuple):
+    """Everything world-dependent one round reads, as ONE stackable pytree.
+
+    The engine's own world is closed over as trace constants (exactly the
+    pre-mask behaviour); ``run_worlds`` instead passes a STACKED World (one
+    leading axis over worlds) as a traced argument and vmaps the rollout
+    over it — one compile for a whole (worlds x seeds) grid.
+
+    Mask contract (the padding invariants every layer relies on):
+      * padding clients sit in a TRAILING block: ``client_mask`` is 1s then
+        0s, their budget rows are 0, their availability rows all-False and
+        their data shards empty (count 0);
+      * ``d`` is computed HOST-side over the valid prefix only, so a padded
+        world's d rows are bit-identical to the unpadded world's;
+      * V may exceed sum(B) when a world is stacked next to a bigger one:
+        the dangling ``proc_client`` rows point at the LAST client (a
+        padding client by the trailing-block rule) and carry
+        ``proc_mask`` 0, so they never receive probability or mass."""
+    data: Tuple[Dict[str, jnp.ndarray], ...]   # per-task client shards
+    test: Tuple[Dict[str, jnp.ndarray], ...]   # per-task server eval sets
+    B: jnp.ndarray            # [N] float32 budgets (0 on padding)
+    avail: jnp.ndarray        # [N,S] bool (False on padding)
+    d: jnp.ndarray            # [N,S] dataset fractions (0 on padding)
+    client_mask: jnp.ndarray  # [N] float32, trailing 0 block = padding
+    proc_client: jnp.ndarray  # [V] int32 processor -> client
+    proc_mask: jnp.ndarray    # [V] float32 (0 on padding/dangling rows)
+    v_real: jnp.ndarray       # scalar f32: true sum(B) (m = rate * v_real)
+
+
+def build_world_arrays(tasks: Sequence["Task"], B: Any, avail: Any,
+                       client_mask: Optional[Any] = None,
+                       v_total: Optional[int] = None) -> World:
+    """Host-side construction of the ``World`` pytree.
+
+    All derived quantities that must be bit-identical between a world and
+    its padded copy (``d``, the processor map) are computed here with
+    numpy over the valid prefix — never re-reduced in-trace, where XLA's
+    reduction regrouping over a longer axis would wiggle last-ulp bits."""
+    B_np = np.asarray(B, np.float32)
+    avail_np = np.asarray(avail, bool)
+    N = B_np.shape[0]
+    mask_np = (np.ones((N,), np.float32) if client_mask is None
+               else np.asarray(client_mask, np.float32))
+    n_valid = int(mask_np.sum())
+    if not (np.all(mask_np[:n_valid] == 1.0)
+            and np.all(mask_np[n_valid:] == 0.0)):
+        raise ValueError("client_mask must be a trailing padding block "
+                         "(1s for real clients, then 0s)")
+    if np.any(B_np[n_valid:] != 0) or avail_np[n_valid:].any():
+        raise ValueError("padding clients must carry zero budget and zero "
+                         "availability")
+    counts = np.stack([np.asarray(t.data["count"], np.float32)
+                       for t in tasks], axis=1)
+    counts = np.where(avail_np, counts, 0.0)
+    denom = np.maximum(counts[:n_valid].sum(axis=0, keepdims=True), 1.0)
+    d = (counts / denom).astype(np.float32)
+    B_int = B_np.astype(np.int64)
+    v_real = int(B_int.sum())
+    v_total = v_real if v_total is None else int(v_total)
+    if v_total < v_real:
+        raise ValueError(f"v_total={v_total} < sum(B)={v_real}")
+    if v_total > v_real and n_valid == N:
+        raise ValueError(
+            "a world with budget slack (sum(B) < v_total) needs at least "
+            "one padding client for the dangling processor rows to map to")
+    proc_client = np.full((v_total,), N - 1, np.int32)
+    proc_client[:v_real] = np.repeat(np.arange(N, dtype=np.int32), B_int)
+    proc_mask = (mask_np[proc_client]
+                 * (np.arange(v_total) < v_real)).astype(np.float32)
+    return World(
+        data=tuple(t.data for t in tasks),
+        test=tuple(t.test for t in tasks),
+        B=jnp.asarray(B_np), avail=jnp.asarray(avail_np), d=jnp.asarray(d),
+        client_mask=jnp.asarray(mask_np),
+        proc_client=jnp.asarray(proc_client),
+        proc_mask=jnp.asarray(proc_mask),
+        v_real=jnp.asarray(float(v_real), jnp.float32))
 
 
 class RoundEngine:
@@ -98,29 +184,41 @@ class RoundEngine:
     quantities live in the ``ExperimentState`` it threads."""
 
     def __init__(self, tasks: Sequence[Task], B: np.ndarray,
-                 avail: np.ndarray, cfg: ServerConfig):
+                 avail: np.ndarray, cfg: ServerConfig,
+                 client_mask: Optional[np.ndarray] = None,
+                 cohort_size: Optional[int] = None):
         self.tasks = list(tasks)
         self.cfg = cfg
         self.S = len(tasks)
         self.N = int(np.asarray(B).shape[0])
-        self.B = jnp.asarray(B, jnp.float32)
+        self.world = build_world_arrays(tasks, B, avail, client_mask)
+        self.B = self.world.B
         self.B_int = np.asarray(B, np.int64)
         self._B_host = np.asarray(B, np.float32)
+        self.client_mask = np.asarray(self.world.client_mask, np.float32)
+        self.n_valid = int(self.client_mask.sum())
         self.V = int(self.B_int.sum())
-        self.avail = jnp.asarray(avail, bool)                 # [N,S]
-        self.m = cfg.active_rate * self.V
-        # d_{i,s}: dataset fractions among available clients
-        counts = jnp.stack(
-            [t.data["count"].astype(jnp.float32) for t in tasks], axis=1)
-        counts = jnp.where(self.avail, counts, 0.0)
-        self.d = counts / jnp.maximum(jnp.sum(counts, axis=0, keepdims=True),
-                                      1.0)
+        self.avail = self.world.avail                         # [N,S]
+        # m rounded through the f32 product ONCE: the world-vmapped path
+        # computes m in-trace as f32(active_rate) * f32(v_real), and every
+        # other consumer (facade ctx, cohort sizing, m_host) must see the
+        # bit-identical value or a 1-ulp m skews the water-filling between
+        # execution paths (the padded-equivalence contract would only hold
+        # probabilistically)
+        self.m = float(np.float32(cfg.active_rate) * np.float32(self.V))
+        # d_{i,s}: dataset fractions among available clients (host-built —
+        # padding-stable, see build_world_arrays)
+        self.d = self.world.d
         # map processors -> clients
-        self.proc_client = jnp.asarray(
-            np.repeat(np.arange(self.N), self.B_int), jnp.int32)    # [V]
+        self.proc_client = self.world.proc_client             # [V]
         self.strategy = methods.make(cfg.method, cfg)
         # fixed cohort size for methods where only sampled clients train
-        self.cohort_size = self.strategy.cohort_size(self.N, self.m, self.S)
+        # (sized over REAL clients: a padded world keeps the same cohort).
+        # ``cohort_size`` overrides for world grids, where the capacity
+        # must cover EVERY stacked world's own sizing (world_fleet)
+        self.cohort_size = (cohort_size if cohort_size is not None
+                            else self.strategy.cohort_size(self.n_valid,
+                                                           self.m, self.S))
         self._d_v = self.d[self.proc_client]                  # [V,S]
         self._B_v = self.B[self.proc_client]                  # [V]
         # sampling-distribution override hook (ctx, losses_ns, norms_ns) ->
@@ -141,6 +239,7 @@ class RoundEngine:
         self._fleet_init_fn: Optional[Callable] = None
         self._fleet_rollout_cache: Dict[int, Callable] = {}
         self._fleet_eval_fn: Optional[Callable] = None
+        self._run_worlds_cache: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------------
     # per-task pure computations
@@ -219,14 +318,18 @@ class RoundEngine:
         loss_all = loss_all or self._loss_all[s]
         local_all = local_all or self._local_all[s]
 
-        def stats_fn(params, data, key, lr):
-            # data=None -> the probe slice bound at build time (in-trace
-            # slicing of the closed-over dataset would constant-fold a
-            # second copy of it into the executable)
-            losses = loss_all(params)
+        def stats_fn(params, data, key, lr, explicit_data=False):
+            # explicit_data=False -> the probe slice bound at build time
+            # (in-trace slicing of the closed-over dataset would
+            # constant-fold a second copy of it into the executable);
+            # True -> slice ``data`` in-trace (it is a traced World leaf
+            # under run_worlds, so there is nothing to constant-fold)
+            losses = loss_all(params, data if explicit_data else None)
             if not strat.needs_all_updates:
                 return losses, None, None
-            keys = jax.random.split(key, N)
+            # index-keyed per-client streams: client i's key depends only
+            # on (key, i), so padded worlds train real clients identically
+            keys = sampling.index_keys(key, N)
             G, _ = local_all(params, keys, data, lr)
             norms = None
             if strat.needs_grad_norms:
@@ -240,17 +343,21 @@ class RoundEngine:
                       local_all: Optional[Callable] = None) -> Callable:
         """The fused per-round work for task s: cohort gather + local
         training + strategy aggregation + Sec. 3.3 monitors, as one pure
-        function."""
+        function.  ``view`` (optional trailing arg) replaces the engine's
+        closed-over world columns with traced per-world ones — the
+        run_worlds path; None keeps today's static-world trace."""
         strat = self.strategy
         N, cohort = self.N, self.cohort_size
-        B_v, proc = self._B_v, self.proc_client
-        d_col, d_v_col = self.d[:, s], self._d_v[:, s]
+        static_view = (self.d[:, s], self._d_v[:, s], self._B_v,
+                       self.proc_client, self.world.client_mask)
         local_all = local_all or self._local_all[s]
 
         def round_fn(params, state, train_in, p_col, act_v, losses,
-                     data, lr, round_idx):
+                     data, lr, round_idx, view=None):
             """``train_in`` is the task's PRNG key (cohort methods train
             here) or the precomputed all-client G (needs-all methods)."""
+            d_col, d_v_col, B_v, proc, cmask = (static_view if view is None
+                                                else view)
             coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
             # client-level activity: l processors of client i on model
             # s behave as one update scaled by l (Remark 1)
@@ -261,16 +368,19 @@ class RoundEngine:
                 idx = jnp.arange(N)
                 G, coeff, act = train_in, coeff_client, act_client
             else:
-                # cohort path: only the sampled clients run training
+                # cohort path: only the sampled clients run training.
+                # argsort is stable, so a padded world (trailing inactive
+                # zeros) gathers the same cohort; slot-keyed randomness
+                # (index_keys) makes the draw capacity-invariant.
                 idx = jnp.argsort(-act_client)[:cohort]
-                keys = jax.random.split(train_in, cohort)
+                keys = sampling.index_keys(train_in, cohort)
                 data_c = jax.tree.map(lambda x: x[idx], data)
                 corr = strat.local_correction(state, idx)
                 G, _ = local_all(params, keys, data_c, lr, corr)
                 coeff, act = coeff_client[idx], act_client[idx]
             new_w, new_state, extras = strat.aggregate(
                 params, state, G, coeff, act, idx,
-                d_col=d_col, lr=lr, round_idx=round_idx)
+                d_col=d_col, lr=lr, round_idx=round_idx, mask=cmask)
             mets = convergence.round_metrics(coeffs_v, losses[proc],
                                              d_v_col, B_v)
             mets["loss"] = jnp.sum(d_col * losses)
@@ -282,10 +392,13 @@ class RoundEngine:
     # state constructors
     # ------------------------------------------------------------------
     def init_state(self, seed: Optional[int] = None,
-                   key: Optional[jax.Array] = None) -> ExperimentState:
+                   key: Optional[jax.Array] = None,
+                   world: Optional[World] = None) -> ExperimentState:
         """Fresh experiment state.  Key-splitting order matches the
         pre-refactor server exactly (golden metrics stay pinned).  ``seed``
-        may be a traced int32 (``run_seeds`` vmaps over it)."""
+        may be a traced int32 (``run_seeds`` vmaps over it); ``world`` (a
+        traced World under ``run_worlds``) supplies the client mask the
+        state carries."""
         if key is None:
             key = jax.random.PRNGKey(self.cfg.seed if seed is None else seed)
         params: List[Any] = []
@@ -297,59 +410,88 @@ class RoundEngine:
         return ExperimentState(
             params=tuple(params), method_state=mstate, key=key,
             round=jnp.asarray(0, jnp.int32),
-            losses_ns=jnp.ones((self.N, self.S), jnp.float32))
+            losses_ns=jnp.ones((self.N, self.S), jnp.float32),
+            client_mask=(self.world if world is None else world).client_mask)
 
-    def sampler_ctx(self, round_idx: Any) -> methods.SamplerContext:
-        """Sampler context usable INSIDE a traced round: ``B`` is a host
-        (numpy) array so the strategies' client->processor expansion
-        (``processor_budget_utilities``'s static repeat lengths) stays
-        concrete under jit/scan/vmap."""
-        return methods.SamplerContext(d=self.d, B=self._B_host,
-                                      avail=self.avail, m=self.m,
-                                      round=round_idx)
+    def sampler_ctx(self, round_idx: Any,
+                    world: Optional[World] = None) -> methods.SamplerContext:
+        """Sampler context usable INSIDE a traced round: on the engine's
+        own world ``B``/``m`` are host (numpy) values so the strategies'
+        client->processor expansion (``processor_budget_utilities``'s
+        static repeat lengths) stays concrete under jit/scan/vmap; with a
+        traced ``world`` they are per-world leaves and the static sizes
+        ride on ``V``/``m_host`` instead."""
+        if world is None:
+            return methods.SamplerContext(d=self.d, B=self._B_host,
+                                          avail=self.avail, m=self.m,
+                                          round=round_idx, V=self.V,
+                                          m_host=self.m,
+                                          mask=self.world.client_mask)
+        return methods.SamplerContext(
+            d=world.d, B=world.B, avail=world.avail,
+            m=self.cfg.active_rate * world.v_real, round=round_idx,
+            V=self.V, m_host=self.m, mask=world.client_mask)
 
     # ------------------------------------------------------------------
     # the pure round transition
     # ------------------------------------------------------------------
-    def round_step_fn(self, state: ExperimentState
+    def round_step_fn(self, state: ExperimentState,
+                      world: Optional[World] = None
                       ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
         """state -> (state', metrics).  Pure and jittable: safe under
         ``jax.jit``, ``lax.scan`` (rollout) and ``jax.vmap`` (seed fleets).
+
+        ``world=None`` closes over the engine's own world as trace
+        constants (the classic path); a traced ``World`` argument makes
+        the SAME transition a function of the world too — ``run_worlds``
+        vmaps it over stacked world pytrees.
 
         Metrics are [S]-stacked device arrays ({H1, Zp, Zl, loss}; plus
         ``beta`` [S, N] for the stale family) — no host syncs here."""
         cfg, S = self.cfg, self.S
         strat = self.strategy
+        explicit = world is not None
+        w = self.world if world is None else world
         round_f = state.round.astype(jnp.float32)
         lr = jnp.float32(cfg.lr) * jnp.float32(cfg.lr_decay) ** round_f
         keys = jax.random.split(state.key, 2 + S)
         new_key, k_sample = keys[0], keys[1]
 
         # ---- 1) stats for the sampler -----------------------------------
-        stats = [self._stats_pure[s](state.params[s], self.tasks[s].data,
-                                     keys[2 + s], lr) for s in range(S)]
+        stats = [self._stats_pure[s](state.params[s], w.data[s],
+                                     keys[2 + s], lr, explicit)
+                 for s in range(S)]
         losses_ns = jnp.stack([st[0] for st in stats], axis=1)    # [N,S]
         norms_ns = (jnp.stack([st[2] for st in stats], axis=1)
                     if strat.needs_grad_norms else None)
 
         # ---- 2) sampling -------------------------------------------------
-        ctx = self.sampler_ctx(state.round)
+        ctx = self.sampler_ctx(state.round, world)
         if self.probabilities_hook is not None:
             p = self.probabilities_hook(ctx, losses_ns, norms_ns)
         else:
             p = strat.probabilities(ctx, losses_ns, norms_ns)     # [V,S]
+        # the engine-level mask guarantee: whatever the strategy (or a
+        # pinned probabilities hook) returns, padding processors carry no
+        # probability and draw no participation
+        p = p * w.proc_mask[:, None]
         active = strat.sample(k_sample, p, ctx, losses_ns)
+        active = active * w.proc_mask[:, None]
 
         # ---- 3) fused per-task round ------------------------------------
         new_params, new_mstate, betas = [], [], []
         per_key: Dict[str, List[jnp.ndarray]] = {
             k: [] for k in ("H1", "Zp", "Zl", "loss")}
+        d_v = w.d[w.proc_client] if explicit else None
+        B_v = w.B[w.proc_client] if explicit else None
         for s in range(S):
             train_in = stats[s][1] if strat.needs_all_updates else keys[2 + s]
+            view = ((w.d[:, s], d_v[:, s], B_v, w.proc_client,
+                     w.client_mask) if explicit else None)
             new_w, new_st, mets, extras = self._round_pure[s](
                 state.params[s], state.method_state[s], train_in, p[:, s],
-                active[:, s], losses_ns[:, s], self.tasks[s].data,
-                lr, round_f)
+                active[:, s], losses_ns[:, s], w.data[s],
+                lr, round_f, view)
             new_params.append(new_w)
             new_mstate.append(new_st)
             for k in per_key:
@@ -361,7 +503,8 @@ class RoundEngine:
             metrics["beta"] = jnp.stack(betas)                     # [S,N]
         new_state = ExperimentState(
             params=tuple(new_params), method_state=tuple(new_mstate),
-            key=new_key, round=state.round + 1, losses_ns=losses_ns)
+            key=new_key, round=state.round + 1, losses_ns=losses_ns,
+            client_mask=state.client_mask)
         return new_state, metrics
 
     # ------------------------------------------------------------------
@@ -445,9 +588,56 @@ class RoundEngine:
         return self._fleet_eval_fn(states)
 
     # ------------------------------------------------------------------
-    def evaluate_fn(self, state: ExperimentState) -> jnp.ndarray:
+    # vmapped world grids: the generalization of ``run_seeds`` to the
+    # world axis — stacked world pytrees (client counts, availability,
+    # heterogeneity all varying) x seeds in ONE lax.scan dispatch.
+    # ------------------------------------------------------------------
+    def run_worlds(self, worlds: World, seeds: Any, n_rounds: int
+                   ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray],
+                              jnp.ndarray]:
+        """Run a (worlds x seeds) grid as ONE compiled dispatch.
+
+        ``worlds`` is a World pytree whose every leaf carries a leading
+        [n_worlds] axis (``repro.fl.experiments.world_fleet`` builds it
+        from heterogeneous worlds by padding them to this engine's
+        template shapes).  The engine supplies everything static — model
+        adapters, the strategy, cohort capacity, V — so every world must
+        be padded to the template's (N, V, S, cap) shapes.
+
+        Returns (final_states, metrics, final_accs) with leading
+        [n_worlds, n_seeds] axes everywhere ([n_worlds, n_seeds, n_rounds,
+        S] metrics) — the paper's world-sensitivity grids (client counts x
+        availability rates) at one compile per grid instead of one per
+        world."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        n_rounds = int(n_rounds)
+        fn = self._run_worlds_cache.get(n_rounds)
+        if fn is None:
+            def one(world, seed):
+                st0 = self.init_state(key=jax.random.PRNGKey(seed),
+                                      world=world)
+
+                def body(st, _):
+                    return self.round_step_fn(st, world)
+
+                stf, mets = jax.lax.scan(body, st0, None, length=n_rounds)
+                return stf, mets, self.evaluate_fn(stf, world)
+
+            def grid(worlds_, seeds_):
+                per_world = lambda w: jax.vmap(
+                    lambda sd: one(w, sd))(seeds_)
+                return jax.vmap(per_world)(worlds_)
+
+            fn = jax.jit(grid)
+            self._run_worlds_cache[n_rounds] = fn
+        return fn(worlds, seeds)
+
+    # ------------------------------------------------------------------
+    def evaluate_fn(self, state: ExperimentState,
+                    world: Optional[World] = None) -> jnp.ndarray:
         """[S] test accuracies as a pure function (vmap-safe)."""
-        return jnp.stack([t.model.accuracy(state.params[s], t.test)
+        test = (self.world if world is None else world).test
+        return jnp.stack([t.model.accuracy(state.params[s], test[s])
                           for s, t in enumerate(self.tasks)])
 
     def evaluate(self, state: ExperimentState) -> List[float]:

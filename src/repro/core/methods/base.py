@@ -47,12 +47,23 @@ from repro.core import aggregation, sampling
 @dataclasses.dataclass
 class SamplerContext:
     """The world statistics the sampling side needs — the server satisfies
-    this protocol itself; the distributed trainer builds one explicitly."""
+    this protocol itself; the distributed trainer builds one explicitly.
+
+    The last three fields carry the mask-aware world contract: ``V`` is the
+    STATIC per-processor row count (required when ``B`` is traced, i.e.
+    world-vmapped engines), ``m_host`` a static stand-in for ``m`` wherever
+    a strategy derives Python-level sizes from the budget (``m`` itself may
+    be a traced per-world scalar), and ``mask`` the [N] client validity
+    mask (0 marks padding clients, which must never receive probability,
+    cohort slots, or aggregation mass)."""
     d: jnp.ndarray        # [N,S] dataset fractions among available clients
     B: jnp.ndarray        # [N]   processor budgets
     avail: jnp.ndarray    # [N,S] availability mask
     m: float              # expected training tasks per round (budget)
     round: int = 0
+    V: Optional[int] = None           # static total processor rows
+    m_host: Optional[float] = None    # static budget for size derivations
+    mask: Optional[jnp.ndarray] = None  # [N] 1 real / 0 padding
 
 
 class MethodStrategy:
@@ -64,6 +75,12 @@ class MethodStrategy:
     uses_loss_stats: ClassVar[bool] = True    # sampler consumes loss reports
     uses_stale_store: ClassVar[bool] = False
     distributed_ok: ClassVar[bool] = False
+    # True when the strategy derives STATIC Python sizes from the budget m
+    # (e.g. power_of_choice's top-k cohort): under a world-vmapped grid
+    # those sizes freeze at the template world's m_host, so worlds with a
+    # different budget would silently sample differently than standalone —
+    # world_fleet refuses to stack heterogeneous budgets for such methods
+    static_budget_sizing: ClassVar[bool] = False
 
     def __init__(self, cfg: Any = None):
         self.cfg = cfg      # ServerConfig-like (fedstale_beta, local_epochs..)
@@ -105,13 +122,18 @@ class MethodStrategy:
     def aggregate(self, w: Any, state: Dict[str, Any], G: Any,
                   coeff: jnp.ndarray, act: jnp.ndarray, idx: jnp.ndarray, *,
                   d_col: jnp.ndarray, lr: jnp.ndarray,
-                  round_idx: jnp.ndarray
+                  round_idx: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None
                   ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
         """Apply the method's aggregation rule for one task.
 
         coeff/act: [A] cohort coefficients / participation; G: cohort
         updates [A, ...]; idx: [A] client ids (all-client methods have
-        A == N, idx == arange(N)).  Default: Eq. 3 unbiased aggregation."""
+        A == N, idx == arange(N)); ``mask``: [N] client validity (None ==
+        all valid) — padding clients arrive with coeff/act/d 0, so
+        d-weighted rules ignore them for free; rules that average over the
+        CLIENT COUNT must divide by sum(mask) instead of N.  Default:
+        Eq. 3 unbiased aggregation."""
         return aggregation.aggregate(w, G, coeff), state, {}
 
 

@@ -24,9 +24,12 @@ class FlammableMethod(MethodStrategy):
     distributed_ok = True
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
-        util = jnp.abs(losses_ns) * ctx.d / ctx.B[:, None]
+        # B >= 1 on real clients; the maximum only de-NaNs padding rows
+        # (d 0, B 0), which must carry zero utility
+        util = jnp.abs(losses_ns) * ctx.d / jnp.maximum(ctx.B, 1.0)[:, None]
         util = jnp.where(ctx.avail, util, 0.0)
-        U = sampling.processor_budget_utilities(util, ctx.B)      # [V,S]
+        U = sampling.processor_budget_utilities(
+            util, ctx.B, getattr(ctx, "V", None))                 # [V,S]
         V, S = U.shape
         # each (v,s) pair is its own unit -> no <=1 row coupling across
         # models: multi-model engagement becomes possible
@@ -34,9 +37,14 @@ class FlammableMethod(MethodStrategy):
         return p.reshape(V, S)
 
     def sample(self, key, p, ctx, losses_ns=None):
-        # independent Bernoulli per (processor, model): rows may hold
-        # multiple 1s (one processor training several models this round)
-        return (jax.random.uniform(key, p.shape) < p).astype(jnp.float32)
+        # independent Bernoulli per (processor, model); row v's draws hang
+        # off index key v only, so padded worlds reproduce real processors'
+        # engagement bit-for-bit.  Rows may hold multiple 1s (one processor
+        # training several models this round).
+        V, S = p.shape
+        u = jax.vmap(lambda k: jax.random.uniform(k, (S,)))(
+            sampling.index_keys(key, V))
+        return (u < p).astype(jnp.float32)
 
     def cohort_size(self, n_clients: int, m: float, n_models: int) -> int:
         # no per-processor row cap: the water-filling may pour nearly ALL

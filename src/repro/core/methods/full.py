@@ -16,7 +16,7 @@ class FullParticipationMethod(MethodStrategy):
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
         avail_v = sampling.processor_budget_utilities(
-            ctx.avail.astype(jnp.float32), ctx.B)
+            ctx.avail.astype(jnp.float32), ctx.B, getattr(ctx, "V", None))
         return jnp.ones_like(avail_v) * avail_v
 
     def sample(self, key, p, ctx, losses_ns=None):

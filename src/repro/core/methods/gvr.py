@@ -16,4 +16,5 @@ class GVRMethod(MethodStrategy):
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
         return sampling.gvr_probabilities(norms_ns, ctx.d, ctx.B,
-                                          ctx.avail, ctx.m)
+                                          ctx.avail, ctx.m,
+                                          total=getattr(ctx, "V", None))

@@ -14,7 +14,7 @@ from repro.core.methods.mixins import StaleStoreMixin, UniformSamplingMixin
 class MIFAMethod(UniformSamplingMixin, StaleStoreMixin, MethodStrategy):
 
     def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
-                  round_idx):
+                  round_idx, mask=None):
         h, hv = self.refresh(state, G, act, idx)
         delta = stale.stale_mean(h, d_col * hv)
         return (aggregation.apply_delta(w, delta),

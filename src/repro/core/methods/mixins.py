@@ -32,7 +32,8 @@ class LossSamplingMixin:
     def probabilities(self, ctx, losses_ns, norms_ns=None):
         return sampling.lvr_probabilities(losses_ns, ctx.d, ctx.B,
                                           ctx.avail, ctx.m,
-                                          eta=self._eta(ctx))
+                                          eta=self._eta(ctx),
+                                          total=getattr(ctx, "V", None))
 
 
 class UniformSamplingMixin:
@@ -42,7 +43,8 @@ class UniformSamplingMixin:
     uses_loss_stats = False
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
-        return sampling.random_probabilities(ctx.d, ctx.B, ctx.avail, ctx.m)
+        return sampling.random_probabilities(ctx.d, ctx.B, ctx.avail, ctx.m,
+                                             total=getattr(ctx, "V", None))
 
 
 class StaleStoreMixin:

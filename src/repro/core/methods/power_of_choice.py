@@ -22,18 +22,31 @@ CANDIDATE_FACTOR = 2    # candidate set size = factor * k (capped at V)
 class PowerOfChoiceMethod(UniformSamplingMixin, MethodStrategy):
     distributed_ok = True
     uses_loss_stats = True      # candidate ranking needs the loss reports
+    static_budget_sizing = True  # k = round(m/S) is a static Python size
 
     def sample(self, key, p, ctx, losses_ns=None):
         V, S = p.shape
-        k = max(1, int(round(ctx.m / S)))           # active processors/task
+        m_eff = getattr(ctx, "m_host", None)
+        m_eff = ctx.m if m_eff is None else m_eff
+        k = max(1, int(round(m_eff / S)))           # active processors/task
         n_cand = min(V, CANDIDATE_FACTOR * k)
-        losses_v = sampling.processor_budget_utilities(losses_ns, ctx.B)
+        total = getattr(ctx, "V", None)
+        losses_v = sampling.processor_budget_utilities(losses_ns, ctx.B,
+                                                       total)
         avail_v = sampling.processor_budget_utilities(
-            ctx.avail.astype(jnp.float32), ctx.B)
+            ctx.avail.astype(jnp.float32), ctx.B, total)
 
         def one_task(k_s, loss_col, avail_col):
-            perm = jax.random.permutation(k_s, V)
-            cand = jnp.zeros((V,)).at[perm[:n_cand]].set(1.0) * avail_col
+            # uniform candidate set = top n_cand of per-processor iid
+            # uniform scores restricted to available processors.  Unlike a
+            # permutation prefix this is invariant to padding: processor
+            # v's score hangs off index key v only, and masked processors
+            # score -inf, so a padded world draws the same candidates.
+            u = sampling.index_uniform(k_s, V)
+            cand_score = jnp.where(avail_col > 0, u, -jnp.inf)
+            _, cand_idx = jax.lax.top_k(cand_score, n_cand)
+            cand = (jnp.zeros((V,)).at[cand_idx].set(1.0)
+                    * (avail_col > 0))              # drop -inf fillers
             score = jnp.where(cand > 0, loss_col, -jnp.inf)
             _, top = jax.lax.top_k(score, k)
             act = jnp.zeros((V,)).at[top].set(1.0)
@@ -44,5 +57,7 @@ class PowerOfChoiceMethod(UniformSamplingMixin, MethodStrategy):
             keys, losses_v, avail_v)
 
     def coefficients(self, d_v, B_v, p_v, act_v):
-        w = act_v * d_v / B_v
+        # B_v >= 1 on real processors; the maximum only guards dangling
+        # padded rows (act 0, d 0, B 0) from contributing 0/0 NaNs
+        w = act_v * d_v / jnp.maximum(B_v, 1.0)
         return w / jnp.maximum(jnp.sum(w), 1e-30)

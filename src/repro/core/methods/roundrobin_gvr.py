@@ -16,4 +16,5 @@ class RoundRobinGVRMethod(MethodStrategy):
         avail = sampling.roundrobin_mask(
             ctx.avail.astype(norms_ns.dtype), ctx.round).astype(bool)
         return sampling.gvr_probabilities(norms_ns, ctx.d, ctx.B,
-                                          avail, ctx.m)
+                                          avail, ctx.m,
+                                          total=getattr(ctx, "V", None))

@@ -26,19 +26,28 @@ class ScaffoldMethod(UniformSamplingMixin, MethodStrategy):
                             state["ci"], state["c"])
 
     def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
-                  round_idx):
+                  round_idx, mask=None):
         new_w = aggregation.aggregate(w, G, coeff)
         K = getattr(self.cfg, "local_epochs", DEFAULT_LOCAL_EPOCHS)
-        n = d_col.shape[0]
+        # the global variate averages over REAL clients: padding rows never
+        # change (act 0) but they must not inflate the divisor either
+        n = d_col.shape[0] if mask is None else jnp.sum(mask)
+        ones = (jnp.ones((d_col.shape[0],), jnp.float32) if mask is None
+                else mask)
         ci, c = state["ci"], state["c"]
 
         def upd_ci(cii, cc, g):
-            mask = act.reshape((-1,) + (1,) * (g.ndim - 1)) > 0
-            new_rows = jnp.where(mask, cii[idx] - cc[None] + g / (K * lr),
+            amask = act.reshape((-1,) + (1,) * (g.ndim - 1)) > 0
+            new_rows = jnp.where(amask, cii[idx] - cc[None] + g / (K * lr),
                                  cii[idx])
             return cii.at[idx].set(new_rows)
 
         new_ci = jax.tree.map(upd_ci, ci, c, G)
-        dc = jax.tree.map(lambda a, b: jnp.sum(a - b, axis=0) / n, new_ci, ci)
+        # tensordot (not an axis-0 sum): dot reductions keep trailing
+        # zero-masked rows from regrouping the real rows' partial sums, so
+        # padded and unpadded worlds aggregate bit-identically
+        dc = jax.tree.map(
+            lambda a, b: jnp.tensordot(ones, a - b, axes=(0, 0)) / n,
+            new_ci, ci)
         new_c = jax.tree.map(lambda cc, d_: cc + d_, c, dc)
         return new_w, {"c": new_c, "ci": new_ci}, {}

@@ -28,7 +28,9 @@ class StaleVRFamily(StaleStoreMixin, MethodStrategy):
         raise NotImplementedError
 
     def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
-                  round_idx):
+                  round_idx, mask=None):
+        # padding clients need no explicit masking here: their d is 0 (the
+        # stale mean skips them) and they are never active (h stays 0)
         hv = state["h_valid"]
         h_cohort = jax.tree.map(lambda x: x[idx], state["h"])
         beta_all, state = self._beta(state, G, h_cohort, act, idx, round_idx)

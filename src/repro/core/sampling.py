@@ -24,18 +24,41 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Paper Assumption 5: lower-bounded probability.  Implemented as the paper
 # suggests — "a small constant added to the local loss" (utility floor).
 UTILITY_FLOOR = 1e-8
 
 
-def processor_budget_utilities(client_util: jnp.ndarray,
-                               B: jnp.ndarray) -> jnp.ndarray:
+def index_keys(key: jax.Array, n: int) -> jax.Array:
+    """[n] per-index PRNG keys via ``fold_in`` — key i depends only on
+    (key, i), never on n.  This is the padding-invariance contract of the
+    mask-aware engine: a world padded from N to N_max draws bit-identical
+    randomness for its first N clients (``jax.random.split(key, n)`` does
+    NOT have this property — threefry lays counters out over the full n)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def index_uniform(key: jax.Array, n: int) -> jnp.ndarray:
+    """[n] iid U[0,1) draws, one scalar per index key (padding-invariant)."""
+    return jax.vmap(lambda k: jax.random.uniform(k))(index_keys(key, n))
+
+
+def processor_budget_utilities(client_util: jnp.ndarray, B: jnp.ndarray,
+                               total: Optional[int] = None) -> jnp.ndarray:
     """Expand per-client utilities [N,S] to per-processor [V,S] given integer
-    budgets B [N] (V = sum(B)).  Processors of one client share utilities."""
-    B = B.astype(jnp.int32)
-    return jnp.repeat(client_util, B, axis=0, total_repeat_length=int(B.sum()))
+    budgets B [N] (V = sum(B)).  Processors of one client share utilities.
+
+    ``total`` is the static output length (``SamplerContext.V``): pass it
+    when B is traced (world-vmapped engines).  When ``total`` exceeds
+    sum(B) — a padded world stacked next to a bigger one — the dangling
+    rows repeat the LAST client, which the mask contract guarantees is a
+    padding client (zero availability), so they never carry utility."""
+    if total is None:
+        total = int(np.asarray(B).sum())
+    B = jnp.asarray(B).astype(jnp.int32)
+    return jnp.repeat(client_util, B, axis=0, total_repeat_length=int(total))
 
 
 def solve_waterfilling(U: jnp.ndarray, m: float) -> jnp.ndarray:
@@ -140,39 +163,45 @@ def solve_waterfilling_capped(U: jnp.ndarray, m: float,
 
 def lvr_probabilities(losses: jnp.ndarray, d: jnp.ndarray, B: jnp.ndarray,
                       avail: jnp.ndarray, m: float,
-                      eta: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                      eta: Optional[jnp.ndarray] = None,
+                      total: Optional[int] = None) -> jnp.ndarray:
     """MMFL-LVR (Thm 2/9).  losses [N,S] current local losses f_{i,s}(w_s);
     d [N,S] dataset fractions; B [N] processor budgets; avail [N,S] bool.
     ``eta`` [N] (optional): per-client participation caps (footnote-3
     extension — cellular/roaming clients upload less often).
-    Returns per-processor probabilities [V,S]."""
-    util = jnp.abs(losses) * d / B[:, None]
+    Returns per-processor probabilities [V,S] (V = ``total`` or sum(B);
+    masked padding clients — B 0, avail False — carry no utility)."""
+    # B >= 1 for real clients; the maximum only guards padding rows, whose
+    # d is 0 anyway (keeps 0/0 NaNs out of the padded utility matrix)
+    util = jnp.abs(losses) * d / jnp.maximum(B, 1.0)[:, None]
     util = jnp.where(avail, util, 0.0)
-    U = processor_budget_utilities(util, B)
+    U = processor_budget_utilities(util, B, total)
     if eta is not None:
-        eta_v = processor_budget_utilities(eta[:, None], B)[:, 0]
+        eta_v = processor_budget_utilities(eta[:, None], B, total)[:, 0]
         return solve_waterfilling_capped(U, m, eta_v)
     return solve_waterfilling(U, m)
 
 
 def gvr_probabilities(update_norms: jnp.ndarray, d: jnp.ndarray,
                       B: jnp.ndarray, avail: jnp.ndarray, m: float,
-                      eta: float = 1.0) -> jnp.ndarray:
+                      eta: float = 1.0,
+                      total: Optional[int] = None) -> jnp.ndarray:
     """MMFL-GVR (Thm 8; prior art [5,31] adapted to heterogeneous budgets).
     update_norms [N,S] = ||G_{i,s}|| — requires *all* clients to train *all*
     models (the computational overhead the paper criticizes)."""
-    util = update_norms * d / (B[:, None] * eta)
+    util = update_norms * d / (jnp.maximum(B, 1.0)[:, None] * eta)
     util = jnp.where(avail, util, 0.0)
-    U = processor_budget_utilities(util, B)
+    U = processor_budget_utilities(util, B, total)
     return solve_waterfilling(U, m)
 
 
 def random_probabilities(d: jnp.ndarray, B: jnp.ndarray, avail: jnp.ndarray,
-                         m: float) -> jnp.ndarray:
+                         m: float,
+                         total: Optional[int] = None) -> jnp.ndarray:
     """Uniform-random baseline: every available (processor, model) pair gets
     equal probability, scaled to meet the budget m."""
     util = jnp.where(avail, 1.0, 0.0)
-    U = processor_budget_utilities(util, B)
+    U = processor_budget_utilities(util, B, total)
     n_pairs = jnp.maximum(jnp.sum(U > 0), 1)
     p = U * (m / n_pairs)
     # respect per-processor feasibility
@@ -192,13 +221,20 @@ def roundrobin_mask(avail: jnp.ndarray, round_idx: int) -> jnp.ndarray:
 def sample_assignment(key, p: jnp.ndarray) -> jnp.ndarray:
     """Draw the participation indicators.  Each processor independently picks
     at most one model: with prob p_{s|v} it trains model s (sum_s p <= 1).
-    Returns active [V,S] in {0,1} with at most one 1 per row."""
+    Returns active [V,S] in {0,1} with at most one 1 per row.
+
+    Drawn by per-processor inverse-CDF over ``index_uniform`` so processor
+    v's draw depends only on (key, v): padding a world with extra masked
+    processors leaves every real processor's participation bit-identical
+    (``jax.random.categorical`` would reshuffle all draws with V)."""
     V, S = p.shape
     row = jnp.sum(p, axis=1)
     stay_idle = 1.0 - row
     probs = jnp.concatenate([p, stay_idle[:, None]], axis=1)
     probs = jnp.clip(probs, 0.0, 1.0)
     probs = probs / jnp.maximum(jnp.sum(probs, axis=1, keepdims=True), 1e-30)
-    choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)), axis=1)
+    cdf = jnp.cumsum(probs, axis=1)
+    u = index_uniform(key, V)
+    choice = jnp.sum(u[:, None] >= cdf, axis=1)        # first s with cdf > u
     active = jax.nn.one_hot(choice, S + 1, dtype=jnp.float32)[:, :S]
     return active

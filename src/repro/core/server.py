@@ -194,8 +194,12 @@ class MMFLServer:
                     if self.strategy.needs_grad_norms else None)
 
         # ---- 2) sampling (server itself is the ctx: .d/.B/.avail/.m/.round)
-        p = self._probabilities(losses_ns, norms_ns)              # [V,S]
+        # proc_mask mirrors the fused path's engine-level guarantee: even a
+        # monkeypatched _probabilities cannot put mass on padding clients
+        proc_mask = self.engine.world.proc_mask
+        p = self._probabilities(losses_ns, norms_ns) * proc_mask[:, None]
         active = self.strategy.sample(k_sample, p, self, losses_ns)
+        active = active * proc_mask[:, None]
 
         # ---- 3) eager per-task round ------------------------------------
         metrics: Dict[str, Any] = {"round": r}
@@ -215,7 +219,8 @@ class MMFLServer:
 
         self._state = ExperimentState(
             params=tuple(params), method_state=tuple(mstate), key=key,
-            round=self._state.round + 1, losses_ns=losses_ns)
+            round=self._state.round + 1, losses_ns=losses_ns,
+            client_mask=self._state.client_mask)
         return metrics
 
     # ------------------------------------------------------------------

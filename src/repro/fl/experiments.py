@@ -15,13 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import RoundEngine
+from repro.core import methods
+from repro.core.engine import RoundEngine, World, build_world_arrays
 from repro.core.server import MMFLServer, ModelAdapter, ServerConfig, Task
 from repro.data import partition, synthetic
 from repro.models import cnn, lstm
@@ -44,13 +45,14 @@ def _lstm_adapter(vocab: int) -> ModelAdapter:
 
 
 def _image_task(rng, name: str, n_clients: int, n_classes: int = 10,
-                channels: int = 8, n_per_class: int = 200) -> Task:
+                channels: int = 8, n_per_class: int = 200,
+                label_frac: float = 0.3) -> Task:
     x, y = synthetic.make_image_task(rng, n_classes=n_classes,
                                      n_per_class=n_per_class)
     n_test = max(64, len(y) // 10)
     test = {"x": jnp.asarray(x[:n_test]), "y": jnp.asarray(y[:n_test])}
     part = partition.label_shard_partition(rng, x[n_test:], y[n_test:],
-                                           n_clients)
+                                           n_clients, label_frac=label_frac)
     data = {k: jnp.asarray(v) for k, v in part.items() if k != "high"}
     return Task(name=name, model=_cnn_adapter(n_classes, channels),
                 data=data, test=test)
@@ -69,31 +71,45 @@ def _char_task(rng, name: str, n_clients: int, vocab: int = 48) -> Task:
 
 
 def build_setting(n_models: int = 3, n_clients: int = 120, seed: int = 0,
-                  small: bool = False) -> Tuple[List[Task], np.ndarray, np.ndarray]:
+                  small: bool = False, avail_rate: Optional[float] = None,
+                  label_frac: Optional[float] = None
+                  ) -> Tuple[List[Task], np.ndarray, np.ndarray]:
     """Returns (tasks, B, avail).  ``small=True`` shrinks everything for
-    CI-speed tests while keeping the same structure."""
+    CI-speed tests while keeping the same structure.
+
+    World axes (None keeps the paper's §6.1 defaults, bit-identically):
+    ``avail_rate`` — fraction of clients able to train all S models
+    (default 0.9); ``label_frac`` — heterogeneity, the label fraction each
+    client sees (default 0.3)."""
     rng = np.random.default_rng(seed)
     if small:
         n_clients = min(n_clients, 24)
     npc = 60 if small else 200
+    lf = 0.3 if label_frac is None else float(label_frac)
     tasks: List[Task] = []
     if n_models == 3:
         for i in range(3):
             tasks.append(_image_task(rng, f"fmnist-{i}", n_clients,
-                                     n_per_class=npc))
+                                     n_per_class=npc, label_frac=lf))
     elif n_models == 5:
-        tasks.append(_image_task(rng, "fmnist-0", n_clients, n_per_class=npc))
-        tasks.append(_image_task(rng, "fmnist-1", n_clients, n_per_class=npc))
+        tasks.append(_image_task(rng, "fmnist-0", n_clients, n_per_class=npc,
+                                 label_frac=lf))
+        tasks.append(_image_task(rng, "fmnist-1", n_clients, n_per_class=npc,
+                                 label_frac=lf))
         tasks.append(_image_task(rng, "cifar", n_clients, n_classes=10,
-                                 channels=12, n_per_class=npc))
+                                 channels=12, n_per_class=npc,
+                                 label_frac=lf))
         tasks.append(_image_task(rng, "emnist", n_clients, n_classes=26,
-                                 n_per_class=max(40, npc // 2)))
+                                 n_per_class=max(40, npc // 2),
+                                 label_frac=lf))
         tasks.append(_char_task(rng, "shakespeare", n_clients))
     else:
         for i in range(n_models):
             tasks.append(_image_task(rng, f"task-{i}", n_clients,
-                                     n_per_class=npc))
-    avail = partition.availability(rng, n_clients, n_models)
+                                     n_per_class=npc, label_frac=lf))
+    avail = partition.availability(
+        rng, n_clients, n_models,
+        frac_all=0.9 if avail_rate is None else float(avail_rate))
     B = partition.processor_budgets(rng, avail)
     return tasks, B, avail
 
@@ -131,13 +147,18 @@ def _linear_adapter(n_feat: int, n_classes: int) -> ModelAdapter:
 
 def build_linear_setting(n_models: int = 2, n_clients: int = 16,
                          n_feat: int = 16, n_classes: int = 4,
-                         cap: int = 32, seed: int = 0
+                         cap: int = 32, seed: int = 0,
+                         avail_rate: Optional[float] = None
                          ) -> Tuple[List[Task], np.ndarray, np.ndarray]:
     """Tiny separable linear-softmax tasks with heterogeneous budgets.
 
     Compiles in milliseconds — used by the all-methods registry tests and
     the round-engine benchmark, where the CNN world's compute would mask
-    the orchestration costs under measurement."""
+    the orchestration costs under measurement.
+
+    ``avail_rate`` (world axis; default None = everyone available) draws a
+    §6.1-style availability mask from a rate-keyed side stream, so the
+    default world stays bit-identical to the pre-axis builder."""
     rng = np.random.default_rng(seed)
     tasks: List[Task] = []
     for s in range(n_models):
@@ -154,6 +175,10 @@ def build_linear_setting(n_models: int = 2, n_clients: int = 16,
             test={"x": jnp.asarray(xt), "y": jnp.asarray(yt)}))
     B = rng.integers(1, 4, n_clients)
     avail = np.ones((n_clients, n_models), bool)
+    if avail_rate is not None:
+        avail = partition.availability(
+            np.random.default_rng((seed, 1)), n_clients, n_models,
+            frac_all=float(avail_rate))
     return tasks, B, avail
 
 
@@ -188,16 +213,27 @@ class ExperimentSpec:
 
 
 def build_world(n_models: int, n_clients: int, data_seed: int = 0,
-                small: bool = False, linear: bool = False
+                small: bool = False, linear: bool = False,
+                avail_rate: Optional[float] = None,
+                label_frac: Optional[float] = None
                 ) -> Tuple[List[Task], np.ndarray, np.ndarray]:
     """The (tasks, B, avail) triple an ``ExperimentSpec``/``SweepSetting``
     names.  One world is shared by every method/seed cell evaluated on it
-    (the sweep harness builds each setting exactly once)."""
+    (the sweep harness builds each setting exactly once).
+
+    ``avail_rate``/``label_frac`` are the world-sensitivity axes (None =
+    the builders' §6.1 defaults, bit-identically)."""
     if linear:
+        if label_frac is not None:
+            # the linear micro tasks have no label shards — silently
+            # ignoring the axis would emit identical "heterogeneity" cells
+            raise ValueError("label_frac is a CNN-world axis; the linear "
+                             "micro setting has no label shards to vary")
         return build_linear_setting(n_models=n_models, n_clients=n_clients,
-                                    seed=data_seed)
+                                    seed=data_seed, avail_rate=avail_rate)
     return build_setting(n_models, n_clients=n_clients, seed=data_seed,
-                         small=small)
+                         small=small, avail_rate=avail_rate,
+                         label_frac=label_frac)
 
 
 def build_engine(spec: ExperimentSpec) -> RoundEngine:
@@ -288,3 +324,139 @@ def run_seed_fleet(engine: RoundEngine, seeds: Sequence[int], rounds: int,
         "acc_mean": accs.mean(axis=0), "acc_std": accs.std(axis=0),
     })
     return out
+
+
+# ---------------------------------------------------------------------------
+# padded mask-aware worlds: heterogeneous worlds as ONE vmappable axis
+# ---------------------------------------------------------------------------
+
+
+def pad_world(tasks: Sequence[Task], B: np.ndarray, avail: np.ndarray,
+              n_clients: int, cap: Optional[Dict[int, int]] = None
+              ) -> Tuple[List[Task], np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a built world to ``n_clients`` with masked padding clients.
+
+    Padding clients follow the mask contract (``repro.core.engine.World``):
+    zero budget, all-False availability, empty shards (count 0) — so V is
+    unchanged and the padded world trains bit-identically to the original
+    (tests/test_world_padding.py pins this for every registered method).
+
+    ``cap`` (optional, {task_index: target_cap}) wrap-pads a task's
+    per-client sample axis to a common capacity — needed to STACK worlds
+    whose partitions drew different caps.  Wrapped rows repeat real rows
+    (the partitioner's own convention) and are never sampled (minibatch
+    indices stay < count), but the loss-probe slice may widen, so
+    cap-padded worlds are statistically, not bitwise, equivalent.
+
+    Returns (tasks, B, avail, client_mask)."""
+    N = int(np.asarray(B).shape[0])
+    extra = int(n_clients) - N
+    if extra < 0:
+        raise ValueError(f"cannot pad {N} clients down to {n_clients}")
+    mask = np.concatenate([np.ones(N, np.float32),
+                           np.zeros(extra, np.float32)])
+    out_tasks: List[Task] = []
+    for s, t in enumerate(tasks):
+        data = {}
+        for k, v in t.data.items():
+            arr = np.asarray(v)
+            if cap and k in ("x", "y") and cap.get(s, arr.shape[1]) != arr.shape[1]:
+                wrap = np.arange(int(cap[s])) % arr.shape[1]
+                arr = arr[:, wrap]
+            if extra:
+                pad_rows = np.zeros((extra,) + arr.shape[1:], arr.dtype)
+                arr = np.concatenate([arr, pad_rows], axis=0)
+            data[k] = jnp.asarray(arr)
+        out_tasks.append(Task(name=t.name, model=t.model, data=data,
+                              test=t.test))
+    B_p = np.concatenate([np.asarray(B, np.int64), np.zeros(extra, np.int64)])
+    avail_p = np.concatenate([np.asarray(avail, bool),
+                              np.zeros((extra, avail.shape[1]), bool)])
+    return out_tasks, B_p, avail_p, mask
+
+
+@dataclasses.dataclass
+class StackedWorlds:
+    """The cfg-independent half of a world fleet: padded worlds stacked to
+    one template shape.  Build once (``stack_worlds``) and share across
+    every method config of a sweep group — the padding and the device
+    upload of all task shards happen once, not once per method."""
+    stacked: World            # every leaf with a leading [n_worlds] axis
+    padded: List[Tuple[List[Task], np.ndarray, np.ndarray, np.ndarray]]
+    Ns: List[int]             # real client counts per world
+    Vs: List[int]             # real processor totals per world
+    i_template: int           # index of the max-V world
+
+
+def stack_worlds(built: Sequence[Tuple[List[Task], np.ndarray, np.ndarray]]
+                 ) -> StackedWorlds:
+    """Pad heterogeneous built worlds to one template shape and stack them.
+
+    The template is the max-V world (its static V bounds the grid); every
+    other world is padded to its (N, V, cap) shapes, with at least one
+    padding client whenever budgets differ so dangling processor rows
+    have a masked client to map to."""
+    built = list(built)
+    if not built:
+        raise ValueError("stack_worlds needs at least one built world")
+    Ns = [int(np.asarray(B).shape[0]) for _, B, _ in built]
+    Vs = [int(np.asarray(B).sum()) for _, B, _ in built]
+    S = len(built[0][0])
+    if any(len(t) != S for t, _, _ in built):
+        raise ValueError("all worlds of a fleet must share n_models")
+    v_max = max(Vs)
+    n_to = max(Ns) + (1 if min(Vs) < v_max else 0)
+    cap_to = {s: max(int(np.asarray(w[0][s].data["x"]).shape[1])
+                     for w in built) for s in range(S)}
+    padded = [pad_world(t, B, a, n_to, cap=cap_to) for t, B, a in built]
+    arrays = [build_world_arrays(t, B, a, m, v_total=v_max)
+              for t, B, a, m in padded]
+    shapes = [jax.tree.map(lambda x: tuple(x.shape), w) for w in arrays]
+    if any(s != shapes[0] for s in shapes[1:]):
+        raise ValueError(
+            "worlds of a fleet must pad to identical shapes (check test-set "
+            f"sizes and sample caps): {shapes}")
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+    return StackedWorlds(stacked=stacked, padded=padded, Ns=Ns, Vs=Vs,
+                         i_template=int(np.argmax(Vs)))
+
+
+def world_fleet(built: Sequence[Tuple[List[Task], np.ndarray, np.ndarray]],
+                cfg: ServerConfig,
+                prepared: Optional[StackedWorlds] = None
+                ) -> Tuple[RoundEngine, World]:
+    """Template engine + stacked World for ``RoundEngine.run_worlds`` —
+    the whole (worlds x seeds) grid then runs as ONE compiled dispatch.
+
+    Pass ``prepared`` (``stack_worlds(built)``) when running several
+    method configs over the same worlds, so the padding/stacking work is
+    shared.  The cohort capacity is the max over every world's own
+    standalone sizing — a world whose standalone capacity is smaller only
+    diverges from its per-world run in the rare rounds where IT would
+    have overflowed and dropped active clients (the grid trains them
+    instead)."""
+    prepared = prepared if prepared is not None else stack_worlds(built)
+    if len(set(prepared.Vs)) > 1 and methods.get_class(
+            cfg.method).static_budget_sizing:
+        raise ValueError(
+            f"{cfg.method} derives static sample sizes from the budget m, "
+            f"which a world-vmapped grid freezes at the template world's — "
+            f"worlds with different total budgets "
+            f"(V={sorted(set(prepared.Vs))}) would silently sample "
+            f"differently than standalone.  Run these worlds as separate "
+            f"settings (vmap_worlds=False) or stack equal-budget worlds "
+            f"only")
+    S = len(prepared.padded[0][0])
+    tmpl_tasks, tmpl_B, tmpl_avail, tmpl_mask = \
+        prepared.padded[prepared.i_template]
+    # cohort capacity covers EVERY world's own standalone sizing, not just
+    # the template's (a world with more clients than the max-V world would
+    # otherwise truncate active cohorts only inside the grid); m is
+    # rounded through f32 exactly as RoundEngine does
+    strat = methods.make(cfg.method, cfg)
+    cohort = max(strat.cohort_size(
+        n, float(np.float32(cfg.active_rate) * np.float32(v)), S)
+        for n, v in zip(prepared.Ns, prepared.Vs))
+    engine = RoundEngine(tmpl_tasks, tmpl_B, tmpl_avail, cfg,
+                         client_mask=tmpl_mask, cohort_size=cohort)
+    return engine, prepared.stacked

@@ -31,7 +31,8 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 import numpy as np
 
 from repro.core.engine import RoundEngine, ServerConfig
-from repro.fl.experiments import build_world, run_seed_fleet
+from repro.fl.experiments import (build_world, run_seed_fleet, stack_worlds,
+                                  world_fleet)
 
 # two-sided 95% Student-t quantiles by degrees of freedom: seed fleets are
 # SMALL (3-5 replicates), where the normal z=1.96 would understate the CI
@@ -54,18 +55,32 @@ class SweepSetting:
 
     ``data_seed`` seeds the world construction (partitions, budgets,
     availability); model/training randomness comes from the sweep's seed
-    axis instead, so replicates share the world and vmap into one fleet."""
+    axis instead, so replicates share the world and vmap into one fleet.
+
+    The WORLD AXES — ``n_clients``, ``avail_rate`` (fraction of clients
+    able to train all S models), ``label_frac`` (heterogeneity: labels per
+    client) — vary freely across the settings of a ``vmap_worlds`` spec:
+    settings sharing a ``world_signature`` pad to one template shape and
+    run as a single vmapped grid (None keeps each builder's default)."""
     name: str
     n_models: int = 3
     n_clients: int = 120
     small: bool = False
     linear: bool = False
     data_seed: int = 0
+    avail_rate: Optional[float] = None
+    label_frac: Optional[float] = None
 
     def build(self):
         return build_world(self.n_models, self.n_clients,
                            data_seed=self.data_seed, small=self.small,
-                           linear=self.linear)
+                           linear=self.linear, avail_rate=self.avail_rate,
+                           label_frac=self.label_frac)
+
+    def world_signature(self) -> Tuple:
+        """Settings with equal signatures stack into one compiled grid
+        (same model family/architecture; shapes are padded to match)."""
+        return (self.n_models, self.small, self.linear)
 
 
 @dataclasses.dataclass
@@ -91,13 +106,28 @@ class MethodRun:
 class SweepSpec:
     """The declarative grid: (runs x settings) cells, each a vmapped fleet
     over ``seeds``.  ``eval_every`` > 0 records stacked accuracy traces
-    every that many rounds (chunked fleet cadence)."""
+    every that many rounds (chunked fleet cadence).
+
+    ``vmap_worlds=True`` turns the SETTINGS axis into a vmapped dimension
+    too: settings sharing a ``world_signature`` are padded to one template
+    shape (``repro.fl.experiments.world_fleet``) and every method covers
+    ALL of them with one ``RoundEngine.run_worlds`` dispatch — one compile
+    per (signature, method) instead of one per (setting, method).  The
+    padding is mask-aware and bit-exact for equal-cap worlds
+    (tests/test_world_padding.py), so results match the per-setting path
+    — except methods with ``static_budget_sizing`` (power_of_choice),
+    which ``world_fleet`` refuses to stack over heterogeneous budgets,
+    and the rare rounds where a smaller world's own cohort capacity would
+    have overflowed (the grid sizes capacity over the whole fleet and
+    trains actives the standalone run would drop — see ``world_fleet``).
+    Not combinable with ``eval_every`` cadences (yet)."""
     settings: Sequence[SweepSetting]
     runs: Sequence[Union[str, MethodRun]]
     seeds: Sequence[int] = (0,)
     rounds: int = 20
     eval_every: int = 0
     server: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    vmap_worlds: bool = False
 
     def method_runs(self) -> List[MethodRun]:
         return [r if isinstance(r, MethodRun) else MethodRun(method=r)
@@ -200,7 +230,8 @@ class SweepResult:
 def run_sweep(spec: SweepSpec) -> SweepResult:
     """Execute the grid: one world build per setting, one engine per
     compile signature, one vmapped fleet dispatch per (setting, method
-    config) covering every seed."""
+    config) covering every seed — or, with ``vmap_worlds``, one dispatch
+    per (world signature, method config) covering every setting AND seed."""
     result = SweepResult(spec)
     labels = [r.label for r in spec.method_runs()]
     if len(set(labels)) != len(labels):
@@ -214,27 +245,72 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
         raise ValueError(f"duplicate setting names {dup}: give every "
                          f"SweepSetting a distinct name")
     seeds = tuple(int(s) for s in spec.seeds)
+    if spec.vmap_worlds:
+        return _run_sweep_worlds(spec, result, seeds)
     for setting in spec.settings:
         tasks, B, avail = setting.build()
-        engines: Dict[Any, RoundEngine] = {}
+        engines: Dict[Any, Any] = {}
         for run in spec.method_runs():
-            server_kw = {**spec.server, **run.server}
-            sig = (run.method, tuple(sorted(server_kw.items())),
-                   id(run.probabilities) if run.probabilities else None)
-            eng = engines.get(sig)
-            if eng is None:
-                cfg = ServerConfig(method=run.method, seed=seeds[0],
-                                   **server_kw)
-                eng = RoundEngine(tasks, B, avail, cfg)
-                if run.probabilities is not None:
-                    # read at trace time: must be set before the first
-                    # compile of this engine
-                    eng.probabilities_hook = run.probabilities(eng)
-                engines[sig] = eng
+            eng = _cached_engine(
+                engines, run, spec, seeds,
+                lambda cfg: RoundEngine(tasks, B, avail, cfg))
             out = run_seed_fleet(eng, seeds, spec.rounds,
                                  eval_every=spec.eval_every)
             result.add(SweepCell(
                 setting=setting.name, label=run.label, method=run.method,
                 seeds=seeds, final_acc=np.asarray(out["final_acc"]),
                 metrics=out["metrics"], acc_trace=out.get("acc")))
+    return result
+
+
+def _cached_engine(engines: Dict[Any, Any], run: MethodRun, spec: SweepSpec,
+                   seeds: Tuple[int, ...], factory: Callable):
+    """Engine-per-compile-signature cache shared by BOTH execution paths:
+    cells agreeing on (method, server overrides, sampling hook) share one
+    engine and therefore one compiled executable.  ``factory(cfg)`` builds
+    the cached value — a ``RoundEngine``, or ``world_fleet``'s (engine,
+    stacked worlds) pair; the sampling hook is attached at build, before
+    the first compile (it is read at trace time)."""
+    server_kw = {**spec.server, **run.server}
+    sig = (run.method, tuple(sorted(server_kw.items())),
+           id(run.probabilities) if run.probabilities else None)
+    value = engines.get(sig)
+    if value is None:
+        cfg = ServerConfig(method=run.method, seed=seeds[0], **server_kw)
+        value = factory(cfg)
+        eng = value[0] if isinstance(value, tuple) else value
+        if run.probabilities is not None:
+            eng.probabilities_hook = run.probabilities(eng)
+        engines[sig] = value
+    return value
+
+
+def _run_sweep_worlds(spec: SweepSpec, result: SweepResult,
+                      seeds: Tuple[int, ...]) -> SweepResult:
+    """The world-vmapped execution: settings grouped by world signature,
+    padded+stacked once per group, every method one ``run_worlds`` grid."""
+    if spec.eval_every:
+        raise ValueError("vmap_worlds sweeps do not support an eval_every "
+                         "cadence yet (set eval_every=0)")
+    groups: Dict[Tuple, List[SweepSetting]] = {}
+    for setting in spec.settings:
+        groups.setdefault(setting.world_signature(), []).append(setting)
+    for group in groups.values():
+        built = [s.build() for s in group]
+        # padding + stacking + device upload of the task shards is
+        # cfg-independent: do it once per group, share across methods
+        prepared = stack_worlds(built)
+        engines: Dict[Any, Any] = {}
+        for run in spec.method_runs():
+            eng, stacked = _cached_engine(
+                engines, run, spec, seeds,
+                lambda cfg: world_fleet(built, cfg, prepared))
+            _, mets, accs = eng.run_worlds(stacked, seeds, spec.rounds)
+            accs = np.asarray(accs)                   # [W, n_seeds, S]
+            mets = {k: np.asarray(v) for k, v in mets.items()}
+            for i, setting in enumerate(group):
+                result.add(SweepCell(
+                    setting=setting.name, label=run.label,
+                    method=run.method, seeds=seeds, final_acc=accs[i],
+                    metrics={k: v[i] for k, v in mets.items()}))
     return result

@@ -113,7 +113,8 @@ def _init_state(strategy, params: List, key, N: int, S: int
     mstate = tuple(strategy.init_state(p, N) for p in params)
     return ExperimentState(params=tuple(params), method_state=mstate,
                            key=key, round=jnp.asarray(0, jnp.int32),
-                           losses_ns=jnp.ones((N, S), jnp.float32))
+                           losses_ns=jnp.ones((N, S), jnp.float32),
+                           client_mask=jnp.ones((N,), jnp.float32))
 
 
 def train(args) -> Dict:
@@ -254,7 +255,7 @@ def train(args) -> Dict:
             state = ExperimentState(
                 params=tuple(params), method_state=tuple(mstate),
                 key=new_key, round=jnp.asarray(r + 1, jnp.int32),
-                losses_ns=losses_ns)
+                losses_ns=losses_ns, client_mask=state.client_mask)
             round_mets["time_s"] = round(time.time() - t0, 2)
             history.append(round_mets)
             if (r + 1) % args.log_every == 0:

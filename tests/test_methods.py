@@ -97,8 +97,11 @@ def test_every_method_two_rounds_finite(linear_world, method):
 @pytest.mark.slow
 @pytest.mark.parametrize("method", ["lvr", "stalevre"])
 def test_golden_metrics_reproduced(method):
-    """The strategy engine must reproduce the pre-refactor if/elif server's
-    loss/H1/Zp/Zl trajectories (captured at the refactor boundary)."""
+    """Drift alarm: the engine must reproduce the pinned loss/H1/Zp/Zl
+    trajectories.  Originally captured at the strategy-refactor boundary
+    (the if/elif server); re-baselined once at the mask-aware RNG redesign
+    (index-keyed draws — padding invariance changed every stream, see
+    tests/test_world_padding.py for the property that forced it)."""
     golden = json.load(open(GOLDEN))[method]
     tasks, B, avail = build_setting(n_models=2, n_clients=16, seed=0,
                                     small=True)

@@ -140,3 +140,102 @@ def test_coefficients_unbiased(method, seed, N, S, active_rate):
             # ALL of the task's d mass, so the aggregate weight is exactly
             # 1 in expectation.  (roundrobin zeroes the off-round tasks.)
             np.testing.assert_allclose(support_mass, 1.0, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mask-aware padded worlds: zero mass on padding, invariants on the valid
+# submatrix (the contract tests/test_world_padding.py pins end-to-end)
+# ---------------------------------------------------------------------------
+
+
+def _padded_world(seed: int, N: int, S: int, active_rate: float,
+                  n_pad: int, v_pad: int, eta=None):
+    """A padded copy of ``_world``: ``n_pad`` trailing padding clients
+    (zero budget, all-False availability, d 0) plus ``v_pad`` dangling
+    processor rows (ctx.V > sum(B)), exactly the stacked-world layout of
+    ``repro.core.engine.World``."""
+    ctx, losses, norms, d_v, B_v, avail_v = _world(seed, N, S, active_rate)
+    d = np.concatenate([np.asarray(ctx.d), np.zeros((n_pad, S))])
+    B = np.concatenate([np.asarray(ctx.B), np.zeros(n_pad)]).astype(
+        np.float32)
+    avail = np.concatenate([np.asarray(ctx.avail),
+                            np.zeros((n_pad, S), bool)])
+    mask = np.concatenate([np.ones(N, np.float32),
+                           np.zeros(n_pad, np.float32)])
+    V = int(np.asarray(ctx.B).sum())
+    ctx_p = SamplerContext(
+        d=jnp.asarray(d), B=B, avail=jnp.asarray(avail), m=ctx.m,
+        round=ctx.round, V=V + v_pad, m_host=ctx.m,
+        mask=jnp.asarray(mask))
+    losses_p = jnp.concatenate(
+        [losses, jnp.ones((n_pad, S), jnp.float32)])
+    norms_p = jnp.concatenate([norms, jnp.ones((n_pad, S), jnp.float32)])
+    pad_rows = np.zeros((v_pad, S), np.float32)
+    d_v_p = np.concatenate([d_v, pad_rows])
+    B_v_p = np.concatenate([B_v, np.zeros(v_pad, np.float32)])
+    avail_v_p = np.concatenate([avail_v, pad_rows.astype(bool)])
+    return ctx_p, losses_p, norms_p, d_v_p, B_v_p, avail_v_p, V
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.15, 0.6))
+def test_zero_mass_on_padding(method, seed, N, S, active_rate):
+    """For every method: zero probability mass, zero sampled cohort slots,
+    and zero aggregation-coefficient mass on masked padding clients (and
+    on the dangling processor rows of a budget-padded world)."""
+    ctx, losses, norms, d_v, B_v, _, V = _padded_world(
+        seed, N, S, active_rate, n_pad=3, v_pad=2)
+    strat = methods.make(method, ServerConfig(method=method))
+    p = np.asarray(strat.probabilities(ctx, losses, norms))
+    assert p.shape == (V + 2, S)
+    assert np.all(np.isfinite(p))
+    assert np.all(p[V:] == 0.0), "probability mass on dangling rows"
+
+    act = np.asarray(strat.sample(jax.random.PRNGKey(seed),
+                                  jnp.asarray(p), ctx, losses))
+    assert np.all(act[V:] == 0.0), "padding rows drew participation"
+
+    for s in range(S):
+        c = np.asarray(strat.coefficients(
+            jnp.asarray(d_v[:, s]), jnp.asarray(B_v),
+            jnp.asarray(p[:, s]), jnp.asarray(act[:, s])))
+        mass = act[:, s] * c
+        assert np.all(np.isfinite(mass)), (method, s)
+        assert np.all(mass[V:] == 0.0), "aggregation mass on padding"
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.15, 0.6))
+def test_padded_simplex_on_valid_submatrix(method, seed, N, S, active_rate):
+    """The simplex/budget invariants restricted to the valid-client rows
+    survive padding unchanged."""
+    ctx, losses, norms, _, _, avail_v, V = _padded_world(
+        seed, N, S, active_rate, n_pad=2, v_pad=3)
+    strat = methods.make(method, ServerConfig(method=method))
+    p = np.asarray(strat.probabilities(ctx, losses, norms))
+    valid = p[:V]
+    assert np.all(valid >= -TOL) and np.all(valid <= 1 + TOL)
+    assert np.all(valid[~avail_v[:V]] == 0.0)
+    if method not in ("flammable", "full"):
+        assert np.all(valid.sum(axis=1) <= 1 + TOL)
+    if method != "full":
+        assert valid.sum() <= ctx.m + 1e-3
+
+
+@pytest.mark.parametrize(
+    "method", [m for m in methods.available_methods()
+               if isinstance(methods.make(m), LossSamplingMixin)])
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.2, 0.9))
+def test_padded_eta_cap_on_valid_submatrix(method, seed, N, S, eta):
+    """Footnote-3 eta_cap holds row-wise on the valid submatrix of a
+    padded world (padding rows are zero, trivially under any cap)."""
+    ctx, losses, norms, _, _, _, V = _padded_world(
+        seed, N, S, active_rate=0.5, n_pad=2, v_pad=2)
+    strat = methods.make(method, ServerConfig(method=method, eta_cap=eta))
+    p = np.asarray(strat.probabilities(ctx, losses, norms))
+    assert np.all(p[:V].sum(axis=1) <= eta + 1e-4)
+    assert np.all(p[V:] == 0.0)
+    assert p.sum() <= ctx.m + 1e-3

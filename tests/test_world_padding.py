@@ -1,0 +1,377 @@
+"""The mask-aware padded-world equivalence battery.
+
+The contract under test (``repro.core.engine.World``): a world padded from
+N to N_max clients — padding clients with zero budget, zero availability,
+empty shards — must train BIT-IDENTICALLY to the unpadded world, for every
+registered method.  This is what makes heterogeneous worlds a safe vmap
+axis: ``run_worlds`` batches (worlds x seeds) grids into one dispatch
+without changing any result.
+
+The guarantees stack up from three design pieces, each pinned here:
+  * index-keyed randomness (``sampling.index_keys``/``index_uniform``):
+    client/processor i's draws depend only on (key, i), never on N or V;
+  * host-built world arrays (``build_world_arrays``): ``d`` and the
+    processor map are computed over the valid prefix with numpy, never
+    re-reduced in-trace over a padded axis;
+  * zero-budget padding: V is unchanged, so every [V]-shaped computation
+    (water-filling, participation, coefficients) is untouched.
+
+Plus: the ``run_worlds`` grid must reproduce per-world engines (exactly on
+accuracies/params; metrics to fp-associativity, since stacking worlds of
+different V appends masked dangling rows to the [V] metric sums), a K-world
+grid must compile the round transition exactly ONCE (the compile-count
+guard), padded states must checkpoint/resume identically, and the
+world-axis sweep means are pinned against tests/golden_world_sweep.json.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.core import methods
+from repro.core.engine import RoundEngine, ServerConfig, World
+from repro.fl.experiments import (build_linear_setting, pad_world,
+                                  world_fleet)
+from repro.fl.sweep import SweepSetting, SweepSpec, run_sweep
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_world_sweep.json")
+
+
+def _cfg(method, **kw):
+    base = dict(method=method, local_epochs=2, seed=1, active_rate=0.3,
+                batch_size=8)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _tree_equal(a, b, err=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=err)
+
+
+@pytest.fixture(scope="module")
+def micro_world():
+    return build_linear_setting(n_models=2, n_clients=8, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# padded == unpadded, bit for bit, for every registered method
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+def test_padded_world_bit_identical(micro_world, method):
+    tasks, B, avail = micro_world
+    eng = RoundEngine(tasks, B, avail, _cfg(method))
+    state, mets = eng.rollout(eng.init_state(), 3)
+
+    tasks_p, B_p, avail_p, mask = pad_world(tasks, B, avail, 12)
+    eng_p = RoundEngine(tasks_p, B_p, avail_p, _cfg(method),
+                        client_mask=mask)
+    assert eng_p.V == eng.V                 # zero-budget padding: V fixed
+    assert eng_p.cohort_size == eng.cohort_size
+    state_p, mets_p = eng_p.rollout(eng_p.init_state(), 3)
+
+    for k in ("H1", "Zp", "Zl", "loss"):
+        np.testing.assert_array_equal(np.asarray(mets[k]),
+                                      np.asarray(mets_p[k]), err_msg=k)
+    if "beta" in mets:
+        # real clients identical; padding columns must be exactly 0
+        np.testing.assert_array_equal(np.asarray(mets["beta"]),
+                                      np.asarray(mets_p["beta"])[..., :8])
+        assert np.all(np.asarray(mets_p["beta"])[..., 8:] == 0.0)
+    _tree_equal(state.params, state_p.params, err=f"{method} params")
+    # per-client method state: real rows identical (leading-N leaves are
+    # sliced; param-shaped leaves like SCAFFOLD's global c compare whole)
+    for st, st_p in zip(state.method_state, state_p.method_state):
+        for x, y in zip(jax.tree.leaves(st), jax.tree.leaves(st_p)):
+            x, y = np.asarray(x), np.asarray(y)
+            if x.shape != y.shape:
+                assert y.shape[0] == 12 and x.shape[0] == 8, (method,
+                                                              x.shape)
+                y = y[:8]
+            np.testing.assert_array_equal(x, y, err_msg=method)
+
+
+def test_padding_never_active(micro_world):
+    """No probability, participation, or aggregation mass on padding: the
+    padded run's stale stores/beta monitors stay exactly zero there."""
+    tasks, B, avail = micro_world
+    tasks_p, B_p, avail_p, mask = pad_world(tasks, B, avail, 12)
+    eng = RoundEngine(tasks_p, B_p, avail_p, _cfg("stalevre"),
+                      client_mask=mask)
+    state, mets = eng.rollout(eng.init_state(), 4)
+    for st in state.method_state:
+        assert np.all(np.asarray(st["h_valid"])[8:] == 0.0)
+    assert np.all(np.asarray(mets["beta"])[..., 8:] == 0.0)
+    np.testing.assert_array_equal(np.asarray(state.client_mask), mask)
+
+
+def test_pad_world_rejects_shrinking(micro_world):
+    tasks, B, avail = micro_world
+    with pytest.raises(ValueError, match="cannot pad"):
+        pad_world(tasks, B, avail, 4)
+
+
+def test_build_world_arrays_rejects_broken_mask(micro_world):
+    """The mask contract is validated up front: non-trailing masks and
+    budgeted padding clients are construction errors, not silent NaNs."""
+    tasks, B, avail = micro_world
+    bad_mask = np.ones(8, np.float32)
+    bad_mask[3] = 0.0                      # hole, not a trailing block
+    with pytest.raises(ValueError, match="trailing"):
+        RoundEngine(tasks, B, avail, _cfg("lvr"), client_mask=bad_mask)
+    tasks_p, B_p, avail_p, mask = pad_world(tasks, B, avail, 10)
+    B_bad = B_p.copy()
+    B_bad[-1] = 2                          # padding client with budget
+    with pytest.raises(ValueError, match="zero budget"):
+        RoundEngine(tasks_p, B_bad, avail_p, _cfg("lvr"), client_mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# run_worlds: the vmapped (worlds x seeds) grid == per-world engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hetero_worlds():
+    """Three worlds varying BOTH world axes: client count + availability."""
+    return [build_linear_setting(n_models=2, n_clients=n, seed=i,
+                                 avail_rate=r)
+            for i, (n, r) in enumerate([(8, None), (10, 0.7), (12, 0.5)])]
+
+
+@pytest.mark.parametrize("method", ["lvr", "random", "full", "stalevre"])
+def test_run_worlds_matches_per_world_engines(hetero_worlds, method):
+    """One vmapped grid dispatch must reproduce each world's own unpadded
+    engine: accuracies and final params exactly; the [V]-summed monitors to
+    fp associativity (stacking pads V with masked dangling rows, which
+    regroups the real terms' partial sums by one ulp)."""
+    seeds = [0, 1, 2, 3]
+    eng, stacked = world_fleet(hetero_worlds, _cfg(method))
+    states, mets, accs = eng.run_worlds(stacked, seeds, 4)
+    assert np.asarray(accs).shape == (3, 4, eng.S)
+    for i, (tasks, B, avail) in enumerate(hetero_worlds):
+        e = RoundEngine(tasks, B, avail, _cfg(method))
+        n_i = len(B)
+        _, m1, a1 = e.run_seeds(seeds, 4)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(accs)[i],
+                                      err_msg=f"{method} world {i}")
+        for k in m1:
+            got = np.asarray(mets[k])[i]
+            if k == "beta":                  # per-client monitor: [..., N]
+                assert np.all(got[..., n_i:] == 0.0)
+                got = got[..., :n_i]
+            np.testing.assert_allclose(
+                np.asarray(m1[k]), got, rtol=1e-5,
+                atol=1e-5, err_msg=f"{method} world {i} {k}")
+
+
+def test_world_fleet_rejects_static_budget_sizing(hetero_worlds):
+    """power_of_choice derives a static top-k size from the budget m; a
+    heterogeneous-budget grid would freeze it at the template world's and
+    silently sample differently than standalone — refused up front."""
+    with pytest.raises(ValueError, match="static sample sizes"):
+        world_fleet(hetero_worlds, _cfg("power_of_choice"))
+
+
+def test_run_worlds_power_of_choice_equal_budgets():
+    """With EQUAL total budgets (same B draw, availability varying) the
+    static k matches every world's own, so power_of_choice is allowed and
+    reproduces its standalone engines exactly."""
+    worlds = [build_linear_setting(n_models=2, n_clients=12, seed=3,
+                                   avail_rate=r) for r in (0.6, 1.0)]
+    seeds = [0, 1]
+    eng, stacked = world_fleet(worlds, _cfg("power_of_choice"))
+    _, _, accs = eng.run_worlds(stacked, seeds, 4)
+    for i, (tasks, B, avail) in enumerate(worlds):
+        e = RoundEngine(tasks, B, avail, _cfg("power_of_choice"))
+        _, _, a1 = e.run_seeds(seeds, 4)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(accs)[i],
+                                      err_msg=f"world {i}")
+
+
+def test_world_fleet_cohort_covers_every_world():
+    """The grid's cohort capacity must cover EVERY world's own standalone
+    sizing, not just the max-V template's: here the template (argmax V,
+    the 8-client world) would size the cohort at 8 while the 16-client
+    equal-budget world standalone uses 16 — the grid must take the max,
+    or it silently truncates the bigger world's active cohorts."""
+    tasks_a, B_a, avail_a = build_linear_setting(n_models=2, n_clients=8,
+                                                 seed=0)
+    tasks_b, B_b, avail_b = build_linear_setting(n_models=2, n_clients=16,
+                                                 seed=1)
+    worlds = [(tasks_a, np.full(8, 4, np.int64), avail_a),
+              (tasks_b, np.full(16, 2, np.int64), avail_b)]   # equal V=32
+    eng, stacked = world_fleet(worlds, _cfg("lvr"))
+    standalone = [RoundEngine(t, B, a, _cfg("lvr")) for t, B, a in worlds]
+    assert eng.cohort_size == max(e.cohort_size for e in standalone)
+    seeds = [0, 1]
+    _, _, accs = eng.run_worlds(stacked, seeds, 3)
+    for i, e in enumerate(standalone):
+        _, _, a1 = e.run_seeds(seeds, 3)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(accs)[i],
+                                      err_msg=f"world {i}")
+
+
+def test_run_worlds_equal_worlds_equal_results(micro_world):
+    """Sanity: stacking the same world twice gives identical rows."""
+    eng, stacked = world_fleet([micro_world, micro_world], _cfg("lvr"))
+    _, mets, accs = eng.run_worlds(stacked, [0, 1], 3)
+    np.testing.assert_array_equal(np.asarray(accs)[0], np.asarray(accs)[1])
+    for k in mets:
+        np.testing.assert_array_equal(np.asarray(mets[k])[0],
+                                      np.asarray(mets[k])[1], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# compile-count guard: a K-world grid traces the round exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_world_grid_single_trace(hetero_worlds, monkeypatch):
+    """A K-world x seeds grid with a shared signature must trigger exactly
+    as many ``round_step_fn`` traces as a 1-world grid — i.e. ONE compiled
+    round transition for the whole grid.  A regression to per-world
+    compiles would multiply the trace count by K."""
+    counts = {"n": 0}
+    orig = RoundEngine.round_step_fn
+
+    def counting(self, state, world=None):
+        counts["n"] += 1
+        return orig(self, state, world)
+
+    monkeypatch.setattr(RoundEngine, "round_step_fn", counting)
+
+    def traces(worlds):
+        counts["n"] = 0
+        eng, stacked = world_fleet(worlds, _cfg("lvr"))
+        eng.run_worlds(stacked, [0, 1, 2, 3], 3)
+        return counts["n"]
+
+    single = traces(hetero_worlds[:1])
+    grid = traces(hetero_worlds)
+    assert grid == single, (grid, single)
+    # and re-dispatching on the cached executable must not retrace at all
+    eng, stacked = world_fleet(hetero_worlds, _cfg("lvr"))
+    eng.run_worlds(stacked, [0, 1, 2, 3], 3)
+    counts["n"] = 0
+    eng.run_worlds(stacked, [0, 1, 2, 3], 3)
+    assert counts["n"] == 0
+
+
+def test_sweep_vmap_worlds_single_trace_per_method(hetero_worlds,
+                                                   monkeypatch):
+    """The sweep harness inherits the guard: a vmap_worlds spec over K
+    settings compiles one round transition per method config."""
+    counts = {"n": 0}
+    orig = RoundEngine.round_step_fn
+
+    def counting(self, state, world=None):
+        counts["n"] += 1
+        return orig(self, state, world)
+
+    monkeypatch.setattr(RoundEngine, "round_step_fn", counting)
+    settings = [SweepSetting(name=f"w{r}", linear=True, n_models=2,
+                             n_clients=16, data_seed=0, avail_rate=r)
+                for r in (0.5, 0.75, 1.0)]
+    spec = dict(runs=["lvr"], seeds=(0, 1), rounds=2,
+                server=dict(local_epochs=2, active_rate=0.3, batch_size=8),
+                vmap_worlds=True)
+    counts["n"] = 0
+    run_sweep(SweepSpec(settings=settings[:1], **spec))
+    single = counts["n"]
+    counts["n"] = 0
+    run_sweep(SweepSpec(settings=settings, **spec))
+    assert counts["n"] == single, (counts["n"], single)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing masked states
+# ---------------------------------------------------------------------------
+
+
+def test_masked_state_checkpoint_resume(micro_world, tmp_path):
+    """save_state/restore_state preserve ``client_mask`` and a padded run
+    resumes with identical continued metrics (2 + 2 == 4 rounds)."""
+    tasks, B, avail = micro_world
+    tasks_p, B_p, avail_p, mask = pad_world(tasks, B, avail, 12)
+    eng = RoundEngine(tasks_p, B_p, avail_p, _cfg("stalevre"),
+                      client_mask=mask)
+    straight, mets4 = eng.rollout(eng.init_state(), 4)
+
+    half, _ = eng.rollout(eng.init_state(), 2)
+    checkpoint.save_state(str(tmp_path), half, step=2)
+    eng2 = RoundEngine(tasks_p, B_p, avail_p, _cfg("stalevre"),
+                       client_mask=mask)
+    restored, step = checkpoint.restore_state(str(tmp_path),
+                                              eng2.init_state())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored.client_mask), mask)
+    resumed, mets_tail = eng2.rollout(restored, 2)
+    _tree_equal(straight, resumed, err="padded resume")
+    for k in mets_tail:
+        np.testing.assert_allclose(np.asarray(mets_tail[k]),
+                                   np.asarray(mets4[k])[2:],
+                                   rtol=1e-6, atol=1e-7, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# golden world-axis sweep: lvr/random/full across availability rates
+# ---------------------------------------------------------------------------
+
+WORLD_SETTINGS = [SweepSetting(name=f"avail{int(r * 100)}", linear=True,
+                               n_models=2, n_clients=16, data_seed=0,
+                               avail_rate=r)
+                  for r in (0.6, 0.8, 1.0)]
+WORLD_SERVER = dict(local_epochs=2, active_rate=0.3, batch_size=8)
+
+
+@pytest.fixture(scope="module")
+def world_sweep():
+    return run_sweep(SweepSpec(
+        settings=WORLD_SETTINGS, runs=["random", "lvr", "full"],
+        seeds=(0, 1, 2), rounds=12, server=WORLD_SERVER, vmap_worlds=True))
+
+
+def test_world_sweep_golden_means(world_sweep):
+    """Drift alarm for the world-axis sweep: per-(world, method) fleet
+    means against checked-in goldens."""
+    golden = json.load(open(GOLDEN))
+    tol = golden["tolerance"]
+    for setting, row in golden["acc"].items():
+        for m, want in row.items():
+            got = world_sweep.cell(m, setting).stats()["acc"]
+            assert abs(got - want) <= tol, (setting, m, got, want)
+
+
+def test_world_sweep_ordering_per_cell(world_sweep):
+    """The paper's headline ordering must hold in EVERY world cell (up to
+    the fleets' combined CI half-widths): loss-based water-filling beats
+    blind sampling at every availability rate."""
+    for setting in WORLD_SETTINGS:
+        stats = {m: world_sweep.cell(m, setting.name).stats()
+                 for m in ("random", "lvr", "full")}
+        slack = stats["lvr"]["ci95"] + stats["random"]["ci95"]
+        assert stats["lvr"]["acc"] >= stats["random"]["acc"] - slack, (
+            setting.name, stats)
+        for st in stats.values():
+            assert np.isfinite(st["acc"]) and st["n_seeds"] == 3
+
+
+def test_world_sweep_matches_per_setting_sweep():
+    """vmap_worlds=True must agree with the per-setting execution of the
+    SAME spec — accuracies exactly (bit-for-bit padding + grid contract)."""
+    kw = dict(settings=WORLD_SETTINGS[:2], runs=["lvr", "random"],
+              seeds=(0, 1), rounds=6, server=WORLD_SERVER)
+    grid = run_sweep(SweepSpec(vmap_worlds=True, **kw))
+    loop = run_sweep(SweepSpec(vmap_worlds=False, **kw))
+    for (key, cell) in grid.cells.items():
+        np.testing.assert_array_equal(cell.final_acc,
+                                      loop.cells[key].final_acc,
+                                      err_msg=str(key))
