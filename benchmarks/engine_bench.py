@@ -22,6 +22,12 @@ micro-setting (64 clients, 3 tasks):
     (client counts x availability rates) cost before padding made the
     world axis vmappable.
 
+  * ``bench_task_fusion``   — the vmapped task axis (signature-grouped
+    stacks, ``ServerConfig.fuse_tasks``) vs the per-task Python loop on
+    the same grouped layout, across S in {4, 8, 16} same-architecture
+    tasks: steady rounds/sec plus the cold build+trace+compile delta
+    (the loop's trace grows linearly in S).
+
 The paper's CNN world is local-compute-bound on CPU and shows ~1x on both;
 per-round orchestration is exactly what dominates once local training is
 fast or offloaded (the production regime: accelerators own the local step,
@@ -30,7 +36,10 @@ the host owns the round loop).
 Same output contract as ``kernels_bench``: each bench returns
 (us_per_round, derived) with the headline rounds/sec speedup in
 ``derived``.  Running the module directly (``python
-benchmarks/engine_bench.py [--smoke]``) writes ``BENCH_engine.json``.
+benchmarks/engine_bench.py``) writes ``BENCH_engine.json``; ``--smoke``
+(CI) writes ``BENCH_engine.smoke.json`` instead, so smoke runs can never
+clobber the checked-in full-scale numbers (``benchmarks/run.py`` fails
+loudly on a smoke-tagged full-scale file).
 """
 from __future__ import annotations
 
@@ -94,8 +103,9 @@ def bench_scan_rollout(method: str = "stalevre", rounds: int = 30,
     eager_rps = rounds / (time.perf_counter() - t0)
 
     eng = RoundEngine(tasks, B, avail, _cfg(method))
-    state = eng.init_state()
-    jax.block_until_ready(eng.rollout(state, rounds))  # compile / warm up
+    # rollout DONATES its input state: rebind through the warm-up too
+    state, _ = eng.rollout(eng.init_state(), rounds)   # compile / warm up
+    jax.block_until_ready(state)
     t0 = time.perf_counter()
     for _ in range(reps):
         state, mets = eng.rollout(state, rounds)
@@ -220,6 +230,66 @@ def bench_world_vmap(method: str = "lvr", n_worlds: int = 3,
     return us, derived
 
 
+def bench_task_fusion(method: str = "lvr", s_list=(4, 8, 16),
+                      n_clients: int = 32, rounds: int = 20,
+                      reps: int = 3, s_headline: int = 8
+                      ) -> Tuple[float, str]:
+    """The vmapped task axis (``ServerConfig.fuse_tasks``, default) vs the
+    per-task Python loop on the SAME grouped state layout, across S
+    same-architecture linear tasks.
+
+    Two costs matter and both are reported per S:
+
+      * steady-state rounds/sec of the scanned rollout (the loop path
+        serializes S per-task bodies inside every dispatch; the fused
+        path batches them as one vmap),
+      * COLD time-to-first-round (engine build + trace + XLA compile +
+        first rollout) — the loop path's trace/compile grows linearly in
+        S, the fused path's stays ~flat.
+
+    The headline row (``speedup``, ``compile_s_fused``, ``compile_s_loop``,
+    ``S``) is taken at ``s_headline``; per-S details ride along as
+    ``rpsN``/``loop_rpsN``/``coldN_*``.  Both paths produce bit-identical
+    results (tests/test_task_fusion.py), so this is a pure perf A/B."""
+    per_s: Dict[int, Dict[str, float]] = {}
+    for S in s_list:
+        tasks, B, avail = build_linear_setting(n_models=S,
+                                               n_clients=n_clients, seed=0)
+        row: Dict[str, float] = {}
+        for fused in (True, False):
+            tag = "fused" if fused else "loop"
+            t0 = time.perf_counter()
+            cfg = _cfg(method)
+            cfg.fuse_tasks = fused
+            eng = RoundEngine(tasks, B, avail, cfg)
+            state, _ = eng.rollout(eng.init_state(), rounds)
+            jax.block_until_ready(state)
+            row[f"cold_{tag}"] = time.perf_counter() - t0
+            # best-of-reps: both paths run the identical math, so the
+            # fastest rep is the least contention-contaminated sample —
+            # a mean would fold scheduler noise into the A/B ratio
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                state, mets = eng.rollout(state, rounds)
+                jax.block_until_ready(mets)
+                best = min(best, time.perf_counter() - t0)
+            row[f"rps_{tag}"] = rounds / best
+        per_s[S] = row
+    head = per_s[s_headline]
+    speedup = head["rps_fused"] / head["rps_loop"]
+    us = 1e6 / head["rps_fused"]
+    derived = (f"speedup={speedup:.2f}x;"
+               f"compile_s_fused={head['cold_fused']:.2f};"
+               f"compile_s_loop={head['cold_loop']:.2f};S={s_headline}")
+    for S, row in per_s.items():
+        derived += (f";rps{S}={row['rps_fused']:.2f}"
+                    f";loop_rps{S}={row['rps_loop']:.2f}"
+                    f";cold{S}_fused={row['cold_fused']:.2f}"
+                    f";cold{S}_loop={row['cold_loop']:.2f}")
+    return us, derived
+
+
 def _parse(derived: str) -> Dict[str, float]:
     out = {}
     for part in derived.split(";"):
@@ -228,14 +298,22 @@ def _parse(derived: str) -> Dict[str, float]:
     return out
 
 
+SMOKE_OUT = "BENCH_engine.smoke.json"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="few reps/rounds (CI): exercises both paths, "
-                         "headline numbers still recorded")
+                         "headline numbers still recorded — written to "
+                         f"{SMOKE_OUT}, NEVER the full-scale file")
     ap.add_argument("--method", default="stalevre")
-    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_engine.json, or "
+                         f"{SMOKE_OUT} under --smoke so CI smoke runs "
+                         "cannot clobber full-scale numbers)")
     args = ap.parse_args()
+    out = args.out or (SMOKE_OUT if args.smoke else "BENCH_engine.json")
     reps = 3 if args.smoke else 10
     rounds = 10 if args.smoke else 30
 
@@ -247,6 +325,9 @@ def main():
     us_g, d_g = bench_world_vmap(args.method, n_worlds=3,
                                  n_seeds=4 if args.smoke else 8,
                                  rounds=rounds, reps=2 if args.smoke else 3)
+    us_t, d_t = bench_task_fusion(
+        "lvr", s_list=(4, 8) if args.smoke else (4, 8, 16),
+        rounds=rounds, reps=2 if args.smoke else 3)
     report = {
         "method": args.method,
         "smoke": bool(args.smoke),
@@ -255,14 +336,16 @@ def main():
         "sweep_fleet_vs_loop": {"us_per_seed_round": us_w, **_parse(d_w)},
         "world_vmap_vs_loop": {"us_per_world_seed_round": us_g,
                                **_parse(d_g)},
+        "task_fusion_vs_loop": {"us_per_round": us_t, **_parse(d_t)},
     }
     print(f"engine_round_{args.method},{us_f:.1f},{d_f}")
     print(f"engine_scan_{args.method},{us_s:.1f},{d_s}")
     print(f"engine_sweep_{args.method},{us_w:.1f},{d_w}")
     print(f"engine_worlds_{args.method},{us_g:.1f},{d_g}")
-    with open(args.out, "w") as f:
+    print(f"engine_task_fusion_lvr,{us_t:.1f},{d_t}")
+    with open(out, "w") as f:
         json.dump(report, f, indent=1)
-    print(f"wrote {os.path.abspath(args.out)}")
+    print(f"wrote {os.path.abspath(out)}")
 
 
 if __name__ == "__main__":

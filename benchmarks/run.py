@@ -8,6 +8,7 @@ versions unless REPRO_BENCH_FULL=1.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -18,8 +19,31 @@ def _row(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def _reject_smoke_payloads() -> None:
+    """The harness consumes FULL-SCALE numbers only: a smoke-tagged
+    ``BENCH_engine.json`` means a CI/smoke run clobbered the checked-in
+    file (smoke runs belong in ``BENCH_engine.smoke.json``) — fail loudly
+    instead of quietly reporting throwaway numbers."""
+    path = "BENCH_engine.json"
+    if not os.path.exists(path):
+        return
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"{path} is unreadable ({e}); re-run "
+                 f"`python benchmarks/engine_bench.py` at full scale")
+    if payload.get("smoke"):
+        sys.exit(
+            f"{path} holds smoke-tagged numbers (written by a --smoke "
+            f"run).  Smoke output belongs in BENCH_engine.smoke.json; "
+            f"restore the full-scale file with "
+            f"`python benchmarks/engine_bench.py`")
+
+
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+    _reject_smoke_payloads()
     from benchmarks import engine_bench, kernels_bench, overheads
     from benchmarks import paper_tables, roofline_report
 
@@ -76,6 +100,9 @@ def main() -> None:
     # vmapped (worlds x seeds) grid vs per-world loop (padded mask-aware
     # worlds; derived = world-seed-rounds/sec win)
     timed("engine_worlds_lvr", engine_bench.bench_world_vmap)
+    # vmapped task axis vs per-task loop (signature-grouped stacks;
+    # derived = rounds/sec win + cold compile delta at S=8)
+    timed("engine_task_fusion_lvr", engine_bench.bench_task_fusion)
 
 
 if __name__ == "__main__":

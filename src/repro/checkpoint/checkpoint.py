@@ -94,11 +94,28 @@ def restore_model_params(path: str, like: Any, model: int = 0,
     (the deploy path: ``serve.py --ckpt results/train/state_20``).
 
     ``like`` is the params-only template for that model; ``model`` indexes
-    the per-task params tuple."""
-    prefix = f"{STATE_PARAMS_PREFIX}{model}/"
+    the per-task surface.  Engine states persist signature-GROUPED stacks
+    (``.params/{group}/...`` with a leading task axis) plus the
+    ``task_group``/``task_slot`` mapping arrays — the slot row is sliced
+    out here.  States without the mapping (the distributed trainer's
+    per-model tuples) keep the legacy ``.params/{model}/...`` addressing."""
     with np.load(path + ".npz") as data:
-        flat = {k[len(prefix):]: data[k] for k in data.files
-                if k.startswith(prefix)}
+        files = set(data.files)
+        if ".task_group" in files and ".task_slot" in files:
+            task_group = np.asarray(data[".task_group"])
+            if not (0 <= model < task_group.shape[0]):
+                raise KeyError(
+                    f"model index {model} out of range for the "
+                    f"{task_group.shape[0]}-task state in {path}.npz")
+            g = int(task_group[model])
+            slot = int(np.asarray(data[".task_slot"])[model])
+            prefix = f"{STATE_PARAMS_PREFIX}{g}/"
+            flat = {k[len(prefix):]: data[k][slot] for k in files
+                    if k.startswith(prefix)}
+        else:
+            prefix = f"{STATE_PARAMS_PREFIX}{model}/"
+            flat = {k[len(prefix):]: data[k] for k in files
+                    if k.startswith(prefix)}
     if not flat:
         raise KeyError(
             f"{path}.npz holds no '{prefix}*' arrays — not a full-state "

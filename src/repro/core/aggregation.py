@@ -70,5 +70,38 @@ def stale_delta(coeffs: jnp.ndarray, G: Any, h: Any, beta: jnp.ndarray,
                         stale_mean, corr)
 
 
+def stale_delta_onedot(coeffs: jnp.ndarray, G: Any, h_cohort: Any,
+                       beta_cohort: jnp.ndarray, h: Any,
+                       stale_weights: jnp.ndarray) -> Any:
+    """Eq. (18)'s Delta as ONE explicit contraction per leaf:
+
+      Delta = sum_n stale_weights_n h_n + sum_a coeffs_a (G_a - beta_a h_a)
+            = tensordot([stale_weights, coeffs], [h, G - beta h_cohort])
+
+    Mathematically ``stale_delta(...)`` with the stale mean inlined — but
+    with the accumulation order PINNED.  The two-dot form (a ``stale_mean``
+    tensordot over [N] plus a ``stale_correction`` tensordot over the
+    cohort, added) leaves XLA free to merge the contractions, and it does
+    so differently under the engine's vmapped task axis than under the
+    per-task loop, regrouping partial sums by an ulp.  One concatenated
+    contraction compiles identically on both paths (fused == loop
+    bit-for-bit, tests/test_task_fusion.py) and keeps the zero-row padding
+    contract (tests/test_world_padding.py): padding clients contribute
+    exact +0.0 terms wherever their rows land.
+
+    coeffs/beta_cohort: [A]; G/h_cohort: [A, ...] pytrees; h: [N, ...]
+    store; stale_weights: [N] (d * beta, zero off-support)."""
+    wts = jnp.concatenate([stale_weights, coeffs])
+
+    def leaf(hh, gg, hc):
+        bcast = beta_cohort.reshape(
+            (-1,) + (1,) * (gg.ndim - 1)).astype(gg.dtype)
+        fresh = gg - bcast * hc.astype(gg.dtype)
+        rows = jnp.concatenate([hh.astype(gg.dtype), fresh], axis=0)
+        return jnp.tensordot(wts.astype(gg.dtype), rows, axes=(0, 0))
+
+    return jax.tree.map(leaf, h, G, h_cohort)
+
+
 def apply_delta(w: Any, delta: Any) -> Any:
     return jax.tree.map(lambda a, b: a - b.astype(a.dtype), w, delta)

@@ -13,15 +13,51 @@ from __future__ import annotations
 
 from typing import Dict
 
+import jax
 import jax.numpy as jnp
 
 
+def ordered_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Index-ordered sequential sum of a 1-D array.
+
+    ``jnp.sum``'s partial-sum grouping follows XLA's fusion decisions, so
+    the SAME reduction compiles to different accumulation orders depending
+    on the surrounding graph — the engine's vmapped task axis vs its
+    per-task loop, or a seed-fleet vmap on top, wiggle the monitors by an
+    ulp.  A ``lax.scan`` accumulation pins the order with a loop-carried
+    dependency XLA cannot reassociate, making the monitors bit-identical
+    across every execution structure (tests/test_task_fusion.py).  The
+    trailing-zero padding contract survives for free: appended zero terms
+    extend the chain with exact +0.0 adds.  Metrics-only — [V]-sized, a
+    few scalar adds per (task, round) next to the local-training work."""
+    def step(carry, v):
+        return carry + v, None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((), x.dtype), x)
+    return out
+
+
+def ordered_sums(cols: jnp.ndarray) -> jnp.ndarray:
+    """Index-ordered sums of the K columns of a [V, K] stack in ONE
+    sequential pass (a [K] carry).  Per column bit-identical to K separate
+    ``ordered_sum`` chains — each component accumulates the same terms in
+    the same order — at 1/K the serial length, which is what keeps the
+    order-pinned monitors off the rollout's critical path
+    (``engine_bench.bench_scan_rollout``)."""
+    def step(carry, row):
+        return carry + row, None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((cols.shape[1],), cols.dtype),
+                          cols)
+    return out
+
+
 def global_step_size(coeffs: jnp.ndarray) -> jnp.ndarray:
-    return jnp.sum(coeffs)
+    return ordered_sum(coeffs)
 
 
 def participation_var(coeffs: jnp.ndarray) -> jnp.ndarray:
-    return (jnp.sum(coeffs) - 1.0) ** 2
+    return (ordered_sum(coeffs) - 1.0) ** 2
 
 
 def surrogate_variance(coeffs: jnp.ndarray, losses_v: jnp.ndarray,
@@ -30,15 +66,20 @@ def surrogate_variance(coeffs: jnp.ndarray, losses_v: jnp.ndarray,
 
     B_v >= 1 on real processors; the maximum only guards the dangling rows
     of padded worlds (B 0, d 0), which must contribute exactly 0."""
-    surrogate = jnp.sum(coeffs * losses_v)
-    target = jnp.sum(d_v / jnp.maximum(B_v, 1.0) * losses_v)
+    surrogate = ordered_sum(coeffs * losses_v)
+    target = ordered_sum(d_v / jnp.maximum(B_v, 1.0) * losses_v)
     return (surrogate - target) ** 2
 
 
 def round_metrics(coeffs: jnp.ndarray, losses_v: jnp.ndarray,
                   d_v: jnp.ndarray, B_v: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """All three [V]-reductions in ONE ordered pass (bitwise the three
+    standalone functions above, at a third of the serial scan length)."""
+    sums = ordered_sums(jnp.stack(
+        [coeffs, coeffs * losses_v,
+         d_v / jnp.maximum(B_v, 1.0) * losses_v], axis=1))
     return {
-        "H1": global_step_size(coeffs),
-        "Zp": participation_var(coeffs),
-        "Zl": surrogate_variance(coeffs, losses_v, d_v, B_v),
+        "H1": sums[0],
+        "Zp": (sums[0] - 1.0) ** 2,
+        "Zl": (sums[1] - sums[2]) ** 2,
     }

@@ -23,6 +23,22 @@ Because the transition is pure and its carry is a pytree,
     distributed trainer (``launch/train.py``) carry the ``StaleVRFamily``
     stale stores like any other state.
 
+**Task-axis fusion.**  The task axis — the defining axis of multi-model FL
+— is itself vmapped: tasks are grouped by *compile signature* (same model
+code + identical param/data/test shapes, see ``task_signature``), each
+group's params / method state / client shards are STACKED along a leading
+task axis, and the stats phase + per-task round run as ONE ``jax.vmap``
+over the stacked pytrees.  The Python loop survives only across signature
+groups (1-2 groups in the paper's settings), so trace/compile cost stops
+growing linearly in S and XLA batches the per-task work instead of
+serializing it.  ``ServerConfig(fuse_tasks=False)`` keeps the per-task
+loop on the SAME grouped state layout for A/B
+(``benchmarks/engine_bench.py::bench_task_fusion``); fused == loop
+bit-for-bit is pinned by tests/test_task_fusion.py for every registered
+method.  The ``round_step``/``rollout``/fleet dispatches donate their input
+state (``donate_argnums``), so the [N, params] all-client update buffers
+and StaleVR stale stores update in place instead of doubling peak memory.
+
 ``repro.core.server.MMFLServer`` is a thin stateful facade over this module
 (attribute views like ``h_valid``/``beta_state`` preserved); the strategy
 protocol is unchanged (``repro.core.methods``).
@@ -73,28 +89,101 @@ class ServerConfig:
     eta_cap: Optional[float] = None   # footnote-3 per-client cap sum_s p <= eta
     seed: int = 0
     jit_round: bool = True            # fused whole-round jit (False = legacy)
+    fuse_tasks: bool = True           # vmapped task axis (False = per-task loop)
 
 
 class ExperimentState(NamedTuple):
     """The complete state of an MMFL experiment as one pytree.
 
-    params/method_state are per-task tuples (heterogeneous models allowed);
-    ``round`` is a traced int32 scalar so lr schedules and round-robin
-    policies stay scan/vmap-safe; ``losses_ns`` caches the latest [N, S]
-    loss reports the sampler saw (checkpointed so a resumed run samples
-    from the same view); ``client_mask`` [N] records which client rows are
-    real (1) vs padding (0) — checkpointed so a padded run resumes with
-    the same world contract.  None only on states built by legacy
-    in-memory constructors (all clients real); checkpoints written before
-    this field cannot restore into a current template (restore raises a
-    schema error — cross-version resume is moot anyway since the
-    index-keyed RNG re-baseline changed every stream)."""
+    ``params``/``method_state`` are per-GROUP tuples: tasks sharing a
+    compile signature (``task_signature``) are stacked along a leading task
+    axis inside one tuple entry, and ``task_group``/``task_slot`` ([S]
+    int32 arrays) map task s to its (group, slot) — checkpointed with the
+    state, so the per-task surface (facade views, ``launch/serve.py``'s
+    ``restore_model_params``) survives the stacked layout.  States built
+    with per-task tuples and ``task_group=None`` (the distributed trainer's
+    layout, where every model is its own unstacked entry) remain valid:
+    None means the identity mapping.  ``round`` is a traced int32 scalar so
+    lr schedules and round-robin policies stay scan/vmap-safe;
+    ``losses_ns`` caches the latest [N, S] loss reports the sampler saw
+    (checkpointed so a resumed run samples from the same view);
+    ``client_mask`` [N] records which client rows are real (1) vs padding
+    (0) — checkpointed so a padded run resumes with the same world
+    contract.  Checkpoints written before the grouped layout cannot restore
+    into a current engine template (restore raises a schema error)."""
     params: Tuple[Any, ...]
     method_state: Tuple[Any, ...]
     key: jax.Array
     round: jax.Array          # int32 scalar
     losses_ns: jax.Array      # [N, S]
     client_mask: Optional[jax.Array] = None   # [N] 1 real / 0 padding
+    task_group: Optional[jax.Array] = None    # [S] int32 task -> group
+    task_slot: Optional[jax.Array] = None     # [S] int32 task -> slot
+
+
+# ---------------------------------------------------------------------------
+# compile-signature task grouping
+# ---------------------------------------------------------------------------
+
+
+# samples per client the stats-phase loss probe reads: min(cap, PROBE_TAKE)
+# (``fl.experiments.align_task_caps`` must not widen a cap across this
+# boundary — it would widen the probe itself)
+PROBE_TAKE = 64
+
+_PRIMITIVE = (int, float, bool, str, bytes, type(None))
+
+
+def _fn_signature(f: Callable) -> Tuple:
+    """Identity of a model function for grouping purposes: the code object
+    plus the closure's primitive cell values (``_linear_adapter``'s
+    ``init`` closes over (n_feat, n_classes); equal ints == same
+    architecture).  Non-primitive cells fall back to object identity —
+    conservative: equivalent-but-distinct constants split groups rather
+    than silently fusing different math."""
+    code = getattr(f, "__code__", None)
+    if code is None:
+        return ("obj", id(f))
+    cells: Tuple = ()
+    if getattr(f, "__closure__", None):
+        cells = tuple(
+            c.cell_contents if isinstance(c.cell_contents, _PRIMITIVE)
+            else ("id", id(c.cell_contents))
+            for c in f.__closure__)
+    return ("code", code, cells)
+
+
+def _shape_signature(tree: Any) -> Tuple:
+    return tuple(sorted(
+        ("/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path),
+         tuple(leaf.shape), str(leaf.dtype))
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]))
+
+
+def task_signature(t: Task) -> Tuple:
+    """Tasks with equal signatures compile to the same per-task round
+    executable: same model code (loss/accuracy/init) and identical
+    data/test shapes — the grouping rule of the fused task axis."""
+    return (_fn_signature(t.model.loss_fn), _fn_signature(t.model.accuracy),
+            _fn_signature(t.model.init),
+            _shape_signature(t.data), _shape_signature(t.test))
+
+
+def group_tasks(tasks: Sequence[Task]) -> List[List[int]]:
+    """Partition task indices into signature groups, first-occurrence
+    ordered (tasks within a group keep task order — slot j of group g is
+    the j-th task of that signature)."""
+    sig_to_g: Dict[Tuple, int] = {}
+    groups: List[List[int]] = []
+    for i, t in enumerate(tasks):
+        sig = task_signature(t)
+        g = sig_to_g.get(sig)
+        if g is None:
+            g = len(groups)
+            sig_to_g[sig] = g
+            groups.append([])
+        groups[g].append(i)
+    return groups
 
 
 class World(NamedTuple):
@@ -104,6 +193,11 @@ class World(NamedTuple):
     pre-mask behaviour); ``run_worlds`` instead passes a STACKED World (one
     leading axis over worlds) as a traced argument and vmaps the rollout
     over it — one compile for a whole (worlds x seeds) grid.
+
+    ``data``/``test`` are per-GROUP tuples (``group_tasks``): each entry
+    stacks its signature group's shards/eval sets along a leading task
+    axis, matching ``ExperimentState.params`` — the layout the fused task
+    vmap consumes directly.
 
     Mask contract (the padding invariants every layer relies on):
       * padding clients sit in a TRAILING block: ``client_mask`` is 1s then
@@ -115,8 +209,8 @@ class World(NamedTuple):
         the dangling ``proc_client`` rows point at the LAST client (a
         padding client by the trailing-block rule) and carry
         ``proc_mask`` 0, so they never receive probability or mass."""
-    data: Tuple[Dict[str, jnp.ndarray], ...]   # per-task client shards
-    test: Tuple[Dict[str, jnp.ndarray], ...]   # per-task server eval sets
+    data: Tuple[Dict[str, jnp.ndarray], ...]   # per-group stacked shards
+    test: Tuple[Dict[str, jnp.ndarray], ...]   # per-group stacked eval sets
     B: jnp.ndarray            # [N] float32 budgets (0 on padding)
     avail: jnp.ndarray        # [N,S] bool (False on padding)
     d: jnp.ndarray            # [N,S] dataset fractions (0 on padding)
@@ -124,6 +218,12 @@ class World(NamedTuple):
     proc_client: jnp.ndarray  # [V] int32 processor -> client
     proc_mask: jnp.ndarray    # [V] float32 (0 on padding/dangling rows)
     v_real: jnp.ndarray       # scalar f32: true sum(B) (m = rate * v_real)
+
+
+def _group_stack_trees(trees: Sequence[Any]) -> Any:
+    """Stack a list of identically-shaped pytrees along a new leading axis
+    (a group of 1 still gains the axis — the layout is uniform)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
 def build_world_arrays(tasks: Sequence["Task"], B: Any, avail: Any,
@@ -166,9 +266,12 @@ def build_world_arrays(tasks: Sequence["Task"], B: Any, avail: Any,
     proc_client[:v_real] = np.repeat(np.arange(N, dtype=np.int32), B_int)
     proc_mask = (mask_np[proc_client]
                  * (np.arange(v_total) < v_real)).astype(np.float32)
+    groups = group_tasks(tasks)
     return World(
-        data=tuple(t.data for t in tasks),
-        test=tuple(t.test for t in tasks),
+        data=tuple(_group_stack_trees([tasks[i].data for i in grp])
+                   for grp in groups),
+        test=tuple(_group_stack_trees([tasks[i].test for i in grp])
+                   for grp in groups),
         B=jnp.asarray(B_np), avail=jnp.asarray(avail_np), d=jnp.asarray(d),
         client_mask=jnp.asarray(mask_np),
         proc_client=jnp.asarray(proc_client),
@@ -225,21 +328,74 @@ class RoundEngine:
         # p [V,S]; the server facade routes its monkeypatchable
         # ``_probabilities`` through this (e.g. Fig. 5's pinned sampler)
         self.probabilities_hook: Optional[Callable] = None
-        # per-task pure building blocks
+        # signature groups: the vmapped task axis (see module docstring)
+        self.groups = group_tasks(self.tasks)
+        self.n_groups = len(self.groups)
+        self.task_gs: List[Tuple[int, int]] = [(-1, -1)] * self.S
+        for g, grp in enumerate(self.groups):
+            for j, s in enumerate(grp):
+                self.task_gs[s] = (g, j)
+        self._task_group_np = np.asarray([g for g, _ in self.task_gs],
+                                         np.int32)
+        self._task_slot_np = np.asarray([j for _, j in self.task_gs],
+                                        np.int32)
+        self.fuse_tasks = bool(getattr(cfg, "fuse_tasks", True))
+        # per-task pure building blocks (the loop path + the facade's
+        # legacy eager mode; the fused path vmaps the group closures below)
         self._local_all = [self._make_local_all(t) for t in self.tasks]
         self._loss_all = [self._make_loss_all(t) for t in self.tasks]
         self._stats_pure = [self.make_stats_fn(s) for s in range(self.S)]
         self._round_pure = [self.make_round_fn(s) for s in range(self.S)]
+        self._g_stats = [self.make_group_stats_fn(g)
+                         for g in range(self.n_groups)]
+        self._g_round = [self.make_group_round_fn(g)
+                         for g in range(self.n_groups)]
         self.loss_all_jit = [jax.jit(f) for f in self._loss_all]
         self.eval_jit = [jax.jit(lambda params, test, acc=t.model.accuracy:
                                  acc(params, test)) for t in self.tasks]
-        self.round_step = jax.jit(self.round_step_fn)
+        # the input state is donated: the [N, params] stale stores /
+        # all-client update buffers update in place instead of doubling
+        # peak memory (tests/test_task_fusion.py asserts the donation)
+        self.round_step = jax.jit(self.round_step_fn, donate_argnums=0)
         self._rollout_cache: Dict[int, Callable] = {}
         self._run_seeds_cache: Dict[int, Callable] = {}
         self._fleet_init_fn: Optional[Callable] = None
         self._fleet_rollout_cache: Dict[int, Callable] = {}
         self._fleet_eval_fn: Optional[Callable] = None
         self._run_worlds_cache: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------
+    # grouped-state helpers: the per-task surface over stacked leaves
+    # ------------------------------------------------------------------
+    def group_stack(self, per_task: Sequence[Any]) -> Tuple[Any, ...]:
+        """Per-task list -> per-group tuple of stacked pytrees."""
+        return tuple(_group_stack_trees([per_task[i] for i in grp])
+                     for grp in self.groups)
+
+    def task_params(self, state: ExperimentState, s: int) -> Any:
+        """Task s's params view (slot slice of its group's stack)."""
+        g, j = self.task_gs[s]
+        return jax.tree.map(lambda a: a[j], state.params[g])
+
+    def task_method_state(self, state: ExperimentState, s: int) -> Any:
+        """Task s's method-state view (stale store, variates, ...)."""
+        g, j = self.task_gs[s]
+        return jax.tree.map(lambda a: a[j], state.method_state[g])
+
+    def per_task_params(self, state: ExperimentState) -> List[Any]:
+        return [self.task_params(state, s) for s in range(self.S)]
+
+    def per_task_method_state(self, state: ExperimentState) -> List[Any]:
+        return [self.task_method_state(state, s) for s in range(self.S)]
+
+    def _task_data(self, w: World, s: int, explicit: bool):
+        """Task s's client shards: the engine's own host arrays on the
+        closed-over path, a slot slice of the traced group stack under
+        ``run_worlds``."""
+        if not explicit:
+            return self.tasks[s].data
+        g, j = self.task_gs[s]
+        return jax.tree.map(lambda a: a[j], w.data[g])
 
     # ------------------------------------------------------------------
     # per-task pure computations
@@ -285,7 +441,7 @@ class RoundEngine:
         # data is a closed-over constant, and slicing it in-trace makes XLA
         # constant-fold a second copy of the dataset into the executable
         cap = t.data["x"].shape[1]
-        take = min(cap, 64)
+        take = min(cap, PROBE_TAKE)
         probe_x, probe_y = t.data["x"][:, :take], t.data["y"][:, :take]
 
         def loss_all(params, data=None):
@@ -342,17 +498,20 @@ class RoundEngine:
     def make_round_fn(self, s: int,
                       local_all: Optional[Callable] = None) -> Callable:
         """The fused per-round work for task s: cohort gather + local
-        training + strategy aggregation + Sec. 3.3 monitors, as one pure
-        function.  ``view`` (optional trailing arg) replaces the engine's
-        closed-over world columns with traced per-world ones — the
-        run_worlds path; None keeps today's static-world trace."""
+        training + strategy aggregation, as one pure function.  ``view``
+        (optional trailing arg) replaces the engine's closed-over world
+        columns with traced per-world ones — the run_worlds path; None
+        keeps today's static-world trace.  The Sec. 3.3 monitors live in
+        ``sampling_metrics`` — computed once at round_step level from the
+        shared sampling arrays, so the fused and loop task paths share one
+        metric subgraph bit-for-bit."""
         strat = self.strategy
         N, cohort = self.N, self.cohort_size
         static_view = (self.d[:, s], self._d_v[:, s], self._B_v,
                        self.proc_client, self.world.client_mask)
         local_all = local_all or self._local_all[s]
 
-        def round_fn(params, state, train_in, p_col, act_v, losses,
+        def round_fn(params, state, train_in, p_col, act_v,
                      data, lr, round_idx, view=None):
             """``train_in`` is the task's PRNG key (cohort methods train
             here) or the precomputed all-client G (needs-all methods)."""
@@ -378,15 +537,134 @@ class RoundEngine:
                 corr = strat.local_correction(state, idx)
                 G, _ = local_all(params, keys, data_c, lr, corr)
                 coeff, act = coeff_client[idx], act_client[idx]
-            new_w, new_state, extras = strat.aggregate(
+            return strat.aggregate(
                 params, state, G, coeff, act, idx,
                 d_col=d_col, lr=lr, round_idx=round_idx, mask=cmask)
-            mets = convergence.round_metrics(coeffs_v, losses[proc],
-                                             d_v_col, B_v)
-            mets["loss"] = jnp.sum(d_col * losses)
-            return new_w, new_state, mets, extras
 
         return round_fn
+
+    def sampling_metrics(self, p: jnp.ndarray, active: jnp.ndarray,
+                         losses_ns: jnp.ndarray,
+                         world: Optional[World] = None
+                         ) -> Dict[str, jnp.ndarray]:
+        """The Sec. 3.3 monitors ({H1, Zp, Zl, loss}, [S] each) from the
+        sampling-phase arrays, as ONE vmap over the task axis.
+
+        Deliberately OUTSIDE the per-task round: the fused and loop task
+        paths both call this same closure on bitwise-identical inputs, so
+        the monitors compare bit-for-bit between them — metric reductions
+        computed inside the per-task bodies compile differently under the
+        task vmap than under the loop (XLA merges/regroups reductions
+        sharing operands) and wiggle last-ulp bits."""
+        strat = self.strategy
+        explicit = world is not None
+        w = self.world if world is None else world
+        d_v = w.d[w.proc_client] if explicit else self._d_v
+        B_v = w.B[w.proc_client] if explicit else self._B_v
+        proc = w.proc_client if explicit else self.proc_client
+
+        def one(p_col, act_col, d_v_col, d_col, losses_col):
+            coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_col)
+            mets = convergence.round_metrics(coeffs_v, losses_col[proc],
+                                             d_v_col, B_v)
+            mets["loss"] = convergence.ordered_sum(d_col * losses_col)
+            return mets
+
+        return jax.vmap(one, in_axes=(1, 1, 1, 1, 1))(
+            p, active, d_v, w.d, losses_ns)
+
+    # ------------------------------------------------------------------
+    # fused task axis: group-level pure computations (one vmap per group)
+    # ------------------------------------------------------------------
+    def make_group_stats_fn(self, g: int) -> Callable:
+        """The stats phase for signature group g as ONE vmapped dispatch
+        over the group's stacked (params, data, keys).  Per-task streams
+        are preserved exactly: slot j consumes the SAME ``keys[2 + s]``
+        key the per-task loop hands task s = groups[g][j]."""
+        grp = self.groups[g]
+        strat, N = self.strategy, self.N
+        rep = self.tasks[grp[0]]
+        loss_fn = rep.model.loss_fn
+        local_all = self._local_all[grp[0]]
+        stacked = self.world.data[g]
+        take = min(int(stacked["x"].shape[2]), PROBE_TAKE)
+        # probe slices bound at build time from the stacked group shards
+        # (bitwise the per-task probes: jnp.stack copies exactly)
+        probe_x = stacked["x"][:, :, :take]
+        probe_y = stacked["y"][:, :, :take]
+
+        def one_task(params, px, py, data, key, lr):
+            losses = jax.vmap(lambda xc, yc: loss_fn(params,
+                                                     {"x": xc, "y": yc})
+                              )(px, py)
+            if not strat.needs_all_updates:
+                return losses, None, None
+            keys = sampling.index_keys(key, N)
+            G, _ = local_all(params, keys, data, lr)
+            norms = None
+            if strat.needs_grad_norms:
+                norms = jnp.sqrt(jnp.maximum(
+                    stale.batched_tree_dot(G, G), 0.0))
+            return losses, G, norms
+
+        def stats_g(params_g, data_g, keys_g, lr, explicit=False):
+            px, py = ((data_g["x"][:, :, :take], data_g["y"][:, :, :take])
+                      if explicit else (probe_x, probe_y))
+            if len(grp) == 1:
+                # single-task group: bypass the vmap so the trace is the
+                # per-task loop's, slot-sliced (fused == loop trivially)
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                out = one_task(sq(params_g), px[0], py[0], sq(data_g),
+                               keys_g[0], lr)
+                return jax.tree.map(lambda a: a[None], out)
+            return jax.vmap(one_task, in_axes=(0, 0, 0, 0, 0, None))(
+                params_g, px, py, data_g, keys_g, lr)
+
+        return stats_g
+
+    def make_group_round_fn(self, g: int) -> Callable:
+        """Signature group g's fused per-task round: ONE vmap of the
+        per-task ``round_fn`` over the stacked (params, method state,
+        training inputs, sampling columns).  The world view rides along
+        with per-task axes on (d_col, d_v_col) and broadcast axes on the
+        shared (B_v, proc_client, client_mask)."""
+        grp = self.groups[g]
+        round_one = self.make_round_fn(grp[0],
+                                       local_all=self._local_all[grp[0]])
+
+        def round_g(params_g, state_g, train_in_g, p_g, act_g,
+                    data_g, lr, round_idx, view_g):
+            if len(grp) == 1:
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                d_col, d_v_col, B_v, proc, cmask = view_g
+                out = round_one(sq(params_g), sq(state_g), sq(train_in_g),
+                                p_g[0], act_g[0], sq(data_g),
+                                lr, round_idx,
+                                (d_col[0], d_v_col[0], B_v, proc, cmask))
+                return jax.tree.map(lambda a: a[None], out)   # 3-tuple
+            return jax.vmap(
+                round_one,
+                in_axes=(0, 0, 0, 0, 0, 0, None, None,
+                         (0, 0, None, None, None)))(
+                params_g, state_g, train_in_g, p_g, act_g,
+                data_g, lr, round_idx, view_g)
+
+        return round_g
+
+    def _scatter_tasks(self, parts: Sequence[jnp.ndarray],
+                       tail_shape: Tuple[int, ...] = ()) -> jnp.ndarray:
+        """Reassemble per-group [G_s, ...] rows into task order [S, ...]."""
+        out = jnp.zeros((self.S,) + tail_shape, parts[0].dtype)
+        for g, grp in enumerate(self.groups):
+            out = out.at[np.asarray(grp)].set(parts[g])
+        return out
+
+    def _to_task_cols(self, parts: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        """Per-group [G_s, N] stats rows -> the sampler's [N, S] columns."""
+        out = jnp.zeros((self.N, self.S), parts[0].dtype)
+        for g, grp in enumerate(self.groups):
+            out = out.at[:, np.asarray(grp)].set(parts[g].T)
+        return out
 
     # ------------------------------------------------------------------
     # state constructors
@@ -405,13 +683,16 @@ class RoundEngine:
         for t in self.tasks:
             key, k = jax.random.split(key)
             params.append(t.model.init(k))
-        mstate = tuple(self.strategy.init_state(params[s], self.N)
-                       for s in range(self.S))
+        mstate = [self.strategy.init_state(params[s], self.N)
+                  for s in range(self.S)]
         return ExperimentState(
-            params=tuple(params), method_state=mstate, key=key,
+            params=self.group_stack(params),
+            method_state=self.group_stack(mstate), key=key,
             round=jnp.asarray(0, jnp.int32),
             losses_ns=jnp.ones((self.N, self.S), jnp.float32),
-            client_mask=(self.world if world is None else world).client_mask)
+            client_mask=(self.world if world is None else world).client_mask,
+            task_group=jnp.asarray(self._task_group_np),
+            task_slot=jnp.asarray(self._task_slot_np))
 
     def sampler_ctx(self, round_idx: Any,
                     world: Optional[World] = None) -> methods.SamplerContext:
@@ -446,6 +727,12 @@ class RoundEngine:
         the SAME transition a function of the world too — ``run_worlds``
         vmaps it over stacked world pytrees.
 
+        With ``fuse_tasks`` (default) the S-task stats phase and per-task
+        round run as one vmap per signature group; ``fuse_tasks=False``
+        keeps the per-task Python loop on the same grouped state layout
+        (the A/B baseline of ``bench_task_fusion``) — both produce
+        bit-identical results (tests/test_task_fusion.py).
+
         Metrics are [S]-stacked device arrays ({H1, Zp, Zl, loss}; plus
         ``beta`` [S, N] for the stale family) — no host syncs here."""
         cfg, S = self.cfg, self.S
@@ -456,14 +743,26 @@ class RoundEngine:
         lr = jnp.float32(cfg.lr) * jnp.float32(cfg.lr_decay) ** round_f
         keys = jax.random.split(state.key, 2 + S)
         new_key, k_sample = keys[0], keys[1]
+        task_keys = keys[2:]
+        fused = self.fuse_tasks
 
         # ---- 1) stats for the sampler -----------------------------------
-        stats = [self._stats_pure[s](state.params[s], w.data[s],
-                                     keys[2 + s], lr, explicit)
-                 for s in range(S)]
-        losses_ns = jnp.stack([st[0] for st in stats], axis=1)    # [N,S]
-        norms_ns = (jnp.stack([st[2] for st in stats], axis=1)
-                    if strat.needs_grad_norms else None)
+        if fused:
+            stats = [self._g_stats[g](state.params[g], w.data[g],
+                                      task_keys[np.asarray(grp)], lr,
+                                      explicit)
+                     for g, grp in enumerate(self.groups)]
+            losses_ns = self._to_task_cols([st[0] for st in stats])   # [N,S]
+            norms_ns = (self._to_task_cols([st[2] for st in stats])
+                        if strat.needs_grad_norms else None)
+        else:
+            stats = [self._stats_pure[s](self.task_params(state, s),
+                                         self._task_data(w, s, explicit),
+                                         task_keys[s], lr, explicit)
+                     for s in range(S)]
+            losses_ns = jnp.stack([st[0] for st in stats], axis=1)    # [N,S]
+            norms_ns = (jnp.stack([st[2] for st in stats], axis=1)
+                        if strat.needs_grad_norms else None)
 
         # ---- 2) sampling -------------------------------------------------
         ctx = self.sampler_ctx(state.round, world)
@@ -478,33 +777,64 @@ class RoundEngine:
         active = strat.sample(k_sample, p, ctx, losses_ns)
         active = active * w.proc_mask[:, None]
 
-        # ---- 3) fused per-task round ------------------------------------
-        new_params, new_mstate, betas = [], [], []
-        per_key: Dict[str, List[jnp.ndarray]] = {
-            k: [] for k in ("H1", "Zp", "Zl", "loss")}
-        d_v = w.d[w.proc_client] if explicit else None
-        B_v = w.B[w.proc_client] if explicit else None
-        for s in range(S):
-            train_in = stats[s][1] if strat.needs_all_updates else keys[2 + s]
-            view = ((w.d[:, s], d_v[:, s], B_v, w.proc_client,
-                     w.client_mask) if explicit else None)
-            new_w, new_st, mets, extras = self._round_pure[s](
-                state.params[s], state.method_state[s], train_in, p[:, s],
-                active[:, s], losses_ns[:, s], w.data[s],
-                lr, round_f, view)
-            new_params.append(new_w)
-            new_mstate.append(new_st)
-            for k in per_key:
-                per_key[k].append(mets[k])
-            if "beta" in extras:
-                betas.append(extras["beta"])
-        metrics = {k: jnp.stack(v) for k, v in per_key.items()}    # [S]
-        if betas:
-            metrics["beta"] = jnp.stack(betas)                     # [S,N]
+        # ---- 3) Sec. 3.3 monitors (shared by BOTH task paths) -----------
+        # computed here, from the sampling arrays the two paths already
+        # share bitwise, so fused == loop holds for metrics by construction
+        metrics = self.sampling_metrics(p, active, losses_ns, world)
+
+        # ---- 4) fused per-task round ------------------------------------
+        d_v_t = w.d[w.proc_client] if explicit else self._d_v
+        B_v_t = w.B[w.proc_client] if explicit else self._B_v
+        proc_t = w.proc_client if explicit else self.proc_client
+        cmask_t = w.client_mask if explicit else self.world.client_mask
+        if fused:
+            new_params, new_mstate = [], []
+            beta_parts = []
+            for g, grp in enumerate(self.groups):
+                ia = np.asarray(grp)
+                train_in = (stats[g][1] if strat.needs_all_updates
+                            else task_keys[ia])
+                view = (w.d[:, ia].T, d_v_t[:, ia].T, B_v_t, proc_t,
+                        cmask_t)
+                new_w, new_st, extras = self._g_round[g](
+                    state.params[g], state.method_state[g], train_in,
+                    p[:, ia].T, active[:, ia].T, w.data[g],
+                    lr, round_f, view)
+                new_params.append(new_w)
+                new_mstate.append(new_st)
+                beta_parts.append(extras.get("beta"))
+            if beta_parts[0] is not None:
+                metrics["beta"] = self._scatter_tasks(
+                    beta_parts, tail_shape=(self.N,))               # [S,N]
+        else:
+            new_params = [state.params[g] for g in range(self.n_groups)]
+            new_mstate = [state.method_state[g]
+                          for g in range(self.n_groups)]
+            betas: List[jnp.ndarray] = []
+            for s in range(S):
+                g, j = self.task_gs[s]
+                train_in = (stats[s][1] if strat.needs_all_updates
+                            else task_keys[s])
+                view = ((w.d[:, s], d_v_t[:, s], B_v_t, proc_t, cmask_t)
+                        if explicit else None)
+                new_w, new_st, extras = self._round_pure[s](
+                    self.task_params(state, s),
+                    self.task_method_state(state, s), train_in, p[:, s],
+                    active[:, s],
+                    self._task_data(w, s, explicit), lr, round_f, view)
+                new_params[g] = jax.tree.map(
+                    lambda a, v: a.at[j].set(v), new_params[g], new_w)
+                new_mstate[g] = jax.tree.map(
+                    lambda a, v: a.at[j].set(v), new_mstate[g], new_st)
+                if "beta" in extras:
+                    betas.append(extras["beta"])
+            if betas:
+                metrics["beta"] = jnp.stack(betas)                    # [S,N]
         new_state = ExperimentState(
             params=tuple(new_params), method_state=tuple(new_mstate),
             key=new_key, round=state.round + 1, losses_ns=losses_ns,
-            client_mask=state.client_mask)
+            client_mask=state.client_mask, task_group=state.task_group,
+            task_slot=state.task_slot)
         return new_state, metrics
 
     # ------------------------------------------------------------------
@@ -522,11 +852,13 @@ class RoundEngine:
         """Run ``n_rounds`` rounds as ONE ``lax.scan`` dispatch.  Metrics
         come back stacked on-device ([n_rounds, S] per key) — equivalent to
         n sequential ``round_step`` calls, minus every per-round dispatch
-        and host sync."""
+        and host sync.  The input state is DONATED (its buffers are
+        reused for the output state): rebind the result, don't reuse the
+        argument."""
         n_rounds = int(n_rounds)
         fn = self._rollout_cache.get(n_rounds)
         if fn is None:
-            fn = jax.jit(self._rollout_fn(n_rounds))
+            fn = jax.jit(self._rollout_fn(n_rounds), donate_argnums=0)
             self._rollout_cache[n_rounds] = fn
         return fn(state)
 
@@ -573,11 +905,13 @@ class RoundEngine:
     def rollout_states(self, states: ExperimentState, n_rounds: int
                        ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
         """``rollout`` vmapped over a stacked fleet state: ONE dispatch for
-        all seeds x ``n_rounds`` rounds, metrics [n_seeds, n_rounds, S]."""
+        all seeds x ``n_rounds`` rounds, metrics [n_seeds, n_rounds, S].
+        The input fleet state is DONATED (rebind the result)."""
         n_rounds = int(n_rounds)
         fn = self._fleet_rollout_cache.get(n_rounds)
         if fn is None:
-            fn = jax.jit(jax.vmap(self._rollout_fn(n_rounds)))
+            fn = jax.jit(jax.vmap(self._rollout_fn(n_rounds)),
+                         donate_argnums=0)
             self._fleet_rollout_cache[n_rounds] = fn
         return fn(states)
 
@@ -635,11 +969,22 @@ class RoundEngine:
     # ------------------------------------------------------------------
     def evaluate_fn(self, state: ExperimentState,
                     world: Optional[World] = None) -> jnp.ndarray:
-        """[S] test accuracies as a pure function (vmap-safe)."""
+        """[S] test accuracies as a pure function (vmap-safe): one vmapped
+        accuracy per signature group over the stacked (params, test)."""
         test = (self.world if world is None else world).test
-        return jnp.stack([t.model.accuracy(state.params[s], test[s])
-                          for s, t in enumerate(self.tasks)])
+        accs = jnp.zeros((self.S,), jnp.float32)
+        for g, grp in enumerate(self.groups):
+            acc_fn = self.tasks[grp[0]].model.accuracy
+            if len(grp) == 1:
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                a = acc_fn(sq(state.params[g]), sq(test[g]))[None]
+            else:
+                a = jax.vmap(acc_fn)(state.params[g], test[g])
+            accs = accs.at[np.asarray(grp)].set(
+                jnp.asarray(a, jnp.float32))
+        return accs
 
     def evaluate(self, state: ExperimentState) -> List[float]:
-        return [float(self.eval_jit[s](state.params[s], self.tasks[s].test))
+        return [float(self.eval_jit[s](self.task_params(state, s),
+                                       self.tasks[s].test))
                 for s in range(self.S)]

@@ -75,11 +75,14 @@ class MethodStrategy:
     uses_loss_stats: ClassVar[bool] = True    # sampler consumes loss reports
     uses_stale_store: ClassVar[bool] = False
     distributed_ok: ClassVar[bool] = False
-    # True when the strategy derives STATIC Python sizes from the budget m
-    # (e.g. power_of_choice's top-k cohort): under a world-vmapped grid
-    # those sizes freeze at the template world's m_host, so worlds with a
-    # different budget would silently sample differently than standalone —
-    # world_fleet refuses to stack heterogeneous budgets for such methods
+    # True when the strategy derives STATIC Python sizes from the budget m:
+    # under a world-vmapped grid those sizes freeze at the template world's
+    # m_host, so worlds with a different budget would silently sample
+    # differently than standalone — world_fleet refuses to stack
+    # heterogeneous budgets for such methods.  No registered method sets
+    # it anymore (power_of_choice turns its budget-derived top-k sizes
+    # into rank masks against the traced per-world m); the guard stays for
+    # strategies that cannot.
     static_budget_sizing: ClassVar[bool] = False
 
     def __init__(self, cfg: Any = None):

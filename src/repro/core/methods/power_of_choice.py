@@ -5,7 +5,18 @@ candidates.
 
 Selection is biased towards high-loss clients by construction, so the
 unbiased d/(B p) coefficients do not apply: the aggregation weights are the
-d-normalized FedAvg weights over the selected cohort (||H||_1 = 1)."""
+d-normalized FedAvg weights over the selected cohort (||H||_1 = 1).
+
+Heterogeneous-budget world grids: the top-k CAPACITIES (k, candidate count)
+are static Python sizes derived from the template's ``m_host`` — the
+max-budget world of the stack — and the per-world EFFECTIVE sizes are
+rank masks against the world's own traced budget (``ctx.m``; candidate
+count additionally bounded by the world's real processor rows sum(B)).
+On the engine's own world ``ctx.m`` is concrete and equals ``m_host``, so
+the masks are all-ones and the draw is bit-identical to the pre-mask
+static path; under ``run_worlds`` each stacked world ranks with its own
+k — no more frozen template sizing, so the method joins ``vmap_worlds``
+grids (tests/test_world_padding.py pins grid == standalone)."""
 from __future__ import annotations
 
 import jax
@@ -22,14 +33,28 @@ CANDIDATE_FACTOR = 2    # candidate set size = factor * k (capped at V)
 class PowerOfChoiceMethod(UniformSamplingMixin, MethodStrategy):
     distributed_ok = True
     uses_loss_stats = True      # candidate ranking needs the loss reports
-    static_budget_sizing = True  # k = round(m/S) is a static Python size
 
     def sample(self, key, p, ctx, losses_ns=None):
         V, S = p.shape
-        m_eff = getattr(ctx, "m_host", None)
-        m_eff = ctx.m if m_eff is None else m_eff
-        k = max(1, int(round(m_eff / S)))           # active processors/task
-        n_cand = min(V, CANDIDATE_FACTOR * k)
+        m_host = getattr(ctx, "m_host", None)
+        m_host = ctx.m if m_host is None else m_host
+        # static capacities from the template budget (the stack's max)
+        k_cap = max(1, int(round(m_host / S)))
+        n_cand_cap = min(V, CANDIDATE_FACTOR * k_cap)
+        if isinstance(ctx.m, jax.core.Tracer):
+            # world-vmapped grid: effective sizes follow the world's own
+            # traced budget, realized as rank masks over the static top-k
+            k_eff = jnp.clip(jnp.round(ctx.m / S), 1, k_cap
+                             ).astype(jnp.int32)
+            rows = jnp.sum(ctx.B).astype(jnp.int32)     # real rows sum(B)
+            n_cand_eff = jnp.clip(
+                jnp.minimum(rows, CANDIDATE_FACTOR * k_eff), 1, n_cand_cap
+            ).astype(jnp.int32)
+        else:
+            k_eff, n_cand_eff = k_cap, n_cand_cap
+        keep_cand = (jnp.arange(n_cand_cap) < n_cand_eff
+                     ).astype(jnp.float32)
+        keep_k = (jnp.arange(k_cap) < k_eff).astype(jnp.float32)
         total = getattr(ctx, "V", None)
         losses_v = sampling.processor_budget_utilities(losses_ns, ctx.B,
                                                        total)
@@ -42,14 +67,17 @@ class PowerOfChoiceMethod(UniformSamplingMixin, MethodStrategy):
             # permutation prefix this is invariant to padding: processor
             # v's score hangs off index key v only, and masked processors
             # score -inf, so a padded world draws the same candidates.
+            # top_k sorts descending, so the rank masks keep exactly the
+            # world's own effective counts (all-ones on the static path —
+            # bit-identical to an unmasked set).
             u = sampling.index_uniform(k_s, V)
             cand_score = jnp.where(avail_col > 0, u, -jnp.inf)
-            _, cand_idx = jax.lax.top_k(cand_score, n_cand)
-            cand = (jnp.zeros((V,)).at[cand_idx].set(1.0)
+            _, cand_idx = jax.lax.top_k(cand_score, n_cand_cap)
+            cand = (jnp.zeros((V,)).at[cand_idx].set(keep_cand)
                     * (avail_col > 0))              # drop -inf fillers
             score = jnp.where(cand > 0, loss_col, -jnp.inf)
-            _, top = jax.lax.top_k(score, k)
-            act = jnp.zeros((V,)).at[top].set(1.0)
+            _, top = jax.lax.top_k(score, k_cap)
+            act = jnp.zeros((V,)).at[top].set(keep_k)
             return act * cand                       # drop -inf fillers
 
         keys = jax.random.split(key, S)

@@ -14,7 +14,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, stale
+from repro.core import aggregation
 from repro.core.methods.base import MethodStrategy
 from repro.core.methods.mixins import StaleStoreMixin
 
@@ -35,9 +35,15 @@ class StaleVRFamily(StaleStoreMixin, MethodStrategy):
         h_cohort = jax.tree.map(lambda x: x[idx], state["h"])
         beta_all, state = self._beta(state, G, h_cohort, act, idx, round_idx)
         beta_all = beta_all * hv                    # stale term only if valid
-        # processors of client i share h_i: sum_b (d/B) beta h = d beta h
-        sm = stale.stale_mean(state["h"], d_col * beta_all)
-        delta = aggregation.stale_delta(coeff, G, h_cohort, beta_all[idx], sm)
+        # Eq. 18 in the order-pinned one-dot form: the stale mean's weights
+        # (processors of client i share h_i: sum_b (d/B) beta h = d beta h)
+        # concatenate with the cohort's fresh-update coefficients so the
+        # whole Delta is ONE contraction — the separate stale_mean +
+        # stale_correction dots fuse nondeterministically between the
+        # vmapped task axis and the per-task loop (see stale_delta_onedot)
+        delta = aggregation.stale_delta_onedot(
+            coeff, G, h_cohort, beta_all[idx], state["h"],
+            d_col * beta_all)
         new_w = aggregation.apply_delta(w, delta)
         h, hv = self.refresh(state, G, act, idx)
         return new_w, {**state, "h": h, "h_valid": hv}, {"beta": beta_all}

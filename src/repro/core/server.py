@@ -67,6 +67,11 @@ class MMFLServer:
             lambda ctx, losses, norms: self._probabilities(losses, norms, ctx))
         if not cfg.jit_round:
             self._build_legacy()
+            # the eager path still jits the (cheap, order-pinned) monitor
+            # closure once — re-dispatching its vmapped scans eagerly every
+            # round would dominate the legacy baseline's runtime
+            self._metrics_jit = jax.jit(
+                lambda p, act, losses: eng.sampling_metrics(p, act, losses))
         self._state = eng.init_state()
 
     # ------------------------------------------------------------------
@@ -83,12 +88,14 @@ class MMFLServer:
 
     @property
     def params(self) -> List[Any]:
-        return list(self._state.params)
+        """Per-task params views (slot slices of the signature-grouped
+        stacks the state actually carries)."""
+        return self.engine.per_task_params(self._state)
 
     @property
     def state(self) -> List[Any]:
         """Per-task method state (stale stores / variates / estimators)."""
-        return list(self._state.method_state)
+        return self.engine.per_task_method_state(self._state)
 
     @property
     def key(self) -> jax.Array:
@@ -183,8 +190,8 @@ class MMFLServer:
         round_idx = jnp.float32(r)
         key, k_sample, *k_local = jax.random.split(self._state.key,
                                                    2 + self.S)
-        params = list(self._state.params)
-        mstate = list(self._state.method_state)
+        params = self.engine.per_task_params(self._state)
+        mstate = self.engine.per_task_method_state(self._state)
 
         # ---- 1) stats for the sampler -----------------------------------
         stats = [self._legacy_stats[s](params[s], self.tasks[s].data,
@@ -202,25 +209,32 @@ class MMFLServer:
         active = active * proc_mask[:, None]
 
         # ---- 3) eager per-task round ------------------------------------
+        # monitors come from the engine's shared sampling-metrics closure
+        # (the same subgraph the fused/loop traced paths consume)
+        host_mets = {k: np.asarray(v) for k, v in
+                     self._metrics_jit(p, active, losses_ns).items()}
         metrics: Dict[str, Any] = {"round": r}
         for s in range(self.S):
             train_in = stats[s][1] if self.strategy.needs_all_updates \
                 else k_local[s]
-            new_w, new_state, mets, extras = self._legacy_round[s](
+            new_w, new_state, extras = self._legacy_round[s](
                 params[s], mstate[s], train_in, p[:, s],
-                active[:, s], losses_ns[:, s], self.tasks[s].data,
+                active[:, s], self.tasks[s].data,
                 lr, round_idx)
             params[s] = new_w
             mstate[s] = new_state
             if "beta" in extras:
                 self.last_beta[s] = extras["beta"]
             for k in ("H1", "Zp", "Zl", "loss"):
-                metrics[f"{k}/{s}"] = float(mets[k])
+                metrics[f"{k}/{s}"] = float(host_mets[k][s])
 
         self._state = ExperimentState(
-            params=tuple(params), method_state=tuple(mstate), key=key,
+            params=self.engine.group_stack(params),
+            method_state=self.engine.group_stack(mstate), key=key,
             round=self._state.round + 1, losses_ns=losses_ns,
-            client_mask=self._state.client_mask)
+            client_mask=self._state.client_mask,
+            task_group=self._state.task_group,
+            task_slot=self._state.task_slot)
         return metrics
 
     # ------------------------------------------------------------------

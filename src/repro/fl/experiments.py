@@ -22,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import methods
-from repro.core.engine import RoundEngine, World, build_world_arrays
+from repro.core.engine import (PROBE_TAKE, RoundEngine, World,
+                               build_world_arrays)
 from repro.core.server import MMFLServer, ModelAdapter, ServerConfig, Task
 from repro.data import partition, synthetic
 from repro.models import cnn, lstm
@@ -70,6 +71,45 @@ def _char_task(rng, name: str, n_clients: int, vocab: int = 48) -> Task:
     return Task(name=name, model=_lstm_adapter(vocab), data=data, test=test)
 
 
+def align_task_caps(tasks: List[Task]) -> List[Task]:
+    """Wrap-pad per-task sample capacities to the max among tasks that
+    agree on every OTHER data/test shape, so same-architecture tasks share
+    a compile signature and fuse into one vmapped task group
+    (``repro.core.engine.group_tasks``).  Partitions draw different caps
+    (the sample axis of ``data["x"]``) per task; nothing reads rows beyond
+    ``count`` — minibatch indices stay < count and the loss probe takes
+    ``min(cap, 64)`` — so for caps >= 64 (every §6.1 world) the aligned
+    world trains bit-identically.  That precondition is ENFORCED, not
+    assumed: a task whose cap is below the 64-sample probe boundary is
+    left unaligned (widening it would widen its loss probe with wrapped
+    duplicates and silently shift every sampling stream) — it simply
+    stays in its own compile group.  Wrapped rows repeat real rows, the
+    partitioner's own padding convention."""
+    sig = lambda t: (
+        tuple((k, v.shape[:1] + v.shape[2:], str(v.dtype))
+              for k, v in sorted(t.data.items()) if k != "count"),
+        tuple((k, tuple(v.shape), str(v.dtype))
+              for k, v in sorted(t.test.items())))
+    cap_to: Dict[Any, int] = {}
+    for t in tasks:
+        key = sig(t)
+        cap_to[key] = max(cap_to.get(key, 0), int(t.data["x"].shape[1]))
+    out = []
+    for t in tasks:
+        cap, target = int(t.data["x"].shape[1]), cap_to[sig(t)]
+        if cap == target or cap < PROBE_TAKE:
+            # caps under the probe boundary must keep their exact probe
+            # slice — alignment would change min(cap, PROBE_TAKE)
+            out.append(t)
+            continue
+        wrap = np.arange(target) % cap
+        data = {k: (jnp.asarray(np.asarray(v)[:, wrap])
+                    if k in ("x", "y") else v)
+                for k, v in t.data.items()}
+        out.append(Task(name=t.name, model=t.model, data=data, test=t.test))
+    return out
+
+
 def build_setting(n_models: int = 3, n_clients: int = 120, seed: int = 0,
                   small: bool = False, avail_rate: Optional[float] = None,
                   label_frac: Optional[float] = None
@@ -111,7 +151,9 @@ def build_setting(n_models: int = 3, n_clients: int = 120, seed: int = 0,
         rng, n_clients, n_models,
         frac_all=0.9 if avail_rate is None else float(avail_rate))
     B = partition.processor_budgets(rng, avail)
-    return tasks, B, avail
+    # same-architecture tasks share one compile signature (and therefore
+    # one vmapped task group) once their drawn caps agree
+    return align_task_caps(tasks), B, avail
 
 
 def make_server(method: str, n_models: int = 3, seed: int = 0,

@@ -115,12 +115,13 @@ class SweepSpec:
     per (signature, method) instead of one per (setting, method).  The
     padding is mask-aware and bit-exact for equal-cap worlds
     (tests/test_world_padding.py), so results match the per-setting path
-    — except methods with ``static_budget_sizing`` (power_of_choice),
-    which ``world_fleet`` refuses to stack over heterogeneous budgets,
-    and the rare rounds where a smaller world's own cohort capacity would
-    have overflowed (the grid sizes capacity over the whole fleet and
-    trains actives the standalone run would drop — see ``world_fleet``).
-    Not combinable with ``eval_every`` cadences (yet)."""
+    — except methods with ``static_budget_sizing`` (none registered:
+    power_of_choice ranks with per-world masks now), which ``world_fleet``
+    refuses to stack over heterogeneous budgets, and the rare rounds
+    where a smaller world's own cohort capacity would have overflowed
+    (the grid sizes capacity over the whole fleet and trains actives the
+    standalone run would drop — see ``world_fleet``).  Not combinable
+    with ``eval_every`` cadences (yet)."""
     settings: Sequence[SweepSetting]
     runs: Sequence[Union[str, MethodRun]]
     seeds: Sequence[int] = (0,)

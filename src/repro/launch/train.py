@@ -281,13 +281,17 @@ def _apply_stale(strategy, ms: Dict, w_after_corr, d_col: jnp.ndarray,
     """Finish Eq. 18 for one model and advance its stale state.
 
     ``w_after_corr`` already carries the per-chunk fresh-update corrections
-    sum_active P (G - beta h) from ``fl.steps.stale_step``; the epilogue is
-    the SAME sequence ``StaleVRFamily.aggregate`` runs on the server —
-    ``strategy._beta`` (measured/estimated merge + estimator update),
+    sum_active P (G - beta h) from ``fl.steps.stale_step``; the epilogue
+    runs the same METHOD math as ``StaleVRFamily.aggregate`` on the server
+    — ``strategy._beta`` (measured/estimated merge + estimator update),
     h_valid masking, the stale mean over the pre-refresh store, then
     ``StaleStoreMixin.refresh`` — called on the concatenated active-cohort
-    rows, so the method math keeps a single authority in
-    ``repro.core.methods``."""
+    rows, so Eq. 18/20/21 keep a single authority in
+    ``repro.core.methods``.  Accumulation ORDER differs: the server
+    aggregates Eq. 18 as one concatenated contraction
+    (``aggregation.stale_delta_onedot``, pinned for the fused task axis)
+    while this chunked path keeps the separate stale-mean + per-chunk
+    correction sums — statistically identical, ulp-level different."""
     idx = jnp.asarray(active_ids, jnp.int32)
     act = jnp.ones((len(active_ids),), jnp.float32)
     # per-chunk [len(ids), ...] update slices, in the order the chunks

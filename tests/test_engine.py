@@ -60,9 +60,10 @@ def test_rollout_matches_eager_rounds(linear_world, method):
                     eager[r][f"{k}/{s}"], np.asarray(mets[k])[r, s],
                     rtol=1e-4, atol=1e-6, err_msg=f"{method} {k} r{r} s{s}")
     for s in range(eng.S):
-        _tree_allclose(srv.params[s], state.params[s], rtol=1e-4, atol=1e-6)
+        _tree_allclose(srv.params[s], eng.task_params(state, s),
+                       rtol=1e-4, atol=1e-6)
     # method state converged identically too (stale stores, variates, ...)
-    _tree_allclose(list(srv.state), list(state.method_state),
+    _tree_allclose(list(srv.state), eng.per_task_method_state(state),
                    rtol=1e-4, atol=1e-6)
     assert int(state.round) == 3 == srv.round
 

@@ -1,0 +1,355 @@
+"""The fused task axis equivalence battery (``repro.core.engine``).
+
+The contract under test: grouping tasks by compile signature
+(``task_signature``/``group_tasks``), stacking each group's params /
+method state / shards along a leading task axis, and running the stats
+phase + per-task round as ONE ``jax.vmap`` per group
+(``ServerConfig.fuse_tasks``, the default) must produce BIT-IDENTICAL
+results to the per-task Python loop on the same grouped layout
+(``fuse_tasks=False``) — metrics, params, and per-client method state,
+for every registered method.  The RNG schedule makes this possible by
+construction: task s consumes ``keys[2 + s]`` on both paths, so grouping
+only reorders WHICH closure consumes a key, never the key itself.
+
+Also pinned here:
+  * the grouping rule — same-architecture tasks fuse, mixed architectures
+    (different code, shapes, or closure constants) split;
+  * the task -> (group, slot) mapping rides in ``ExperimentState``
+    (``task_group``/``task_slot``) and round-trips through
+    ``save_state``/``restore_state`` + ``restore_model_params`` (the
+    serve deploy path slices one model out of a grouped stack);
+  * buffer donation: the ``round_step``/``rollout``/fleet dispatches
+    donate their input state, so the [N, params] stale stores and
+    all-client update buffers update in place (the donated input's
+    buffers are deleted after the call).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.core import methods
+from repro.core.engine import (ExperimentState, RoundEngine, ServerConfig,
+                               group_tasks, task_signature)
+from repro.fl.experiments import build_linear_setting, build_setting
+
+N_CLIENTS = 8
+S_TASKS = 4
+
+
+def _cfg(method, **kw):
+    base = dict(method=method, local_epochs=2, seed=1, active_rate=0.3,
+                batch_size=8)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _tree_equal(a, b, err=""):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb), err
+    for (path, x), y in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{err}{jax.tree_util.keystr(path)}")
+
+
+@pytest.fixture(scope="module")
+def linear_world():
+    """4 same-architecture linear tasks: ONE signature group."""
+    return build_linear_setting(n_models=S_TASKS, n_clients=N_CLIENTS,
+                                seed=0)
+
+
+@pytest.fixture(scope="module")
+def mixed_world():
+    """4 tasks across 2 linear architectures (different n_feat): two
+    signature groups of 2, interleaved with task order preserved."""
+    t_a, B, avail_a = build_linear_setting(n_models=2, n_clients=N_CLIENTS,
+                                           n_feat=16, seed=0)
+    t_b, _, _ = build_linear_setting(n_models=2, n_clients=N_CLIENTS,
+                                     n_feat=8, seed=1)
+    tasks = [t_a[0], t_b[0], t_a[1], t_b[1]]
+    avail = np.ones((N_CLIENTS, 4), bool)
+    return tasks, B, avail
+
+
+# ---------------------------------------------------------------------------
+# grouping rule
+# ---------------------------------------------------------------------------
+
+
+def test_same_architecture_tasks_form_one_group(linear_world):
+    tasks, B, avail = linear_world
+    assert group_tasks(tasks) == [list(range(S_TASKS))]
+    sigs = {task_signature(t) for t in tasks}
+    assert len(sigs) == 1
+
+
+def test_mixed_architectures_split_groups(mixed_world):
+    tasks, B, avail = mixed_world
+    # interleaved [16-feat, 8-feat, 16-feat, 8-feat] -> two groups, task
+    # order preserved within each (slot j = j-th task of the signature)
+    assert group_tasks(tasks) == [[0, 2], [1, 3]]
+
+
+def test_cnn_lstm_world_groups_by_architecture():
+    """The paper's 5-model setting: 2 FMNIST-like CNNs fuse (identical
+    adapter code + aligned caps), the CIFAR-like CNN (more channels), the
+    EMNIST-like CNN (26 classes) and the LSTM stay singleton groups."""
+    tasks, B, avail = build_setting(n_models=5, n_clients=8, seed=0,
+                                    small=True)
+    assert group_tasks(tasks) == [[0, 1], [2], [3], [4]]
+    # the 3-model setting (3x FMNIST-like) fuses completely
+    tasks3, _, _ = build_setting(n_models=3, n_clients=8, seed=0,
+                                 small=True)
+    assert group_tasks(tasks3) == [[0, 1, 2]]
+
+
+def test_align_task_caps_respects_probe_boundary():
+    """Cap alignment only wrap-pads ABOVE the loss-probe boundary: a task
+    whose cap is under PROBE_TAKE keeps its exact probe slice (alignment
+    would widen it with wrapped duplicates and shift the sampling
+    streams) and simply stays in its own compile group."""
+    from repro.core.engine import PROBE_TAKE
+    from repro.fl.experiments import align_task_caps
+    t_small, _, _ = build_linear_setting(n_models=1, n_clients=4,
+                                         cap=PROBE_TAKE // 2, seed=0)
+    t_big, _, _ = build_linear_setting(n_models=1, n_clients=4,
+                                       cap=PROBE_TAKE * 2, seed=1)
+    aligned = align_task_caps([t_small[0], t_big[0]])
+    assert aligned[0].data["x"].shape[1] == PROBE_TAKE // 2  # untouched
+    assert aligned[1].data["x"].shape[1] == PROBE_TAKE * 2
+    # above the boundary alignment happens and is grouped
+    t_a, _, _ = build_linear_setting(n_models=1, n_clients=4,
+                                     cap=PROBE_TAKE + 8, seed=0)
+    t_b, _, _ = build_linear_setting(n_models=1, n_clients=4,
+                                     cap=PROBE_TAKE + 32, seed=1)
+    aligned = align_task_caps([t_a[0], t_b[0]])
+    assert (aligned[0].data["x"].shape[1]
+            == aligned[1].data["x"].shape[1] == PROBE_TAKE + 32)
+    assert group_tasks(aligned) == [[0, 1]]
+
+
+def test_engine_mapping_matches_groups(linear_world, mixed_world):
+    for world, want in ((linear_world, [[0, 1, 2, 3]]),
+                       (mixed_world, [[0, 2], [1, 3]])):
+        tasks, B, avail = world
+        eng = RoundEngine(tasks, B, avail, _cfg("lvr"))
+        assert eng.groups == want
+        for g, grp in enumerate(want):
+            for j, s in enumerate(grp):
+                assert eng.task_gs[s] == (g, j)
+        state = eng.init_state()
+        np.testing.assert_array_equal(
+            np.asarray(state.task_group),
+            [eng.task_gs[s][0] for s in range(eng.S)])
+        np.testing.assert_array_equal(
+            np.asarray(state.task_slot),
+            [eng.task_gs[s][1] for s in range(eng.S)])
+
+
+# ---------------------------------------------------------------------------
+# fused == per-task loop, bit for bit, for every registered method
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+def test_fused_matches_loop_bitwise(linear_world, method):
+    tasks, B, avail = linear_world
+    eng_f = RoundEngine(tasks, B, avail, _cfg(method))
+    eng_l = RoundEngine(tasks, B, avail, _cfg(method, fuse_tasks=False))
+    assert eng_f.fuse_tasks and not eng_l.fuse_tasks
+    sf, mf = eng_f.rollout(eng_f.init_state(), 3)
+    sl, ml = eng_l.rollout(eng_l.init_state(), 3)
+    assert set(mf) == set(ml)
+    for k in mf:
+        np.testing.assert_array_equal(np.asarray(mf[k]), np.asarray(ml[k]),
+                                      err_msg=f"{method} {k}")
+    _tree_equal(sf.params, sl.params, err=f"{method} params")
+    _tree_equal(sf.method_state, sl.method_state, err=f"{method} mstate")
+    np.testing.assert_array_equal(np.asarray(eng_f.evaluate_fn(sf)),
+                                  np.asarray(eng_l.evaluate_fn(sl)),
+                                  err_msg=f"{method} accs")
+
+
+@pytest.mark.parametrize("method", ["lvr", "stalevre", "scaffold", "gvr"])
+def test_fused_matches_loop_mixed_architectures(mixed_world, method):
+    """Two interleaved signature groups: the fused path must scatter each
+    group's stats/metrics back into task order bit-identically."""
+    tasks, B, avail = mixed_world
+    eng_f = RoundEngine(tasks, B, avail, _cfg(method))
+    eng_l = RoundEngine(tasks, B, avail, _cfg(method, fuse_tasks=False))
+    sf, mf = eng_f.rollout(eng_f.init_state(), 3)
+    sl, ml = eng_l.rollout(eng_l.init_state(), 3)
+    for k in mf:
+        np.testing.assert_array_equal(np.asarray(mf[k]), np.asarray(ml[k]),
+                                      err_msg=f"{method} {k}")
+    _tree_equal(sf.params, sl.params, err=f"{method} params")
+    _tree_equal(sf.method_state, sl.method_state, err=f"{method} mstate")
+
+
+def test_fused_matches_loop_under_run_seeds(linear_world):
+    """The seed-fleet dispatch inherits the equivalence on what Table 1
+    consumes: accuracies bitwise, states/monitors to fp tolerance.  The
+    bit-for-bit contract is PER DISPATCH STRUCTURE (rollout/round_step,
+    pinned above): under the ADDITIONAL seed vmap the loss-probe
+    reductions inside the model code regroup between the two task
+    structures (the probes are the hot path — their reductions are not
+    order-pinned the way ``convergence.ordered_sum`` pins the monitors'
+    own sums), and the ulp propagates through the water-filling into the
+    coefficients."""
+    tasks, B, avail = linear_world
+    eng_f = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    eng_l = RoundEngine(tasks, B, avail, _cfg("stalevre",
+                                              fuse_tasks=False))
+    sf, mf, af = eng_f.run_seeds([0, 1, 2], 3)
+    sl, ml, al = eng_l.run_seeds([0, 1, 2], 3)
+    np.testing.assert_array_equal(np.asarray(af), np.asarray(al))
+    for got, want in zip(jax.tree.leaves((sf.params, sf.method_state)),
+                         jax.tree.leaves((sl.params, sl.method_state))):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-7)
+    for k in mf:
+        np.testing.assert_allclose(np.asarray(mf[k]), np.asarray(ml[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# task -> (group, slot) mapping through checkpoints + the deploy path
+# ---------------------------------------------------------------------------
+
+
+def test_mapping_roundtrips_through_checkpoint(mixed_world, tmp_path):
+    tasks, B, avail = mixed_world
+    eng = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    state, _ = eng.rollout(eng.init_state(), 2)
+    checkpoint.save_state(str(tmp_path), state, step=2)
+    restored, step = checkpoint.restore_state(str(tmp_path),
+                                              eng.init_state())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored.task_group),
+                                  np.asarray(state.task_group))
+    np.testing.assert_array_equal(np.asarray(restored.task_slot),
+                                  np.asarray(state.task_slot))
+    for got, want in zip(jax.tree.leaves(restored),
+                         jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and a fresh engine resumes bit-identically from the grouped payload
+    eng2 = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    straight, _ = eng.rollout(eng.init_state(), 4)
+    resumed, _ = eng2.rollout(restored, 2)
+    _tree_equal(straight.params, resumed.params, err="resume params")
+
+
+def test_restore_model_params_slices_grouped_stack(mixed_world, tmp_path):
+    """serve.py's deploy path: one model's params out of a signature-
+    grouped state payload via the persisted task_group/task_slot arrays."""
+    tasks, B, avail = mixed_world
+    eng = RoundEngine(tasks, B, avail, _cfg("lvr"))
+    state, _ = eng.rollout(eng.init_state(), 2)
+    path = checkpoint.save_state(str(tmp_path), state, step=2)
+    for s in range(eng.S):
+        want = eng.task_params(state, s)
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), want)
+        got = checkpoint.restore_model_params(path, like, model=s)
+        _tree_equal(got, want, err=f"model {s}")
+    with pytest.raises(KeyError, match="out of range"):
+        checkpoint.restore_model_params(path, like, model=eng.S)
+
+
+def test_legacy_per_task_state_still_restores(tmp_path):
+    """States with per-task tuples and no mapping (the distributed
+    trainer's layout) keep the legacy ``.params/{model}`` addressing."""
+    p0 = {"w": jnp.arange(6.0).reshape(2, 3)}
+    p1 = {"w": jnp.arange(6.0).reshape(2, 3) + 10.0}
+    state = ExperimentState(params=(p0, p1), method_state=({}, {}),
+                            key=jax.random.PRNGKey(0),
+                            round=jnp.asarray(3, jnp.int32),
+                            losses_ns=jnp.ones((4, 2)))
+    path = checkpoint.save_state(str(tmp_path), state, step=3)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        p1)
+    got = checkpoint.restore_model_params(path, like, model=1)
+    _tree_equal(got, p1, err="legacy layout")
+
+
+# ---------------------------------------------------------------------------
+# buffer donation: rollout/round_step/fleet dispatches reuse input buffers
+# ---------------------------------------------------------------------------
+
+
+def _bulk_buffers(state):
+    """The buffers that dominate peak memory: params + method state (the
+    [N, params] stale stores / variates).  ``losses_ns`` is excluded — the
+    round transition never READS the cache (it rewrites it), so XLA drops
+    the unused input and cannot alias that one small buffer."""
+    return [leaf for leaf in jax.tree.leaves(
+        (state.params, state.method_state)) if isinstance(leaf, jax.Array)]
+
+
+def test_rollout_donates_state_buffers(linear_world):
+    """``rollout`` donates the input ``ExperimentState`` — for a
+    needs_all_updates method the [N, params] stale store dominates peak
+    memory, and donation lets XLA update it in place.  jax marks the
+    donated input buffers deleted after the dispatch."""
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg("stalevr"))   # needs_all + store
+    assert eng.strategy.needs_all_updates
+    state = eng.init_state()
+    jax.block_until_ready(state)
+    assert not any(a.is_deleted() for a in _bulk_buffers(state))
+    out, _ = eng.rollout(state, 2)
+    assert all(a.is_deleted() for a in _bulk_buffers(state))
+    jax.block_until_ready(out)
+    assert not any(a.is_deleted() for a in _bulk_buffers(out))
+    # a donated state must not be reusable (the buffers are gone)
+    with pytest.raises(RuntimeError):
+        jnp.sum(state.params[0]["w"]).block_until_ready()
+
+
+def test_round_step_and_fleet_rollout_donate(linear_world):
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    state = eng.init_state()
+    jax.block_until_ready(state)
+    out, _ = eng.round_step(state)
+    assert all(a.is_deleted() for a in _bulk_buffers(state))
+    states = eng.init_states([0, 1])
+    jax.block_until_ready(states)
+    out_f, _ = eng.rollout_states(states, 2)
+    assert all(a.is_deleted() for a in _bulk_buffers(states))
+    jax.block_until_ready(out_f)
+
+
+def test_donation_aliases_compiled_buffers(linear_world):
+    """Donation is structural, not just bookkeeping: the compiled rollout
+    executable aliases input buffers to outputs (input_output_aliases in
+    the lowered executable)."""
+    tasks, B, avail = linear_world
+    eng = RoundEngine(tasks, B, avail, _cfg("stalevr"))
+    state = eng.init_state()
+    fn = jax.jit(eng._rollout_fn(2), donate_argnums=0)
+    compiled = fn.lower(state).compile()
+    text = compiled.as_text()
+    assert ("input_output_alias" in text
+            or "donated" in compiled.memory_analysis().__repr__().lower()
+            or compiled.memory_analysis().alias_size_in_bytes > 0)
+
+
+# ---------------------------------------------------------------------------
+# facade surface over the grouped layout
+# ---------------------------------------------------------------------------
+
+
+def test_facade_per_task_views_on_grouped_state(mixed_world):
+    from repro.core.server import MMFLServer
+    tasks, B, avail = mixed_world
+    srv = MMFLServer(tasks, B, avail, _cfg("stalevre"))
+    srv.run_round()
+    assert len(srv.params) == 4
+    assert [p["w"].shape[0] for p in srv.params] == [16, 8, 16, 8]
+    assert srv.h_valid.shape == (srv.N, srv.S)
+    assert srv.beta_state.beta_hat.shape == (srv.N, srv.S)

@@ -87,8 +87,11 @@ def test_padded_world_bit_identical(micro_world, method):
         assert np.all(np.asarray(mets_p["beta"])[..., 8:] == 0.0)
     _tree_equal(state.params, state_p.params, err=f"{method} params")
     # per-client method state: real rows identical (leading-N leaves are
-    # sliced; param-shaped leaves like SCAFFOLD's global c compare whole)
-    for st, st_p in zip(state.method_state, state_p.method_state):
+    # sliced via the per-task views; param-shaped leaves like SCAFFOLD's
+    # global c compare whole)
+    for s in range(eng.S):
+        st = eng.task_method_state(state, s)
+        st_p = eng_p.task_method_state(state_p, s)
         for x, y in zip(jax.tree.leaves(st), jax.tree.leaves(st_p)):
             x, y = np.asarray(x), np.asarray(y)
             if x.shape != y.shape:
@@ -106,7 +109,8 @@ def test_padding_never_active(micro_world):
     eng = RoundEngine(tasks_p, B_p, avail_p, _cfg("stalevre"),
                       client_mask=mask)
     state, mets = eng.rollout(eng.init_state(), 4)
-    for st in state.method_state:
+    for s in range(eng.S):
+        st = eng.task_method_state(state, s)
         assert np.all(np.asarray(st["h_valid"])[8:] == 0.0)
     assert np.all(np.asarray(mets["beta"])[..., 8:] == 0.0)
     np.testing.assert_array_equal(np.asarray(state.client_mask), mask)
@@ -172,18 +176,37 @@ def test_run_worlds_matches_per_world_engines(hetero_worlds, method):
                 atol=1e-5, err_msg=f"{method} world {i} {k}")
 
 
-def test_world_fleet_rejects_static_budget_sizing(hetero_worlds):
-    """power_of_choice derives a static top-k size from the budget m; a
-    heterogeneous-budget grid would freeze it at the template world's and
-    silently sample differently than standalone — refused up front."""
+def test_world_fleet_static_budget_sizing_guard(hetero_worlds, monkeypatch):
+    """The structured refusal for strategies whose Python-level sample
+    sizes freeze at the template world's budget.  No registered method
+    carries the flag anymore (power_of_choice turned its sizes into rank
+    masks against the traced per-world m), so the guard is pinned by
+    flagging one."""
+    monkeypatch.setattr(methods.get_class("power_of_choice"),
+                        "static_budget_sizing", True)
     with pytest.raises(ValueError, match="static sample sizes"):
         world_fleet(hetero_worlds, _cfg("power_of_choice"))
 
 
+def test_run_worlds_power_of_choice_hetero_budgets(hetero_worlds):
+    """power_of_choice joins heterogeneous-budget grids: the top-k
+    capacities come from the template's m_host and the per-world rank
+    masks recover each world's own k = round(m/S) — the grid reproduces
+    every standalone engine exactly."""
+    seeds = [0, 1]
+    eng, stacked = world_fleet(hetero_worlds, _cfg("power_of_choice"))
+    _, _, accs = eng.run_worlds(stacked, seeds, 4)
+    for i, (tasks, B, avail) in enumerate(hetero_worlds):
+        e = RoundEngine(tasks, B, avail, _cfg("power_of_choice"))
+        _, _, a1 = e.run_seeds(seeds, 4)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(accs)[i],
+                                      err_msg=f"world {i}")
+
+
 def test_run_worlds_power_of_choice_equal_budgets():
     """With EQUAL total budgets (same B draw, availability varying) the
-    static k matches every world's own, so power_of_choice is allowed and
-    reproduces its standalone engines exactly."""
+    rank masks are all-ones, so the grid reproduces the standalone
+    engines exactly — the pre-mask contract unchanged."""
     worlds = [build_linear_setting(n_models=2, n_clients=12, seed=3,
                                    avail_rate=r) for r in (0.6, 1.0)]
     seeds = [0, 1]
