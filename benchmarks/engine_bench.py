@@ -28,6 +28,14 @@ micro-setting (64 clients, 3 tasks):
     tasks: steady rounds/sec plus the cold build+trace+compile delta
     (the loop's trace grows linearly in S).
 
+  * ``bench_sharded_scaling`` — the client-sharded fused round
+    (``RoundEngine(..., mesh=client_mesh(8))``: shard_map over the client
+    axis, stale stores laid out ``P("data")``) vs the single-device
+    engine on a stats-phase-bound setting; records rounds/sec and
+    analytic per-device state bytes at both device counts, cross-checked
+    against ``roofline.analytic.client_shard_scaling``.  Runs in a
+    subprocess under ``--xla_force_host_platform_device_count=8``.
+
 The paper's CNN world is local-compute-bound on CPU and shows ~1x on both;
 per-round orchestration is exactly what dominates once local training is
 fast or offloaded (the production regime: accelerators own the local step,
@@ -46,6 +54,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 from typing import Dict, Tuple
 
@@ -290,6 +300,87 @@ def bench_task_fusion(method: str = "lvr", s_list=(4, 8, 16),
     return us, derived
 
 
+def _sharded_worker(method: str, n_clients: int, rounds: int,
+                    reps: int) -> None:
+    """Subprocess body for ``bench_sharded_scaling`` (runs under
+    ``--xla_force_host_platform_device_count=8``): measures scanned-rollout
+    rounds/sec on 1 device vs the 8-shard client mesh and cross-checks the
+    engine's per-device byte layout against the roofline scaling model.
+    Prints ONE json line consumed by the parent."""
+    from repro.core import sharding
+    from repro.roofline.analytic import client_shard_scaling
+
+    n_dev = len(jax.devices())
+    tasks, B, avail = build_linear_setting(n_models=3, n_clients=n_clients,
+                                           seed=0)
+
+    def rps(mesh):
+        eng = RoundEngine(tasks, B, avail, _cfg(method), mesh=mesh)
+        state, _ = eng.rollout(eng.init_state(), rounds)   # compile/warm up
+        jax.block_until_ready(state)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state, mets = eng.rollout(state, rounds)
+            jax.block_until_ready(mets)
+            best = min(best, time.perf_counter() - t0)
+        return rounds / best, eng.state_bytes_per_device(state)
+
+    rps_1, bytes_1 = rps(None)
+    rps_n, bytes_n = rps(sharding.client_mesh(n_dev))
+
+    # split total state bytes into client-axis vs replicated footprint
+    # from the engine's own layout accounting at the two device counts,
+    # then cross-check the sharded number against the analytic model
+    report = {
+        "n_devices": n_dev, "n_clients": n_clients,
+        "rps_1": rps_1, "rps_n": rps_n, "speedup": rps_n / rps_1,
+        "bytes_per_dev_1": bytes_1, "bytes_per_dev_n": bytes_n,
+    }
+    client_bytes = (bytes_1 - bytes_n) * n_dev / (n_dev - 1)
+    model = client_shard_scaling(client_bytes, bytes_1 - client_bytes, n_dev)
+    report["model_bytes_per_dev_n"] = model["bytes_per_device"]
+    report["model_amdahl_speedup"] = model["amdahl_speedup"]
+    assert abs(model["bytes_per_device"] - bytes_n) <= n_dev, report
+    print("SHARDED_JSON " + json.dumps(report))
+
+
+def bench_sharded_scaling(method: str = "stalevr", n_clients: int = 512,
+                          rounds: int = 10, reps: int = 3
+                          ) -> Tuple[float, str]:
+    """Client-sharded fused rounds (``RoundEngine(..., mesh=...)``) vs the
+    single-device engine, on a stats-phase-bound linear setting (per-client
+    probe training dominates; sampling + aggregation are the replicated
+    residue).  Runs in a SUBPROCESS with
+    ``--xla_force_host_platform_device_count=8`` because host device count
+    must be fixed before jax initializes; per-device state bytes come from
+    the engine's analytic layout accounting (``state_bytes_per_device``)
+    and are cross-checked against ``roofline.analytic.client_shard_scaling``
+    inside the worker."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-worker",
+         "--method", method, "--n-clients", str(n_clients),
+         "--rounds", str(rounds), "--reps", str(reps)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded worker failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("SHARDED_JSON ")][-1]
+    r = json.loads(line[len("SHARDED_JSON "):])
+    us = 1e6 / r["rps_n"]
+    derived = (f"speedup={r['speedup']:.2f}x;n_devices={r['n_devices']};"
+               f"n_clients={r['n_clients']};rps_sharded={r['rps_n']:.2f};"
+               f"rps_single={r['rps_1']:.2f};"
+               f"bytes_per_dev_sharded={r['bytes_per_dev_n']};"
+               f"bytes_per_dev_single={r['bytes_per_dev_1']};"
+               f"model_amdahl={r['model_amdahl_speedup']:.2f}")
+    return us, derived
+
+
 def _parse(derived: str) -> Dict[str, float]:
     out = {}
     for part in derived.split(";"):
@@ -312,7 +403,17 @@ def main():
                     help="output JSON (default BENCH_engine.json, or "
                          f"{SMOKE_OUT} under --smoke so CI smoke runs "
                          "cannot clobber full-scale numbers)")
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help="internal: run the sharded-scaling measurement in "
+                         "THIS process (spawned by bench_sharded_scaling "
+                         "with the 8-device XLA flag set)")
+    ap.add_argument("--n-clients", type=int, default=512)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--reps", type=int, default=3)
     args = ap.parse_args()
+    if args.sharded_worker:
+        _sharded_worker(args.method, args.n_clients, args.rounds, args.reps)
+        return
     out = args.out or (SMOKE_OUT if args.smoke else "BENCH_engine.json")
     reps = 3 if args.smoke else 10
     rounds = 10 if args.smoke else 30
@@ -328,6 +429,9 @@ def main():
     us_t, d_t = bench_task_fusion(
         "lvr", s_list=(4, 8) if args.smoke else (4, 8, 16),
         rounds=rounds, reps=2 if args.smoke else 3)
+    us_h, d_h = bench_sharded_scaling(
+        "stalevr", n_clients=128 if args.smoke else 512,
+        rounds=rounds, reps=2 if args.smoke else 3)
     report = {
         "method": args.method,
         "smoke": bool(args.smoke),
@@ -337,12 +441,14 @@ def main():
         "world_vmap_vs_loop": {"us_per_world_seed_round": us_g,
                                **_parse(d_g)},
         "task_fusion_vs_loop": {"us_per_round": us_t, **_parse(d_t)},
+        "sharded_scaling": {"us_per_round": us_h, **_parse(d_h)},
     }
     print(f"engine_round_{args.method},{us_f:.1f},{d_f}")
     print(f"engine_scan_{args.method},{us_s:.1f},{d_s}")
     print(f"engine_sweep_{args.method},{us_w:.1f},{d_w}")
     print(f"engine_worlds_{args.method},{us_g:.1f},{d_g}")
     print(f"engine_task_fusion_lvr,{us_t:.1f},{d_t}")
+    print(f"engine_sharded_stalevr,{us_h:.1f},{d_h}")
     with open(out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {os.path.abspath(out)}")

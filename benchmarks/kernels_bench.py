@@ -10,9 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.batched_dot.batched_dot import batched_dot
+from repro.kernels.batched_dot.ops import flatten_cohort
 from repro.kernels.batched_dot.ref import batched_dot_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.stale_agg.ops import stale_delta_pallas, unflatten_like
 from repro.kernels.stale_agg.stale_agg import stale_agg
 from repro.kernels.stale_agg.ref import stale_agg_ref
 
@@ -55,6 +57,44 @@ def bench_stale_agg() -> Tuple[float, float]:
                    interpret=True)
     o2 = stale_agg_ref(coeff, beta, G[:, :4096], h[:, :4096], ss[:4096])
     err = float(np.max(np.abs(np.asarray(o1) - np.asarray(o2))))
+    return us, err
+
+
+def bench_stale_agg_production() -> Tuple[float, float]:
+    """Eq. 18 delta at the ENGINE's production call shape: a 64-client
+    cohort over a ~1M-param multi-leaf pytree, routed through the jit'd
+    pytree wrapper (``stale_delta_pallas`` — what the stale family's
+    ``aggregate`` dispatches per shard when the kernel path is on).  Wall
+    time is the jnp reference at full shape; the correctness delta runs the
+    wrapper in interpret mode on a small pytree against the flattened
+    oracle."""
+    C = 64
+    shapes = [(512, 1024), (1024, 460), (576,)]      # mixed ranks, ~1M params
+    ks = jax.random.split(jax.random.PRNGKey(3), 2 * len(shapes) + 2)
+    G = [jax.random.normal(ks[i], (C,) + s, jnp.bfloat16)
+         for i, s in enumerate(shapes)]
+    h = [jax.random.normal(ks[len(shapes) + i], (C,) + s, jnp.bfloat16)
+         for i, s in enumerate(shapes)]
+    ss = [jnp.ones(s, jnp.float32) * 0.1 for s in shapes]
+    coeff = jax.random.uniform(ks[-2], (C,))
+    beta = jax.random.uniform(ks[-1], (C,))
+    Gf, hf = flatten_cohort(G), flatten_cohort(h)
+    ssf = jnp.concatenate([l.reshape(-1) for l in ss])
+    ref = jax.jit(stale_agg_ref)
+    us = _time(ref, coeff, beta, Gf, hf, ssf)
+
+    small = [(32, 64), (48,)]
+    Gs = [jax.random.normal(ks[i], (C,) + s, jnp.bfloat16)
+          for i, s in enumerate(small)]
+    hs = [jax.random.normal(ks[2 + i], (C,) + s, jnp.bfloat16)
+          for i, s in enumerate(small)]
+    sss = [jnp.ones(s, jnp.float32) * 0.1 for s in small]
+    o1 = stale_delta_pallas(coeff, Gs, hs, beta, sss, interpret=True)
+    o2 = unflatten_like(
+        stale_agg_ref(coeff, beta, flatten_cohort(Gs), flatten_cohort(hs),
+                      jnp.concatenate([l.reshape(-1) for l in sss])), sss)
+    err = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+              for a, b in zip(jax.tree.leaves(o1), jax.tree.leaves(o2)))
     return us, err
 
 

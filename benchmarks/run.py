@@ -39,6 +39,18 @@ def _reject_smoke_payloads() -> None:
             f"run).  Smoke output belongs in BENCH_engine.smoke.json; "
             f"restore the full-scale file with "
             f"`python benchmarks/engine_bench.py`")
+    sharded = payload.get("sharded_scaling")
+    if sharded is None:
+        sys.exit(
+            f"{path} predates the client-sharded tier (no "
+            f"'sharded_scaling' entry); regenerate with "
+            f"`python benchmarks/engine_bench.py`")
+    if sharded.get("n_clients", 0) < 512:
+        sys.exit(
+            f"{path} carries a smoke-scale sharded_scaling entry "
+            f"(n_clients={sharded.get('n_clients')}); full-scale runs "
+            f"use >= 512 clients — regenerate with "
+            f"`python benchmarks/engine_bench.py`")
 
 
 def main() -> None:
@@ -89,6 +101,10 @@ def main() -> None:
     # --- kernels (derived = max error vs oracle) ---------------------------
     timed("kernel_batched_dot", kernels_bench.bench_batched_dot)
     timed("kernel_stale_agg", kernels_bench.bench_stale_agg)
+    # engine-shaped cohort x pytree wrapper path (what the stale family
+    # dispatches per shard on TPU; derived = max error vs oracle)
+    timed("kernel_stale_agg_production",
+          kernels_bench.bench_stale_agg_production)
     timed("kernel_flash_attention", kernels_bench.bench_flash_attention)
 
     # --- round engine (derived = fused-jit vs eager rounds/sec) ------------
@@ -103,6 +119,10 @@ def main() -> None:
     # vmapped task axis vs per-task loop (signature-grouped stacks;
     # derived = rounds/sec win + cold compile delta at S=8)
     timed("engine_task_fusion_lvr", engine_bench.bench_task_fusion)
+    # client-sharded fused round vs single device (8-way host client mesh
+    # in a subprocess; derived = rounds/sec ratio + per-device state bytes
+    # cross-checked against the roofline scaling model)
+    timed("engine_sharded_stalevr", engine_bench.bench_sharded_scaling)
 
 
 if __name__ == "__main__":

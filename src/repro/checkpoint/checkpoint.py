@@ -139,19 +139,26 @@ def save_state(directory: str, state: Any, step: int,
 
 
 def restore_state(directory: str, like: Any, step: Optional[int] = None,
-                  prefix: str = "state_") -> Tuple[Optional[Any],
-                                                   Optional[int]]:
+                  prefix: str = "state_",
+                  shardings: Optional[Any] = None) -> Tuple[Optional[Any],
+                                                            Optional[int]]:
     """Restore a full experiment state saved by ``save_state``.
 
     ``like`` is a shape/dtype template with the same tree structure (e.g. a
     freshly built ``ExperimentState``).  ``step=None`` picks the latest
     checkpoint in the directory.  Returns ``(state, step)`` or
-    ``(None, None)`` when no checkpoint exists."""
+    ``(None, None)`` when no checkpoint exists.
+
+    ``shardings`` (e.g. a client-sharded engine's ``state_shardings``)
+    places the restored leaves straight into their mesh layout — the
+    payload itself is mesh-shape-agnostic (``save`` gathers to numpy), so
+    a run saved on an 8-shard mesh restores onto 1 device and back."""
     if step is None:
         step = latest_step(directory, prefix)
     if step is None:
         return None, None
-    return restore(os.path.join(directory, f"{prefix}{step}"), like), step
+    return restore(os.path.join(directory, f"{prefix}{step}"), like,
+                   shardings=shardings), step
 
 
 def latest_step(directory: str, prefix: str = "ckpt_") -> Optional[int]:

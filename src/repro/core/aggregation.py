@@ -28,9 +28,26 @@ def tree_weighted_sum(coeffs: jnp.ndarray, updates: Any) -> Any:
         lambda u: jnp.tensordot(coeffs.astype(u.dtype), u, axes=(0, 0)), updates)
 
 
-def aggregate(w: Any, updates: Any, coeffs: jnp.ndarray) -> Any:
-    """w^{tau+1} = w^tau - sum_c P_c G_c  (Eq. 3)."""
-    delta = tree_weighted_sum(coeffs, updates)
+def psum_tree(tree: Any, axis_name: Optional[str]) -> Any:
+    """Cross-shard sum of a per-shard partial pytree (identity when
+    ``axis_name`` is None).  This is the one collective the client-sharded
+    round path adds: per-shard contractions over the local client block
+    followed by one ``psum`` over the mesh axis — equal to the global
+    contraction up to reduction-order ulps (the documented sharding
+    tolerance, tests/test_sharding.py)."""
+    if axis_name is None:
+        return tree
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
+
+
+def aggregate(w: Any, updates: Any, coeffs: jnp.ndarray,
+              axis_name: Optional[str] = None) -> Any:
+    """w^{tau+1} = w^tau - sum_c P_c G_c  (Eq. 3).
+
+    ``axis_name``: mesh axis to ``psum`` the per-shard partial delta over —
+    the client-sharded round path, where ``updates``/``coeffs`` cover only
+    the local client block."""
+    delta = psum_tree(tree_weighted_sum(coeffs, updates), axis_name)
     return jax.tree.map(lambda a, b: a - b.astype(a.dtype), w, delta)
 
 
@@ -72,7 +89,8 @@ def stale_delta(coeffs: jnp.ndarray, G: Any, h: Any, beta: jnp.ndarray,
 
 def stale_delta_onedot(coeffs: jnp.ndarray, G: Any, h_cohort: Any,
                        beta_cohort: jnp.ndarray, h: Any,
-                       stale_weights: jnp.ndarray) -> Any:
+                       stale_weights: jnp.ndarray,
+                       axis_name: Optional[str] = None) -> Any:
     """Eq. (18)'s Delta as ONE explicit contraction per leaf:
 
       Delta = sum_n stale_weights_n h_n + sum_a coeffs_a (G_a - beta_a h_a)
@@ -90,7 +108,13 @@ def stale_delta_onedot(coeffs: jnp.ndarray, G: Any, h_cohort: Any,
     exact +0.0 terms wherever their rows land.
 
     coeffs/beta_cohort: [A]; G/h_cohort: [A, ...] pytrees; h: [N, ...]
-    store; stale_weights: [N] (d * beta, zero off-support)."""
+    store; stale_weights: [N] (d * beta, zero off-support).
+
+    ``axis_name``: under the client-sharded round every argument covers one
+    shard's client block (h/stale_weights the local [N/n_shards] store
+    rows, G/coeffs the local cohort slots) and the per-shard one-dot
+    partials are ``psum``-reduced into the global Delta — the Eq. 18
+    contraction as an explicit ordered collective."""
     wts = jnp.concatenate([stale_weights, coeffs])
 
     def leaf(hh, gg, hc):
@@ -100,7 +124,7 @@ def stale_delta_onedot(coeffs: jnp.ndarray, G: Any, h_cohort: Any,
         rows = jnp.concatenate([hh.astype(gg.dtype), fresh], axis=0)
         return jnp.tensordot(wts.astype(gg.dtype), rows, axes=(0, 0))
 
-    return jax.tree.map(leaf, h, G, h_cohort)
+    return psum_tree(jax.tree.map(leaf, h, G, h_cohort), axis_name)
 
 
 def apply_delta(w: Any, delta: Any) -> Any:

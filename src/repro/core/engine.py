@@ -39,6 +39,22 @@ method.  The ``round_step``/``rollout``/fleet dispatches donate their input
 state (``donate_argnums``), so the [N, params] all-client update buffers
 and StaleVR stale stores update in place instead of doubling peak memory.
 
+**Client-sharded rounds.**  ``RoundEngine(mesh=sharding.client_mesh(k))``
+shards the CLIENT axis of the fused round over a 1-D device mesh
+(``repro.core.sharding``): the [N, params] stale stores, the all-client
+update buffers, ``losses_ns`` and the client mask live as
+``NamedSharding(("data",))`` blocks — no client-indexed array ever needs to
+fit one device — while the per-client math stays bitwise the single-device
+math (the index-keyed RNG makes the client index space shardable by
+construction).  Cross-client reductions become explicit collectives:
+loss/norm columns ``all_gather`` into the replicated sampling phase (the
+water-filling solve and the Sec. 3.3 monitors run on every shard from
+identical inputs, bit-identical to the reference), and each strategy's
+aggregation contraction ``psum``s its per-shard partial (the documented
+ulp-level sharding tolerance; the single-device path never enters the
+sharded body and stays the bit-reference).  See ROADMAP.md
+§"Client-sharding contract".
+
 ``repro.core.server.MMFLServer`` is a thin stateful facade over this module
 (attribute views like ``h_valid``/``beta_state`` preserved); the strategy
 protocol is unchanged (``repro.core.methods``).
@@ -52,8 +68,10 @@ from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core import convergence, methods, sampling, stale
+from repro.core import convergence, methods, sampling, sharding, stale
 
 
 @dataclasses.dataclass
@@ -220,15 +238,23 @@ class World(NamedTuple):
     v_real: jnp.ndarray       # scalar f32: true sum(B) (m = rate * v_real)
 
 
-def _group_stack_trees(trees: Sequence[Any]) -> Any:
+def _group_stack_trees(trees: Sequence[Any], put: Optional[Callable] = None
+                       ) -> Any:
     """Stack a list of identically-shaped pytrees along a new leading axis
-    (a group of 1 still gains the axis — the layout is uniform)."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    (a group of 1 still gains the axis — the layout is uniform).  ``put``
+    (client-sharded engines) stacks on HOST and places each leaf straight
+    into its sharded layout, so the stacked array never materializes on a
+    single device."""
+    if put is None:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    return jax.tree.map(
+        lambda *xs: put(np.stack([np.asarray(x) for x in xs])), *trees)
 
 
 def build_world_arrays(tasks: Sequence["Task"], B: Any, avail: Any,
                        client_mask: Optional[Any] = None,
-                       v_total: Optional[int] = None) -> World:
+                       v_total: Optional[int] = None,
+                       data_put: Optional[Callable] = None) -> World:
     """Host-side construction of the ``World`` pytree.
 
     All derived quantities that must be bit-identical between a world and
@@ -268,7 +294,8 @@ def build_world_arrays(tasks: Sequence["Task"], B: Any, avail: Any,
                  * (np.arange(v_total) < v_real)).astype(np.float32)
     groups = group_tasks(tasks)
     return World(
-        data=tuple(_group_stack_trees([tasks[i].data for i in grp])
+        data=tuple(_group_stack_trees([tasks[i].data for i in grp],
+                                      put=data_put)
                    for grp in groups),
         test=tuple(_group_stack_trees([tasks[i].test for i in grp])
                    for grp in groups),
@@ -289,12 +316,44 @@ class RoundEngine:
     def __init__(self, tasks: Sequence[Task], B: np.ndarray,
                  avail: np.ndarray, cfg: ServerConfig,
                  client_mask: Optional[np.ndarray] = None,
-                 cohort_size: Optional[int] = None):
+                 cohort_size: Optional[int] = None,
+                 mesh: Optional[Any] = None):
         self.tasks = list(tasks)
         self.cfg = cfg
         self.S = len(tasks)
         self.N = int(np.asarray(B).shape[0])
-        self.world = build_world_arrays(tasks, B, avail, client_mask)
+        # client-sharded mode: a 1-D jax.sharding.Mesh over the client axis
+        # (``core.sharding.client_mesh``) lays every client-indexed leaf out
+        # as NamedSharding blocks and runs the round under shard_map
+        self.mesh = mesh
+        self.n_shards = (1 if mesh is None
+                         else int(np.prod(mesh.devices.shape)))
+        data_put = None
+        if mesh is not None:
+            if tuple(mesh.axis_names) != (sharding.CLIENT_AXIS,):
+                raise ValueError(
+                    f"mesh must be 1-D over the client axis "
+                    f"({sharding.CLIENT_AXIS!r}, core.sharding.client_mesh);"
+                    f" got axes {tuple(mesh.axis_names)}")
+            if self.N % self.n_shards:
+                raise ValueError(
+                    f"N={self.N} clients must divide evenly over "
+                    f"{self.n_shards} mesh shards — pad the world (the "
+                    f"trailing-padding client_mask contract already "
+                    f"supports zero-budget padding clients)")
+            if not getattr(cfg, "jit_round", True):
+                raise ValueError("client-sharded engines require "
+                                 "jit_round=True (the legacy eager path is "
+                                 "single-device only)")
+            # group-stacked client shards are the ONLY data residency:
+            # stack on host and place each group straight into its
+            # [task, client-sharded] layout — no [N, cap, ...] array ever
+            # materializes on one device
+            data_sh = NamedSharding(mesh, sharding.spec_for(True, lead=1))
+            data_put = lambda a: jax.device_put(a, data_sh)
+        self.n_loc = self.N // self.n_shards
+        self.world = build_world_arrays(tasks, B, avail, client_mask,
+                                        data_put=data_put)
         self.B = self.world.B
         self.B_int = np.asarray(B, np.int64)
         self._B_host = np.asarray(B, np.float32)
@@ -340,23 +399,56 @@ class RoundEngine:
         self._task_slot_np = np.asarray([j for _, j in self.task_gs],
                                         np.int32)
         self.fuse_tasks = bool(getattr(cfg, "fuse_tasks", True))
+        if mesh is not None:
+            if not self.strategy.shardable:
+                raise ValueError(
+                    f"method {cfg.method!r} sets shardable=False — its "
+                    f"aggregation reads cross-client state that is not "
+                    f"expressible as a per-shard partial + psum; run it "
+                    f"single-device")
+            if not self.fuse_tasks:
+                raise ValueError(
+                    "client-sharded engines require fuse_tasks=True (the "
+                    "per-task loop path materializes per-task data views, "
+                    "defeating the sharded residency)")
+        # lazily-materialized per-task views of the group-stacked World
+        # data/test (the single residency authority; only legacy/loop
+        # paths and external probes read per-task views)
+        self._task_data_views: Dict[int, Any] = {}
+        self._task_test_views: Dict[int, Any] = {}
         # per-task pure building blocks (the loop path + the facade's
         # legacy eager mode; the fused path vmaps the group closures below)
         self._local_all = [self._make_local_all(t) for t in self.tasks]
-        self._loss_all = [self._make_loss_all(t) for t in self.tasks]
-        self._stats_pure = [self.make_stats_fn(s) for s in range(self.S)]
-        self._round_pure = [self.make_round_fn(s) for s in range(self.S)]
-        self._g_stats = [self.make_group_stats_fn(g)
-                         for g in range(self.n_groups)]
-        self._g_round = [self.make_group_round_fn(g)
-                         for g in range(self.n_groups)]
-        self.loss_all_jit = [jax.jit(f) for f in self._loss_all]
+        if mesh is None:
+            self._loss_all = [self._make_loss_all(s) for s in range(self.S)]
+            self._stats_pure = [self.make_stats_fn(s)
+                                for s in range(self.S)]
+            self._round_pure = [self.make_round_fn(s)
+                                for s in range(self.S)]
+            self._g_stats = [self.make_group_stats_fn(g)
+                             for g in range(self.n_groups)]
+            self._g_round = [self.make_group_round_fn(g)
+                             for g in range(self.n_groups)]
+            self.loss_all_jit = [jax.jit(f) for f in self._loss_all]
+        else:
+            # the unsharded closures bind probe slices / per-task views of
+            # the (sharded) data stacks — never built under a mesh; every
+            # path that would consume them is refused
+            self._loss_all = self._stats_pure = self._round_pure = None
+            self._g_stats = self._g_round = None
+            self.loss_all_jit = None
         self.eval_jit = [jax.jit(lambda params, test, acc=t.model.accuracy:
                                  acc(params, test)) for t in self.tasks]
         # the input state is donated: the [N, params] stale stores /
         # all-client update buffers update in place instead of doubling
-        # peak memory (tests/test_task_fusion.py asserts the donation)
-        self.round_step = jax.jit(self.round_step_fn, donate_argnums=0)
+        # peak memory (tests/test_task_fusion.py asserts the donation);
+        # under a mesh the donation preserves the sharded buffers in place
+        if mesh is None:
+            self.round_step = jax.jit(self.round_step_fn, donate_argnums=0)
+        else:
+            self._build_sharded()
+            self.round_step = (
+                lambda st: self._sharded_step(st, self.world.data))
         self._rollout_cache: Dict[int, Callable] = {}
         self._run_seeds_cache: Dict[int, Callable] = {}
         self._fleet_init_fn: Optional[Callable] = None
@@ -388,12 +480,36 @@ class RoundEngine:
     def per_task_method_state(self, state: ExperimentState) -> List[Any]:
         return [self.task_method_state(state, s) for s in range(self.S)]
 
+    def task_data(self, s: int) -> Dict[str, jnp.ndarray]:
+        """Task s's client shards as a slot view of the group-stacked
+        ``World.data`` (the single residency authority — the engine never
+        reads ``Task.data`` after ``build_world_arrays``).  Materialized
+        lazily and cached: the fused round consumes the stacks directly;
+        only the legacy/loop paths and external probes (``MMFLServer``'s
+        eager mode, ``server._run_round_legacy``) pay for a per-task
+        copy."""
+        v = self._task_data_views.get(s)
+        if v is None:
+            g, j = self.task_gs[s]
+            v = jax.tree.map(lambda a: a[j], self.world.data[g])
+            self._task_data_views[s] = v
+        return v
+
+    def task_test(self, s: int) -> Dict[str, jnp.ndarray]:
+        """Task s's server-held eval set (slot view of ``World.test``)."""
+        v = self._task_test_views.get(s)
+        if v is None:
+            g, j = self.task_gs[s]
+            v = jax.tree.map(lambda a: a[j], self.world.test[g])
+            self._task_test_views[s] = v
+        return v
+
     def _task_data(self, w: World, s: int, explicit: bool):
-        """Task s's client shards: the engine's own host arrays on the
-        closed-over path, a slot slice of the traced group stack under
-        ``run_worlds``."""
+        """Task s's client shards: a cached slot view of the engine's own
+        stacks on the closed-over path, a slot slice of the traced group
+        stack under ``run_worlds``."""
         if not explicit:
-            return self.tasks[s].data
+            return self.task_data(s)
         g, j = self.task_gs[s]
         return jax.tree.map(lambda a: a[j], w.data[g])
 
@@ -435,14 +551,20 @@ class RoundEngine:
 
         return local_all
 
-    def _make_loss_all(self, t: Task):
+    def _make_loss_all(self, s: int):
+        t = self.tasks[s]
         loss_fn = t.model.loss_fn
-        # probe batch sliced ONCE at build time: inside jit/scan the task
-        # data is a closed-over constant, and slicing it in-trace makes XLA
+        # probe batch sliced ONCE at build time (from the stacked World
+        # authority — ``jnp.stack`` copies exactly, so the slot rows are
+        # bitwise ``Task.data``'s): inside jit/scan the task data is a
+        # closed-over constant, and slicing it in-trace makes XLA
         # constant-fold a second copy of the dataset into the executable
-        cap = t.data["x"].shape[1]
+        g, j = self.task_gs[s]
+        stacked = self.world.data[g]
+        cap = int(stacked["x"].shape[2])
         take = min(cap, PROBE_TAKE)
-        probe_x, probe_y = t.data["x"][:, :take], t.data["y"][:, :take]
+        probe_x = stacked["x"][j, :, :take]
+        probe_y = stacked["y"][j, :, :take]
 
         def loss_all(params, data=None):
             """Per-client loss estimate on a (subsampled) local batch.
@@ -659,12 +781,309 @@ class RoundEngine:
             out = out.at[np.asarray(grp)].set(parts[g])
         return out
 
-    def _to_task_cols(self, parts: Sequence[jnp.ndarray]) -> jnp.ndarray:
-        """Per-group [G_s, N] stats rows -> the sampler's [N, S] columns."""
-        out = jnp.zeros((self.N, self.S), parts[0].dtype)
+    def _to_task_cols(self, parts: Sequence[jnp.ndarray],
+                      n: Optional[int] = None) -> jnp.ndarray:
+        """Per-group [G_s, n] stats rows -> the sampler's [n, S] columns
+        (``n`` defaults to N; the sharded body assembles shard-local
+        [n_loc, S] blocks)."""
+        out = jnp.zeros((self.N if n is None else n, self.S),
+                        parts[0].dtype)
         for g, grp in enumerate(self.groups):
             out = out.at[:, np.asarray(grp)].set(parts[g].T)
         return out
+
+    # ------------------------------------------------------------------
+    # client-sharded round: the same transition over mesh-local blocks
+    # ------------------------------------------------------------------
+    def _mstate_flags(self, g: int) -> Any:
+        """Boolean client-axis flags for group g's (single-task) method
+        state, from the strategy's EXPLICIT declaration
+        (``MethodStrategy.state_client_axes`` — never shape inference: a
+        global params-shaped leaf can collide with N in its first dim)."""
+        s0 = self.groups[g][0]
+        struct = jax.eval_shape(
+            lambda k: self.strategy.init_state(
+                self.tasks[s0].model.init(k), self.N),
+            jax.random.PRNGKey(0))
+        return self.strategy.state_client_axes(struct)
+
+    def _build_sharded(self) -> None:
+        """State/data PartitionSpecs, NamedShardings, and the jitted
+        shard_map step for the client mesh.
+
+        Layout contract (ROADMAP.md §"Client-sharding contract"): params
+        and global method-state leaves replicate; method-state leaves the
+        strategy flags as client-indexed shard their post-group-stack axis
+        (``spec_for(..., lead=1)``); ``losses_ns`` and ``client_mask``
+        shard their leading [N] axis; the group-stacked data shards axis 1
+        ([task, client, ...])."""
+        P = PartitionSpec
+        axis = sharding.CLIENT_AXIS
+        struct = jax.eval_shape(self._init_from_key, jax.random.PRNGKey(0))
+        self.state_specs = ExperimentState(
+            params=jax.tree.map(lambda _: P(), struct.params),
+            method_state=tuple(
+                jax.tree.map(lambda f: sharding.spec_for(bool(f), lead=1),
+                             self._mstate_flags(g))
+                for g in range(self.n_groups)),
+            key=P(), round=P(), losses_ns=P(axis), client_mask=P(axis),
+            task_group=P(), task_slot=P())
+        self.state_shardings = sharding.tree_shardings(self.mesh,
+                                                       self.state_specs)
+        self.data_spec = P(None, axis)
+        self._sharded_body = self._make_sharded_body()
+        step = shard_map(self._sharded_body, mesh=self.mesh,
+                         in_specs=(self.state_specs, self.data_spec),
+                         out_specs=(self.state_specs, P()),
+                         check_rep=False)
+        self._sharded_step = jax.jit(step, donate_argnums=0)
+        self._init_sharded = jax.jit(
+            lambda params, key: self._assemble_state(params, key),
+            out_shardings=self.state_shardings)
+
+    def state_bytes_per_device(self, state: ExperimentState) -> int:
+        """Analytic per-device bytes of ``state`` under the engine's layout
+        (host CPU meshes expose no ``memory_stats`` to measure against) —
+        the quantity ``BENCH_engine.json``'s ``sharded_scaling`` records."""
+        if self.mesh is None:
+            return sharding.tree_bytes_per_device(
+                state, jax.tree.map(lambda _: PartitionSpec(), state), 1)
+        return sharding.tree_bytes_per_device(state, self.state_specs,
+                                              self.n_shards)
+
+    def _refuse_mesh(self, what: str) -> None:
+        if self.mesh is not None:
+            raise NotImplementedError(
+                f"{what} is not available on a client-sharded engine "
+                f"(mesh over {self.n_shards} devices): the seed/world "
+                f"fleet axes would multiply every sharded client-state "
+                f"leaf; run fleets single-device, or shard one run at a "
+                f"time")
+
+    def _make_group_stats_loc(self, g: int) -> Callable:
+        """Group g's stats phase over ONE shard's client block.  Identical
+        per-client math to ``make_group_stats_fn``: probe rows are
+        per-client-independent, and the index-keyed training streams
+        depend only on (key, global client index) — ``off`` shifts the key
+        index space to the shard's global offset, so the local block
+        reproduces bitwise the rows the single-device pass computes for
+        those clients.  Probe slicing happens in-trace here: the data is a
+        traced shard_map input (nothing to constant-fold)."""
+        grp = self.groups[g]
+        strat, n_loc = self.strategy, self.n_loc
+        loss_fn = self.tasks[grp[0]].model.loss_fn
+        local_all = self._local_all[grp[0]]
+        take = min(int(self.world.data[g]["x"].shape[2]), PROBE_TAKE)
+
+        def one_task(params, data, key, lr, off):
+            px, py = data["x"][:, :take], data["y"][:, :take]
+            losses = jax.vmap(lambda xc, yc: loss_fn(params,
+                                                     {"x": xc, "y": yc})
+                              )(px, py)
+            if not strat.needs_all_updates:
+                return losses, None, None
+            keys = sampling.index_keys(key, n_loc, offset=off)
+            G, _ = local_all(params, keys, data, lr)
+            norms = None
+            if strat.needs_grad_norms:
+                norms = jnp.sqrt(jnp.maximum(
+                    stale.batched_tree_dot(G, G), 0.0))
+            return losses, G, norms
+
+        def stats_g(params_g, data_g, keys_g, lr, off):
+            if len(grp) == 1:
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                out = one_task(sq(params_g), sq(data_g), keys_g[0], lr, off)
+                return jax.tree.map(lambda a: a[None], out)
+            return jax.vmap(one_task, in_axes=(0, 0, 0, None, None))(
+                params_g, data_g, keys_g, lr, off)
+
+        return stats_g
+
+    def _make_group_round_loc(self, g: int) -> Callable:
+        """Group g's per-task round over ONE shard's client block.
+
+        Cohort selection matches the single-device ``make_round_fn``
+        slot-for-slot: there, stable ``argsort(-act_client)[:cohort]``
+        puts active client c in slot rank(c) = #actives with smaller
+        index, keyed ``fold_in(train_in, slot)``.  Here every shard
+        derives the global ranks from the replicated activity vector
+        (exact integer cumsum), trains its LOCAL members of the global
+        cohort under their global-rank keys (local capacity ``min(cohort,
+        n_loc)``), and zero-weights overflow actives (rank >= cohort)
+        exactly as the single-device capacity drop excludes them.
+        Per-client updates are bitwise the single-device ones; only the
+        cross-shard delta reduction (the strategy's psum) regroups partial
+        sums at ulp level."""
+        grp = self.groups[g]
+        strat = self.strategy
+        N, n_loc, cohort = self.N, self.n_loc, self.cohort_size
+        cohort_loc = min(cohort, n_loc)
+        local_all = self._local_all[grp[0]]
+        axis = sharding.CLIENT_AXIS
+
+        def round_one(params, state, train_in, p_col, act_v, data,
+                      lr, round_idx, view, off):
+            d_col, d_v_col, B_v, proc, cmask = view    # replicated [N]/[V]
+            coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
+            coeff_client = jnp.zeros((N,)).at[proc].add(coeffs_v)
+            act_client = (jnp.zeros((N,)).at[proc]
+                          .add(act_v) > 0).astype(jnp.float32)
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, off, n_loc)
+            coeff_loc, act_loc = sl(coeff_client), sl(act_client)
+            d_loc, cmask_loc = sl(d_col), sl(cmask)
+            if strat.needs_all_updates:
+                idx = jnp.arange(n_loc)
+                G, coeff, act = train_in, coeff_loc, act_loc
+            else:
+                acts_i = act_client.astype(jnp.int32)
+                rank = jnp.cumsum(acts_i) - acts_i           # [N] exact
+                rank_loc = sl(rank)
+                in_cohort = act_loc * (rank_loc < cohort)
+                idx = jnp.argsort(-in_cohort)[:cohort_loc]
+                slot_keys = jax.vmap(
+                    lambda i: jax.random.fold_in(train_in, i))(
+                    rank_loc[idx])
+                data_c = jax.tree.map(lambda x: x[idx], data)
+                corr = strat.local_correction(state, idx)
+                G, _ = local_all(params, slot_keys, data_c, lr, corr)
+                coeff = coeff_loc[idx] * in_cohort[idx]
+                act = in_cohort[idx]
+            return strat.aggregate(
+                params, state, G, coeff, act, idx,
+                d_col=d_loc, lr=lr, round_idx=round_idx, mask=cmask_loc,
+                axis_name=axis)
+
+        def round_g(params_g, state_g, train_in_g, p_g, act_g,
+                    data_g, lr, round_idx, view_g, off):
+            if len(grp) == 1:
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                d_col, d_v_col, B_v, proc, cmask = view_g
+                out = round_one(sq(params_g), sq(state_g), sq(train_in_g),
+                                p_g[0], act_g[0], sq(data_g), lr, round_idx,
+                                (d_col[0], d_v_col[0], B_v, proc, cmask),
+                                off)
+                return jax.tree.map(lambda a: a[None], out)
+            return jax.vmap(
+                round_one,
+                in_axes=(0, 0, 0, 0, 0, 0, None, None,
+                         (0, 0, None, None, None), None))(
+                params_g, state_g, train_in_g, p_g, act_g,
+                data_g, lr, round_idx, view_g, off)
+
+        return round_g
+
+    def _make_sharded_body(self) -> Callable:
+        """The whole round — local stats, loss gather, replicated sampling
+        and monitors, per-group round — as ONE function of mesh-LOCAL
+        client blocks, to be wrapped in ``shard_map``.
+
+        Replicated quantities (the [V, S] sampling arrays, the
+        water-filling solve, the Sec. 3.3 monitors) are computed
+        identically on every shard from the all-gathered loss/norm columns
+        — bit-identical to the single-device sampling phase by
+        construction.  Cross-client contractions happen inside the
+        strategies as per-shard partials + ``psum``
+        (``aggregate(axis_name=)``), which regroups partial sums: the
+        documented ulp-level sharding tolerance (tests/test_sharding.py).
+        The single-device path never enters this body and stays the
+        bit-reference."""
+        cfg, S = self.cfg, self.S
+        strat = self.strategy
+        axis = sharding.CLIENT_AXIS
+        n_loc, groups = self.n_loc, self.groups
+        # replicated world columns (O(N·S)/O(V·S) vectors — the arrays the
+        # sharding exists for, the [N, cap/params] ones, never close over)
+        d_full, d_v, B_v = self.d, self._d_v, self._B_v
+        proc, proc_mask = self.proc_client, self.world.proc_mask
+        cmask_full = self.world.client_mask
+        g_stats = [self._make_group_stats_loc(g)
+                   for g in range(self.n_groups)]
+        g_round = [self._make_group_round_loc(g)
+                   for g in range(self.n_groups)]
+
+        def body(state: ExperimentState, data: Tuple[Any, ...]
+                 ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
+            off = jax.lax.axis_index(axis) * n_loc
+            round_f = state.round.astype(jnp.float32)
+            lr = jnp.float32(cfg.lr) * jnp.float32(cfg.lr_decay) ** round_f
+            keys = jax.random.split(state.key, 2 + S)
+            new_key, k_sample = keys[0], keys[1]
+            task_keys = keys[2:]
+
+            # ---- 1) stats on the local client block ---------------------
+            stats = [g_stats[g](state.params[g], data[g],
+                                task_keys[np.asarray(grp)], lr, off)
+                     for g, grp in enumerate(groups)]
+            losses_loc = self._to_task_cols([st[0] for st in stats],
+                                            n=n_loc)           # [n_loc,S]
+            losses_ns = jax.lax.all_gather(losses_loc, axis, axis=0,
+                                           tiled=True)         # [N,S] repl
+            norms_ns = None
+            if strat.needs_grad_norms:
+                norms_ns = jax.lax.all_gather(
+                    self._to_task_cols([st[2] for st in stats], n=n_loc),
+                    axis, axis=0, tiled=True)
+
+            # ---- 2) sampling (replicated: every shard computes the same
+            # [V,S] arrays from the same gathered columns) ----------------
+            ctx = self.sampler_ctx(state.round)
+            if self.probabilities_hook is not None:
+                p = self.probabilities_hook(ctx, losses_ns, norms_ns)
+            else:
+                p = strat.probabilities(ctx, losses_ns, norms_ns)
+            p = p * proc_mask[:, None]
+            active = strat.sample(k_sample, p, ctx, losses_ns)
+            active = active * proc_mask[:, None]
+
+            # ---- 3) Sec. 3.3 monitors (the single-device subgraph on the
+            # replicated sampling arrays: bitwise the unsharded metrics) --
+            metrics = self.sampling_metrics(p, active, losses_ns)
+
+            # ---- 4) per-group round on local blocks ---------------------
+            new_params, new_mstate, beta_parts = [], [], []
+            for g, grp in enumerate(groups):
+                ia = np.asarray(grp)
+                train_in = (stats[g][1] if strat.needs_all_updates
+                            else task_keys[ia])
+                view = (d_full[:, ia].T, d_v[:, ia].T, B_v, proc,
+                        cmask_full)
+                new_w, new_st, extras = g_round[g](
+                    state.params[g], state.method_state[g], train_in,
+                    p[:, ia].T, active[:, ia].T, data[g], lr, round_f,
+                    view, off)
+                new_params.append(new_w)
+                new_mstate.append(new_st)
+                beta_parts.append(extras.get("beta"))
+            if beta_parts[0] is not None:
+                beta_loc = self._scatter_tasks(beta_parts,
+                                               tail_shape=(n_loc,))
+                metrics["beta"] = jax.lax.all_gather(
+                    beta_loc, axis, axis=1, tiled=True)        # [S,N] repl
+            new_state = ExperimentState(
+                params=tuple(new_params), method_state=tuple(new_mstate),
+                key=new_key, round=state.round + 1, losses_ns=losses_loc,
+                client_mask=state.client_mask, task_group=state.task_group,
+                task_slot=state.task_slot)
+            return new_state, metrics
+
+        return body
+
+    def _sharded_rollout(self, n_rounds: int) -> Callable:
+        """``rollout``'s lax.scan placed INSIDE the shard_map (collectives
+        scan fine; one executable per chunk length, donated carry)."""
+        body = self._sharded_body
+
+        def roll(state, data):
+            def step(st, _):
+                return body(st, data)
+            return jax.lax.scan(step, state, None, length=n_rounds)
+
+        fn = shard_map(roll, mesh=self.mesh,
+                       in_specs=(self.state_specs, self.data_spec),
+                       out_specs=(self.state_specs, PartitionSpec()),
+                       check_rep=False)
+        return jax.jit(fn, donate_argnums=0)
 
     # ------------------------------------------------------------------
     # state constructors
@@ -679,10 +1098,33 @@ class RoundEngine:
         state carries."""
         if key is None:
             key = jax.random.PRNGKey(self.cfg.seed if seed is None else seed)
+        if self.mesh is not None:
+            if world is not None:
+                self._refuse_mesh("init_state(world=...)")
+            # params (small, replicated) init EAGERLY — bitwise the
+            # single-device init (jit would fuse the RNG scaling by an
+            # ulp); the [N, ...] method-state leaves are deterministic
+            # constants (zeros/ones — bitwise stable under jit) and are
+            # CREATED in their sharded layout by the jitted assembler, so
+            # they never materialize on one device
+            params, key = self._init_params(key)
+            return self._init_sharded(params, key)
+        return self._init_from_key(key, world)
+
+    def _init_params(self, key: jax.Array) -> Tuple[List[Any], jax.Array]:
         params: List[Any] = []
         for t in self.tasks:
             key, k = jax.random.split(key)
             params.append(t.model.init(k))
+        return params, key
+
+    def _init_from_key(self, key: jax.Array,
+                       world: Optional[World] = None) -> ExperimentState:
+        params, key = self._init_params(key)
+        return self._assemble_state(params, key, world)
+
+    def _assemble_state(self, params: List[Any], key: jax.Array,
+                        world: Optional[World] = None) -> ExperimentState:
         mstate = [self.strategy.init_state(params[s], self.N)
                   for s in range(self.S)]
         return ExperimentState(
@@ -858,9 +1300,13 @@ class RoundEngine:
         n_rounds = int(n_rounds)
         fn = self._rollout_cache.get(n_rounds)
         if fn is None:
-            fn = jax.jit(self._rollout_fn(n_rounds), donate_argnums=0)
+            fn = (self._sharded_rollout(n_rounds)
+                  if self.mesh is not None
+                  else jax.jit(self._rollout_fn(n_rounds),
+                               donate_argnums=0))
             self._rollout_cache[n_rounds] = fn
-        return fn(state)
+        return (fn(state, self.world.data) if self.mesh is not None
+                else fn(state))
 
     def run_seeds(self, seeds: Any, n_rounds: int
                   ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray],
@@ -870,6 +1316,7 @@ class RoundEngine:
         Returns (final_states, metrics, final_accs) with a leading
         [n_seeds] axis everywhere ([n_seeds, n_rounds, S] metrics,
         [n_seeds, S] accuracies) — Table-1 error bars in one dispatch."""
+        self._refuse_mesh("run_seeds")
         seeds = jnp.asarray(seeds, jnp.int32)
         n_rounds = int(n_rounds)
         fn = self._run_seeds_cache.get(n_rounds)
@@ -896,6 +1343,7 @@ class RoundEngine:
     def init_states(self, seeds: Any) -> ExperimentState:
         """Vmapped ``init_state`` over seeds: one ``ExperimentState`` whose
         every leaf carries a leading [n_seeds] axis."""
+        self._refuse_mesh("init_states")
         seeds = jnp.asarray(seeds, jnp.int32)
         if self._fleet_init_fn is None:
             self._fleet_init_fn = jax.jit(jax.vmap(
@@ -907,6 +1355,7 @@ class RoundEngine:
         """``rollout`` vmapped over a stacked fleet state: ONE dispatch for
         all seeds x ``n_rounds`` rounds, metrics [n_seeds, n_rounds, S].
         The input fleet state is DONATED (rebind the result)."""
+        self._refuse_mesh("rollout_states")
         n_rounds = int(n_rounds)
         fn = self._fleet_rollout_cache.get(n_rounds)
         if fn is None:
@@ -917,6 +1366,7 @@ class RoundEngine:
 
     def evaluate_states(self, states: ExperimentState) -> jnp.ndarray:
         """[n_seeds, S] test accuracies for a stacked fleet state."""
+        self._refuse_mesh("evaluate_states")
         if self._fleet_eval_fn is None:
             self._fleet_eval_fn = jax.jit(jax.vmap(self.evaluate_fn))
         return self._fleet_eval_fn(states)
@@ -943,6 +1393,7 @@ class RoundEngine:
         S] metrics) — the paper's world-sensitivity grids (client counts x
         availability rates) at one compile per grid instead of one per
         world."""
+        self._refuse_mesh("run_worlds")
         seeds = jnp.asarray(seeds, jnp.int32)
         n_rounds = int(n_rounds)
         fn = self._run_worlds_cache.get(n_rounds)
@@ -986,5 +1437,5 @@ class RoundEngine:
 
     def evaluate(self, state: ExperimentState) -> List[float]:
         return [float(self.eval_jit[s](self.task_params(state, s),
-                                       self.tasks[s].test))
+                                       self.task_test(s)))
                 for s in range(self.S)]

@@ -20,6 +20,10 @@ function per (task, method)):
     uses_stale_store    keeps per-client h stores (server memory 3x)
     distributed_ok      usable by the distributed trainer (sampling-side
                         only: no server-held state, no all-client G)
+    shardable           usable under the engine's client-sharded mesh
+                        (``state_client_axes`` labels the [N,...] state
+                        leaves; ``aggregate`` psums per-shard partials
+                        over its ``axis_name``)
 
   sampling side (shared with the distributed layer via ``SamplerContext``)
     probabilities(ctx, losses_ns, norms_ns) -> p [V,S]
@@ -38,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, ClassVar, Dict, List, Optional, Tuple, Type
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -75,6 +80,15 @@ class MethodStrategy:
     uses_loss_stats: ClassVar[bool] = True    # sampler consumes loss reports
     uses_stale_store: ClassVar[bool] = False
     distributed_ok: ClassVar[bool] = False
+    # usable under the engine's client-sharded mesh (``RoundEngine(mesh=)``):
+    # requires (a) ``state_client_axes`` truthfully labels every [N,...]
+    # state leaf and (b) ``aggregate``'s cross-client reductions go through
+    # the ``axis_name``-aware aggregation helpers (``psum_tree`` etc.), so
+    # per-shard partials reduce collectively.  A strategy whose aggregation
+    # reads ARBITRARY cross-client state (not expressible as a per-shard
+    # partial + psum) must set False — the engine then refuses the mesh
+    # instead of silently computing shard-local garbage.
+    shardable: ClassVar[bool] = True
     # True when the strategy derives STATIC Python sizes from the budget m:
     # under a world-vmapped grid those sizes freeze at the template world's
     # m_host, so worlds with a different budget would silently sample
@@ -122,11 +136,26 @@ class MethodStrategy:
         """Per-client additive gradient correction (SCAFFOLD's c - c_i)."""
         return None
 
+    def state_client_axes(self, state: Any) -> Any:
+        """Same-structure boolean pytree over one task's method state: True
+        leaves carry a LEADING client axis and shard over the client mesh
+        (``core.sharding``); False leaves are global and replicate.
+
+        EXPLICIT, not shape-inferred: a global leaf can collide with N in
+        its first dim (SCAFFOLD's params-shaped variate ``c`` vs a linear
+        [n_feat, n_classes] weight when n_feat == N), so every stateful
+        strategy declares its layout.  The structural map works unchanged
+        on the engine's group-stacked state (the stacking axis rides in
+        front of every leaf; the engine shifts the spec accordingly).
+        Default: no client-axis leaves."""
+        return jax.tree.map(lambda _: False, state)
+
     def aggregate(self, w: Any, state: Dict[str, Any], G: Any,
                   coeff: jnp.ndarray, act: jnp.ndarray, idx: jnp.ndarray, *,
                   d_col: jnp.ndarray, lr: jnp.ndarray,
                   round_idx: jnp.ndarray,
-                  mask: Optional[jnp.ndarray] = None
+                  mask: Optional[jnp.ndarray] = None,
+                  axis_name: Optional[str] = None
                   ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
         """Apply the method's aggregation rule for one task.
 
@@ -136,8 +165,17 @@ class MethodStrategy:
         all valid) — padding clients arrive with coeff/act/d 0, so
         d-weighted rules ignore them for free; rules that average over the
         CLIENT COUNT must divide by sum(mask) instead of N.  Default:
-        Eq. 3 unbiased aggregation."""
-        return aggregation.aggregate(w, G, coeff), state, {}
+        Eq. 3 unbiased aggregation.
+
+        ``axis_name`` (client-sharded rounds only): every client-indexed
+        argument then covers ONE SHARD's block — state client-axis leaves
+        and d_col/mask the local [N/n_shards] rows, G/coeff/act/idx the
+        local cohort slots with SHARD-LOCAL idx — and each cross-client
+        reduction must psum its per-shard partial over ``axis_name``
+        (``aggregation.psum_tree``).  Scatters into client-axis state
+        (store refreshes) stay shard-local by construction."""
+        return aggregation.aggregate(w, G, coeff, axis_name=axis_name), \
+            state, {}
 
 
 # ---------------------------------------------------------------------------

@@ -14,8 +14,11 @@ from repro.core.methods.mixins import StaleStoreMixin, UniformSamplingMixin
 class MIFAMethod(UniformSamplingMixin, StaleStoreMixin, MethodStrategy):
 
     def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
-                  round_idx, mask=None):
+                  round_idx, mask=None, axis_name=None):
         h, hv = self.refresh(state, G, act, idx)
-        delta = stale.stale_mean(h, d_col * hv)
+        # sharded: the store refresh is shard-local, the d-weighted mean
+        # over the local block is a per-shard partial psum'd to global
+        delta = aggregation.psum_tree(
+            stale.stale_mean(h, d_col * hv), axis_name)
         return (aggregation.apply_delta(w, delta),
                 {**state, "h": h, "h_valid": hv}, {})

@@ -58,6 +58,15 @@ class StaleStoreMixin:
         return {"h": stale.init_stale_store(params, n_clients),
                 "h_valid": jnp.zeros((n_clients,), jnp.float32)}
 
+    def state_client_axes(self, state: Any) -> Any:
+        """EVERY leaf of the stale-family state is client-indexed: the
+        [N, params] store h, the [N] validity mask, and (StaleVRE) the [N]
+        BetaState estimator leaves — all shard over the client mesh, which
+        is the point of the sharded engine (no [N, params] array on one
+        device).  The ``refresh`` scatter then lands on the shard-local
+        store block (a per-shard in-place update under donation)."""
+        return jax.tree.map(lambda _: True, state)
+
     @staticmethod
     def refresh(state: Dict[str, Any], G: Any, act: jnp.ndarray,
                 idx: jnp.ndarray) -> Tuple[Any, jnp.ndarray]:

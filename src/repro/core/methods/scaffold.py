@@ -25,13 +25,27 @@ class ScaffoldMethod(UniformSamplingMixin, MethodStrategy):
         return jax.tree.map(lambda ci, c: c[None] - ci[idx],
                             state["ci"], state["c"])
 
+    def state_client_axes(self, state):
+        # the global variate c is params-shaped (its first dim can collide
+        # with N — exactly why this is declared, not shape-inferred); only
+        # the per-client store ci shards over the client mesh
+        return {"c": jax.tree.map(lambda _: False, state["c"]),
+                "ci": jax.tree.map(lambda _: True, state["ci"])}
+
     def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
-                  round_idx, mask=None):
-        new_w = aggregation.aggregate(w, G, coeff)
+                  round_idx, mask=None, axis_name=None):
+        new_w = aggregation.aggregate(w, G, coeff, axis_name=axis_name)
         K = getattr(self.cfg, "local_epochs", DEFAULT_LOCAL_EPOCHS)
         # the global variate averages over REAL clients: padding rows never
-        # change (act 0) but they must not inflate the divisor either
-        n = d_col.shape[0] if mask is None else jnp.sum(mask)
+        # change (act 0) but they must not inflate the divisor either.
+        # Sharded: d_col/mask cover one shard's block, so the count and the
+        # dc contraction below are per-shard partials psum'd to global.
+        if axis_name is None:
+            n = d_col.shape[0] if mask is None else jnp.sum(mask)
+        else:
+            n = jax.lax.psum(
+                jnp.float32(d_col.shape[0]) if mask is None
+                else jnp.sum(mask), axis_name)
         ones = (jnp.ones((d_col.shape[0],), jnp.float32) if mask is None
                 else mask)
         ci, c = state["ci"], state["c"]
@@ -46,8 +60,11 @@ class ScaffoldMethod(UniformSamplingMixin, MethodStrategy):
         # tensordot (not an axis-0 sum): dot reductions keep trailing
         # zero-masked rows from regrouping the real rows' partial sums, so
         # padded and unpadded worlds aggregate bit-identically
-        dc = jax.tree.map(
-            lambda a, b: jnp.tensordot(ones, a - b, axes=(0, 0)) / n,
-            new_ci, ci)
+        dc = aggregation.psum_tree(
+            jax.tree.map(
+                lambda a, b: jnp.tensordot(ones, a - b, axes=(0, 0)),
+                new_ci, ci),
+            axis_name)
+        dc = jax.tree.map(lambda d_: d_ / n, dc)
         new_c = jax.tree.map(lambda cc, d_: cc + d_, c, dc)
         return new_w, {"c": new_c, "ci": new_ci}, {}

@@ -9,14 +9,33 @@ overhead) differ ONLY in how beta is produced — subclasses override
 in the paper's Algorithm 2."""
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation
+from repro.core import aggregation, stale
 from repro.core.methods.base import MethodStrategy
 from repro.core.methods.mixins import StaleStoreMixin
+
+
+def use_stale_agg_kernel() -> bool:
+    """Route the Eq. 18 delta through the fused Pallas ``stale_agg`` kernel?
+
+    Default: only on TPU, where the cohort-tiled kernel streams the
+    [C, P] correction without materializing ``G - beta h`` — everywhere
+    else the order-pinned ``aggregation.stale_delta_onedot`` stays the
+    bit-reference (the kernel computes the mathematically-equal two-dot
+    form: stale mean + correction stream, which regroups partial sums and
+    is only ulp-equal; tests/test_kernels.py pins it against the oracle).
+    ``REPRO_STALE_AGG_KERNEL=1`` forces the kernel path (interpret mode
+    off-TPU — how the CPU tests exercise the wiring), ``=0`` disables it.
+    Read at TRACE time: set the env var before the engine builds."""
+    flag = os.environ.get("REPRO_STALE_AGG_KERNEL", "")
+    if flag in ("0", "1"):
+        return flag == "1"
+    return jax.default_backend() == "tpu"
 
 
 class StaleVRFamily(StaleStoreMixin, MethodStrategy):
@@ -28,22 +47,36 @@ class StaleVRFamily(StaleStoreMixin, MethodStrategy):
         raise NotImplementedError
 
     def aggregate(self, w, state, G, coeff, act, idx, *, d_col, lr,
-                  round_idx, mask=None):
+                  round_idx, mask=None, axis_name=None):
         # padding clients need no explicit masking here: their d is 0 (the
         # stale mean skips them) and they are never active (h stays 0)
         hv = state["h_valid"]
         h_cohort = jax.tree.map(lambda x: x[idx], state["h"])
         beta_all, state = self._beta(state, G, h_cohort, act, idx, round_idx)
         beta_all = beta_all * hv                    # stale term only if valid
-        # Eq. 18 in the order-pinned one-dot form: the stale mean's weights
-        # (processors of client i share h_i: sum_b (d/B) beta h = d beta h)
-        # concatenate with the cohort's fresh-update coefficients so the
-        # whole Delta is ONE contraction — the separate stale_mean +
-        # stale_correction dots fuse nondeterministically between the
-        # vmapped task axis and the per-task loop (see stale_delta_onedot)
-        delta = aggregation.stale_delta_onedot(
-            coeff, G, h_cohort, beta_all[idx], state["h"],
-            d_col * beta_all)
+        if use_stale_agg_kernel():
+            # Fused Pallas path (TPU): precompute the stale mean, then the
+            # kernel streams the cohort correction sum_a P_a (G_a - b_a h_a)
+            # over [C, P] tiles without materializing the corrected updates.
+            # Under sharding both halves are per-shard partials — one psum
+            # reduces the combined delta, same collective as the onedot.
+            from repro.kernels.stale_agg import ops as stale_agg_ops
+            stale_sum = stale.stale_mean(state["h"], d_col * beta_all)
+            delta = aggregation.psum_tree(
+                stale_agg_ops.stale_delta_pallas(
+                    coeff, G, h_cohort, beta_all[idx], stale_sum),
+                axis_name)
+        else:
+            # Eq. 18 in the order-pinned one-dot form: the stale mean's
+            # weights (processors of client i share h_i: sum_b (d/B) beta h
+            # = d beta h) concatenate with the cohort's fresh-update
+            # coefficients so the whole Delta is ONE contraction — the
+            # separate stale_mean + stale_correction dots fuse
+            # nondeterministically between the vmapped task axis and the
+            # per-task loop (see stale_delta_onedot)
+            delta = aggregation.stale_delta_onedot(
+                coeff, G, h_cohort, beta_all[idx], state["h"],
+                d_col * beta_all, axis_name=axis_name)
         new_w = aggregation.apply_delta(w, delta)
         h, hv = self.refresh(state, G, act, idx)
         return new_w, {**state, "h": h, "h_valid": hv}, {"beta": beta_all}

@@ -20,7 +20,7 @@ Shapes: V = total processors, S = models.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,18 +31,28 @@ import numpy as np
 UTILITY_FLOOR = 1e-8
 
 
-def index_keys(key: jax.Array, n: int) -> jax.Array:
+def index_keys(key: jax.Array, n: int, offset: Any = 0) -> jax.Array:
     """[n] per-index PRNG keys via ``fold_in`` — key i depends only on
     (key, i), never on n.  This is the padding-invariance contract of the
     mask-aware engine: a world padded from N to N_max draws bit-identical
     randomness for its first N clients (``jax.random.split(key, n)`` does
-    NOT have this property — threefry lays counters out over the full n)."""
-    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+    NOT have this property — threefry lays counters out over the full n).
+
+    ``offset`` (int or traced scalar) shifts the index block: shard k of a
+    client-sharded mesh draws keys for its local block with
+    ``offset = k * n_local`` and reproduces EXACTLY the keys the
+    single-device path folds for those global client indices — the same
+    prefix-stability that makes padding free makes client sharding
+    semantics-preserving by construction."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n) + offset)
 
 
-def index_uniform(key: jax.Array, n: int) -> jnp.ndarray:
-    """[n] iid U[0,1) draws, one scalar per index key (padding-invariant)."""
-    return jax.vmap(lambda k: jax.random.uniform(k))(index_keys(key, n))
+def index_uniform(key: jax.Array, n: int, offset: Any = 0) -> jnp.ndarray:
+    """[n] iid U[0,1) draws, one scalar per index key (padding-invariant;
+    ``offset`` shards the index space exactly as in ``index_keys``)."""
+    return jax.vmap(lambda k: jax.random.uniform(k))(
+        index_keys(key, n, offset))
 
 
 def processor_budget_utilities(client_util: jnp.ndarray, B: jnp.ndarray,
@@ -61,20 +71,26 @@ def processor_budget_utilities(client_util: jnp.ndarray, B: jnp.ndarray,
     return jnp.repeat(client_util, B, axis=0, total_repeat_length=int(total))
 
 
-def solve_waterfilling(U: jnp.ndarray, m: float) -> jnp.ndarray:
-    """Closed-form solution of the budgeted sampling problem (Thm 8/9).
-
-    U: [V, S] nonnegative utilities (0 marks unavailable model).
-    m: expected number of training tasks per round (server budget).
-    Returns p [V, S] with sum(p) == min(m, V_eff) and per-row sums <= 1.
-    """
+def _waterfill_floor(U: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                              jnp.ndarray]:
+    """Row-local preprocessing shared by the global and sharded solves:
+    clamp, apply the Assumption-5 utility floor, return (U, has_any [V],
+    row masses M [V])."""
     U = jnp.maximum(U, 0.0)
     has_any = jnp.any(U > 0, axis=1)
     # utility floor keeps every available (v,s) pair sampled with p >= theta
     U = jnp.where(U > 0, jnp.maximum(U, UTILITY_FLOOR), 0.0)
+    return U, has_any, jnp.sum(U, axis=1)
 
-    M = jnp.sum(U, axis=1)                                   # [V]
-    V = U.shape[0]
+
+def _waterfill_levels(M: jnp.ndarray, has_any: jnp.ndarray, m: float
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The GLOBAL normalization pass of the water-filling solve: which
+    processors saturate (sum_s p = 1) and the shared scale of the rest.
+    Consumes only the [V] row masses — the whole cross-processor coupling
+    of Thm 8/9 — so the sharded solve can run it replicated on gathered
+    masses while everything else stays row-local."""
+    V = M.shape[0]
     V_eff = jnp.sum(has_any.astype(jnp.int32))
 
     # Sort M descending; empty processors (M=0) sort last and are excluded by
@@ -104,12 +120,56 @@ def solve_waterfilling(U: jnp.ndarray, m: float) -> jnp.ndarray:
 
     rank = jnp.empty_like(order).at[order].set(jnp.arange(V))
     saturated = (rank < j_star) | full
+    return saturated, scale
+
+
+def _waterfill_rows(U: jnp.ndarray, M: jnp.ndarray, has_any: jnp.ndarray,
+                    saturated: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Row-local probability assembly: elementwise in (U, M, saturated), so
+    it applies unchanged to a shard's local block of rows."""
     M_safe = jnp.maximum(M, 1e-30)
     p_sat = U / M_safe[:, None]
     p_scaled = U * scale
     p = jnp.where(saturated[:, None], p_sat, p_scaled)
     p = jnp.where(has_any[:, None], p, 0.0)
     return jnp.clip(p, 0.0, 1.0)
+
+
+def solve_waterfilling(U: jnp.ndarray, m: float) -> jnp.ndarray:
+    """Closed-form solution of the budgeted sampling problem (Thm 8/9).
+
+    U: [V, S] nonnegative utilities (0 marks unavailable model).
+    m: expected number of training tasks per round (server budget).
+    Returns p [V, S] with sum(p) == min(m, V_eff) and per-row sums <= 1.
+    """
+    U, has_any, M = _waterfill_floor(U)
+    saturated, scale = _waterfill_levels(M, has_any, m)
+    return _waterfill_rows(U, M, has_any, saturated, scale)
+
+
+def solve_waterfilling_sharded(U_local: jnp.ndarray, m: float,
+                               axis_name: str) -> jnp.ndarray:
+    """``solve_waterfilling`` over per-shard blocks of the processor axis
+    (inside ``shard_map``): the two-pass form of the Thm 8/9 solve.
+
+    Pass 1 is row-local (floor + row masses on the shard's own block);
+    the [V] masses are then all-gathered IN MESH ORDER (shard k's block is
+    rows [k*v_loc, (k+1)*v_loc) — the global processor order) and the
+    global normalization (``_waterfill_levels``: the only cross-processor
+    coupling) runs replicated on every shard; pass 2 assembles the local
+    rows' probabilities from their slice of the replicated level split.
+    Every step reuses the single-device helpers on identically-ordered
+    inputs, so sharded == global holds bitwise (tests/test_sharding.py).
+    """
+    v_loc = U_local.shape[0]
+    U, has_any, M_loc = _waterfill_floor(U_local)
+    M = jax.lax.all_gather(M_loc, axis_name, axis=0, tiled=True)      # [V]
+    has_any_g = jax.lax.all_gather(has_any, axis_name, axis=0, tiled=True)
+    saturated, scale = _waterfill_levels(M, has_any_g, m)
+    off = jax.lax.axis_index(axis_name) * v_loc
+    sat_loc = jax.lax.dynamic_slice_in_dim(saturated, off, v_loc)
+    M_back = jax.lax.dynamic_slice_in_dim(M, off, v_loc)
+    return _waterfill_rows(U, M_back, has_any, sat_loc, scale)
 
 
 def solve_waterfilling_capped(U: jnp.ndarray, m: float,
@@ -218,7 +278,7 @@ def roundrobin_mask(avail: jnp.ndarray, round_idx: int) -> jnp.ndarray:
     return avail * mask[None, :]
 
 
-def sample_assignment(key, p: jnp.ndarray) -> jnp.ndarray:
+def sample_assignment(key, p: jnp.ndarray, offset: Any = 0) -> jnp.ndarray:
     """Draw the participation indicators.  Each processor independently picks
     at most one model: with prob p_{s|v} it trains model s (sum_s p <= 1).
     Returns active [V,S] in {0,1} with at most one 1 per row.
@@ -226,7 +286,13 @@ def sample_assignment(key, p: jnp.ndarray) -> jnp.ndarray:
     Drawn by per-processor inverse-CDF over ``index_uniform`` so processor
     v's draw depends only on (key, v): padding a world with extra masked
     processors leaves every real processor's participation bit-identical
-    (``jax.random.categorical`` would reshuffle all draws with V)."""
+    (``jax.random.categorical`` would reshuffle all draws with V).
+
+    ``offset`` shifts the index keys: a shard holding the processor block
+    starting at global row ``offset`` draws exactly the rows the global
+    call would (the whole computation is row-local, so sharding the V axis
+    only needs the RNG index space to follow — see
+    ``sample_assignment_sharded``)."""
     V, S = p.shape
     row = jnp.sum(p, axis=1)
     stay_idle = 1.0 - row
@@ -234,7 +300,17 @@ def sample_assignment(key, p: jnp.ndarray) -> jnp.ndarray:
     probs = jnp.clip(probs, 0.0, 1.0)
     probs = probs / jnp.maximum(jnp.sum(probs, axis=1, keepdims=True), 1e-30)
     cdf = jnp.cumsum(probs, axis=1)
-    u = index_uniform(key, V)
+    u = index_uniform(key, V, offset)
     choice = jnp.sum(u[:, None] >= cdf, axis=1)        # first s with cdf > u
     active = jax.nn.one_hot(choice, S + 1, dtype=jnp.float32)[:, :S]
     return active
+
+
+def sample_assignment_sharded(key, p_local: jnp.ndarray,
+                              axis_name: str) -> jnp.ndarray:
+    """``sample_assignment`` on a shard's local processor block (inside
+    ``shard_map``): the inverse-CDF is row-local, so the only global input
+    is each row's index key — supplied via the shard's global row offset.
+    Bitwise the corresponding rows of the global draw."""
+    off = jax.lax.axis_index(axis_name) * p_local.shape[0]
+    return sample_assignment(key, p_local, offset=off)

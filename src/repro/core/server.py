@@ -194,7 +194,7 @@ class MMFLServer:
         mstate = self.engine.per_task_method_state(self._state)
 
         # ---- 1) stats for the sampler -----------------------------------
-        stats = [self._legacy_stats[s](params[s], self.tasks[s].data,
+        stats = [self._legacy_stats[s](params[s], self.engine.task_data(s),
                                        k_local[s], lr) for s in range(self.S)]
         losses_ns = jnp.stack([st[0] for st in stats], axis=1)    # [N,S]
         norms_ns = (jnp.stack([st[2] for st in stats], axis=1)
@@ -219,7 +219,7 @@ class MMFLServer:
                 else k_local[s]
             new_w, new_state, extras = self._legacy_round[s](
                 params[s], mstate[s], train_in, p[:, s],
-                active[:, s], self.tasks[s].data,
+                active[:, s], self.engine.task_data(s),
                 lr, round_idx)
             params[s] = new_w
             mstate[s] = new_state

@@ -1,0 +1,97 @@
+"""Mesh-sharded client axis: the layout contract for million-client rounds.
+
+The fused round's memory is dominated by client-indexed state — the
+``[N, params]`` stale stores and all-client update buffers of the stale
+variance-reduced family, plus the ``[N, S]`` loss/availability arrays.  The
+per-client RNG is index-keyed (``sampling.index_keys``: client i's stream
+depends only on (key, i)), so *sharding the client index space is
+semantics-preserving by construction*: each device can own a contiguous
+block of clients and reproduce exactly the randomness the single-device
+path would have drawn for them.
+
+This module holds the layout vocabulary shared by the engine, the tests
+and the benchmarks:
+
+  * ``CLIENT_AXIS``      — the mesh axis name the client dimension shards
+    over ("data", matching ``launch/mesh.py``'s production meshes).
+  * ``client_mesh(n)``   — a 1-D mesh over the first n local devices.
+  * ``spec_for(flag, lead)`` — the per-leaf ``PartitionSpec`` rule: leaves
+    flagged as client-indexed shard their client dim (which sits *after*
+    ``lead`` stacking axes — the engine's grouped method state stacks a
+    task axis in front), everything else is replicated.
+  * ``tree_bytes_per_device(state, specs)`` — the analytic per-device
+    footprint of a sharded state (the quantity ``BENCH_engine.json``'s
+    ``sharded_scaling`` entry records; CPU host meshes expose no
+    ``memory_stats`` to measure against).
+
+Which reductions cross the client axis (and therefore become collectives
+under ``shard_map``) is documented in ROADMAP.md §"Client-sharding
+contract"; the single-device path never goes through this module and stays
+the bit-reference.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+CLIENT_AXIS = "data"
+
+
+def client_mesh(n_shards: Optional[int] = None,
+                devices: Optional[Sequence[Any]] = None) -> Mesh:
+    """1-D mesh over the client axis: the first ``n_shards`` local devices
+    (all of them when None).  Host meshes for tests/benches come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` set before jax
+    initializes (see tests/test_sharding.py)."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    n = len(devs) if n_shards is None else int(n_shards)
+    if n > len(devs):
+        raise ValueError(f"client_mesh({n}) but only {len(devs)} devices "
+                         f"exist (set --xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devs[:n]), (CLIENT_AXIS,))
+
+
+def spec_for(client_axis: bool, lead: int = 0) -> PartitionSpec:
+    """PartitionSpec for one leaf: the client dim (after ``lead`` stacking
+    axes) shards over ``CLIENT_AXIS``; non-client leaves replicate."""
+    if not client_axis:
+        return PartitionSpec()
+    return PartitionSpec(*((None,) * lead + (CLIENT_AXIS,)))
+
+
+def tree_specs(flags: Any, lead: int = 0) -> Any:
+    """Boolean flag pytree (True = leaf carries a leading-after-``lead``
+    client axis) -> same-structure PartitionSpec pytree."""
+    return jax.tree.map(lambda f: spec_for(bool(f), lead), flags)
+
+
+def tree_shardings(mesh: Mesh, specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh`` (the form
+    ``jax.device_put`` / ``checkpoint.restore(shardings=...)`` consume)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def tree_bytes_per_device(tree: Any, specs: Any, n_shards: int) -> int:
+    """Analytic per-device bytes of ``tree`` laid out by ``specs``: leaves
+    whose spec names ``CLIENT_AXIS`` divide their bytes by ``n_shards``,
+    replicated leaves count in full.  This is the footprint the sharded
+    bench tier records (host CPU meshes report no per-device
+    ``memory_stats``); the ~1/n_shards scaling of the client-dominated
+    terms is the tentpole's memory claim."""
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    leaves = jax.tree.leaves(tree)
+    if len(spec_leaves) != len(leaves):
+        raise ValueError("specs must be a full (leaf-for-leaf) spec tree")
+    total = 0
+    for leaf, spec in zip(leaves, spec_leaves):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize \
+            if leaf.shape else leaf.dtype.itemsize
+        sharded = any(CLIENT_AXIS in (ax if isinstance(ax, tuple) else (ax,))
+                      for ax in spec if ax is not None)
+        total += nbytes // n_shards if sharded else nbytes
+    return total

@@ -42,6 +42,16 @@ def make_host_mesh(model_axis: int = 1):
     return make_mesh_compat((data, model_axis), ("data", "model"))
 
 
+def make_client_mesh(n_shards: int | None = None):
+    """1-D client-axis mesh for ``RoundEngine(..., mesh=...)``.
+
+    Thin launch-layer alias of :func:`repro.core.sharding.client_mesh` so
+    entry points import their meshes from one place; the axis name is the
+    engine's client-sharding contract (``sharding.CLIENT_AXIS``)."""
+    from repro.core import sharding
+    return sharding.client_mesh(n_shards)
+
+
 # TPU v5e hardware constants (per chip) for the roofline model
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # bytes/s

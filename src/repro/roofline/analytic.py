@@ -185,3 +185,29 @@ def roofline(cfg: ArchConfig, shape: InputShape, rcfg: FLRoundConfig,
         "useful_ratio": fl["useful"] / max(fl["hlo_equiv"], 1.0),
         "collectives": co,
     }
+
+
+def client_shard_scaling(client_bytes: float, replicated_bytes: float,
+                         n_shards: int, serial_fraction: float = 0.1
+                         ) -> Dict[str, float]:
+    """Analytic scaling model for the client-sharded fused round.
+
+    ``client_bytes`` is the total footprint of state leaves carrying the
+    client axis ([N, ...] loss caches, [N, params] stale stores) and
+    ``replicated_bytes`` everything else (model params, scalars) — both
+    straight from ``RoundEngine.state_bytes_per_device`` evaluated at
+    ``n_shards=1``.  Memory is exactly partitioned (the engine lays the
+    client axis out with NamedSharding, no halo), so per-device bytes are
+    ``replicated + client/n``.  Throughput follows Amdahl: the stats phase
+    and cohort training parallelize over shards while sampling (replicated
+    water-filling over the all-gathered [N, S] losses) and the psum'd
+    aggregation stay serial — ``serial_fraction`` defaults to the measured
+    share on the linear settings of ``benchmarks/engine_bench.py``.
+    """
+    n = max(int(n_shards), 1)
+    f = min(max(serial_fraction, 0.0), 1.0)
+    return {
+        "bytes_per_device": replicated_bytes + client_bytes / n,
+        "ideal_speedup": float(n),
+        "amdahl_speedup": 1.0 / (f + (1.0 - f) / n),
+    }

@@ -124,3 +124,42 @@ def test_pytree_wrappers_match_core():
     d_r = aggregation.stale_delta(coeff, G, h, beta_r, sm)
     for got, want in zip(jax.tree.leaves(d_k), jax.tree.leaves(d_r)):
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_stale_agg_kernel_engine_path(monkeypatch):
+    """REPRO_STALE_AGG_KERNEL=1 routes the stale family's Eq. 18 delta
+    through the Pallas kernel (interpret mode off-TPU) — the full engine
+    round must match the order-pinned onedot reference path.  The flag is
+    read at TRACE time, so each engine below is built under its own env."""
+    from repro.core.engine import RoundEngine, ServerConfig
+    from repro.core.methods import stale_family
+    from repro.fl.experiments import build_linear_setting
+
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=8, seed=0)
+    cfg = ServerConfig(method="stalevre", local_epochs=2, seed=1,
+                       active_rate=0.3, batch_size=8)
+
+    monkeypatch.setenv("REPRO_STALE_AGG_KERNEL", "0")
+    assert not stale_family.use_stale_agg_kernel()
+    ref = RoundEngine(tasks, B, avail, cfg)
+    st_r = ref.init_state()
+
+    monkeypatch.setenv("REPRO_STALE_AGG_KERNEL", "1")
+    assert stale_family.use_stale_agg_kernel()
+    ker = RoundEngine(tasks, B, avail, cfg)
+    st_k = ker.init_state()
+
+    for _ in range(2):
+        st_r, met_r = ref.round_step(st_r)
+        st_k, met_k = ker.round_step(st_k)
+    for k in met_r:
+        np.testing.assert_allclose(np.asarray(met_r[k]),
+                                   np.asarray(met_k[k]),
+                                   rtol=2e-5, atol=1e-6, err_msg=k)
+    for a, b in zip(jax.tree.leaves(st_r.params), jax.tree.leaves(st_k.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(st_r.method_state),
+                    jax.tree.leaves(st_k.method_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)

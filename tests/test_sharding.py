@@ -1,0 +1,295 @@
+"""Client-sharded engine (``RoundEngine(..., mesh=client_mesh(k))``):
+sharded == single-device for every registered method, shard layout and
+per-device memory claims, mesh-shape-agnostic checkpoints, and the
+refusal surface of the sharding contract.
+
+The full 8-shard battery needs 8 host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE jax
+initializes — the CI ``sharded-smoke`` job sets it); under the plain
+fast tier those tests skip and the 1-shard shard_map parity + refusal
+tests still run.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint import checkpoint
+from repro.core import sharding
+from repro.core.engine import RoundEngine, ServerConfig
+from repro.fl.experiments import build_linear_setting
+from repro.roofline.analytic import client_shard_scaling
+
+METHODS = ["random", "lvr", "gvr", "roundrobin_gvr", "stalevr", "stalevre",
+           "fedvarp", "fedstale", "mifa", "scaffold", "full", "flammable",
+           "power_of_choice"]
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# sharded aggregation reduces per-shard partials with psum instead of the
+# single-device one-dot contraction: regrouped partial sums are only
+# ulp-equal, amplified over a few rounds of training
+RTOL, ATOL = 2e-5, 1e-6
+
+
+def _cfg(method, **kw):
+    return ServerConfig(method=method, local_epochs=2, seed=1,
+                        active_rate=0.3, batch_size=8, **kw)
+
+
+def _leaves_close(a, b, msg):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=RTOL, atol=ATOL, err_msg=msg)
+
+
+@pytest.fixture(scope="module")
+def setting():
+    return build_linear_setting(n_models=3, n_clients=16, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# sharded == single-device, every registered method
+# ---------------------------------------------------------------------------
+@needs_mesh
+@pytest.mark.parametrize("method", METHODS)
+def test_sharded_matches_single_device(setting, method):
+    tasks, B, avail = setting
+    ref = RoundEngine(tasks, B, avail, _cfg(method))
+    sh = RoundEngine(tasks, B, avail, _cfg(method),
+                     mesh=sharding.client_mesh(8))
+    st_r, st_s = ref.init_state(), sh.init_state()
+    # init is BITWISE identical (params init eagerly; stores are constants)
+    for a, b in zip(jax.tree.leaves(st_r), jax.tree.leaves(st_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for _ in range(2):
+        st_r, met_r = ref.round_step(st_r)
+        st_s, met_s = sh.round_step(st_s)
+    for k in met_r:
+        np.testing.assert_allclose(np.asarray(met_r[k]),
+                                   np.asarray(met_s[k]),
+                                   rtol=RTOL, atol=ATOL,
+                                   err_msg=f"{method}:{k}")
+    _leaves_close(st_r.params, st_s.params, f"{method}:params")
+    _leaves_close(st_r.method_state, st_s.method_state, f"{method}:mstate")
+    np.testing.assert_allclose(ref.evaluate(st_r), sh.evaluate(st_s),
+                               atol=1e-6)
+
+
+@needs_mesh
+def test_sharded_rollout_matches(setting):
+    tasks, B, avail = setting
+    ref = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    sh = RoundEngine(tasks, B, avail, _cfg("stalevre"),
+                     mesh=sharding.client_mesh(8))
+    st_r, mets_r = ref.rollout(ref.init_state(), 3)
+    st_s, mets_s = sh.rollout(sh.init_state(), 3)
+    for k in mets_r:
+        np.testing.assert_allclose(np.asarray(mets_r[k]),
+                                   np.asarray(mets_s[k]),
+                                   rtol=RTOL, atol=ATOL, err_msg=k)
+    _leaves_close(st_r.params, st_s.params, "rollout:params")
+
+
+def test_one_shard_mesh_matches():
+    """shard_map over a 1-device mesh (always available): the collective
+    path degenerates to identity and must reproduce the plain engine."""
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=8, seed=0)
+    ref = RoundEngine(tasks, B, avail, _cfg("stalevre"))
+    sh = RoundEngine(tasks, B, avail, _cfg("stalevre"),
+                     mesh=sharding.client_mesh(1))
+    st_r, st_s = ref.init_state(), sh.init_state()
+    for _ in range(2):
+        st_r, met_r = ref.round_step(st_r)
+        st_s, met_s = sh.round_step(st_s)
+    for k in met_r:
+        np.testing.assert_allclose(np.asarray(met_r[k]),
+                                   np.asarray(met_s[k]),
+                                   rtol=RTOL, atol=ATOL, err_msg=k)
+    _leaves_close(st_r.params, st_s.params, "1shard:params")
+    _leaves_close(st_r.method_state, st_s.method_state, "1shard:mstate")
+
+
+def test_sharded_sampling_helpers_match_global():
+    """The shard-local water-filling / assignment library helpers are
+    BITWISE the global solve on the corresponding rows (two-pass form:
+    row-local floor, replicated level split, row-local assembly) — at
+    whatever device count the session has (1-device degenerates to the
+    identity collective; the CI sharded-smoke job runs this at 8)."""
+    from jax.experimental.shard_map import shard_map
+    from repro.core import sampling
+
+    n = len(jax.devices())
+    mesh = sharding.client_mesh(n)
+    axis = sharding.CLIENT_AXIS
+    V, S, m = 8 * n, 3, 2.5
+    key = jax.random.PRNGKey(0)
+    U = (jax.random.uniform(jax.random.PRNGKey(1), (V, S))
+         * (jax.random.uniform(jax.random.PRNGKey(2), (V, S)) > 0.3))
+
+    p_ref = jax.jit(lambda u: sampling.solve_waterfilling(u, m))(U)
+    p_sh = jax.jit(shard_map(
+        lambda u: sampling.solve_waterfilling_sharded(u, m, axis),
+        mesh=mesh, in_specs=P(axis), out_specs=P(axis),
+        check_rep=False))(U)
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_sh))
+
+    act_ref = jax.jit(lambda p: sampling.sample_assignment(key, p))(p_ref)
+    act_sh = jax.jit(shard_map(
+        lambda p: sampling.sample_assignment_sharded(key, p, axis),
+        mesh=mesh, in_specs=P(axis), out_specs=P(axis),
+        check_rep=False))(p_ref)
+    np.testing.assert_array_equal(np.asarray(act_ref), np.asarray(act_sh))
+
+
+# ---------------------------------------------------------------------------
+# layout + memory
+# ---------------------------------------------------------------------------
+@needs_mesh
+def test_state_shard_layout(setting):
+    """The contract's leaf layout: client-indexed leaves are
+    ``P(..., "data")`` blocks, everything else fully replicated."""
+    tasks, B, avail = setting
+    eng = RoundEngine(tasks, B, avail, _cfg("stalevr"),
+                      mesh=sharding.client_mesh(8))
+    st = eng.init_state()
+    assert sharding.CLIENT_AXIS in st.losses_ns.sharding.spec
+    assert sharding.CLIENT_AXIS in st.client_mask.sharding.spec
+    for leaf in jax.tree.leaves(st.params):
+        assert leaf.sharding.is_fully_replicated
+    for g_state in st.method_state:           # stale store: [slots, N, ...]
+        for leaf in jax.tree.leaves(g_state["h"]):
+            assert leaf.sharding.spec[1] == sharding.CLIENT_AXIS
+        for leaf in jax.tree.leaves(g_state["h_valid"]):
+            assert leaf.sharding.spec[1] == sharding.CLIENT_AXIS
+    # the group-stacked client data shards the same way (residency dedup:
+    # the stacks ARE the only copy, placed straight into the mesh layout)
+    for g in range(len(eng.world.data)):
+        for leaf in jax.tree.leaves(eng.world.data[g]):
+            assert leaf.sharding.spec[1] == sharding.CLIENT_AXIS
+
+
+@needs_mesh
+def test_per_device_memory_scales():
+    """A stale store too big for one device's budget fits sharded: the
+    [N, params] store dominates single-device state (> 1/4 of it), and the
+    8-shard per-device footprint lands at ~1/8 + the replicated residue."""
+    tasks, B, avail = build_linear_setting(n_models=3, n_clients=512, seed=0)
+    ref = RoundEngine(tasks, B, avail, _cfg("stalevr"))
+    sh = RoundEngine(tasks, B, avail, _cfg("stalevr"),
+                     mesh=sharding.client_mesh(8))
+    st_r, st_s = ref.init_state(), sh.init_state()
+    total = ref.state_bytes_per_device(st_r)
+    per_dev = sh.state_bytes_per_device(st_s)
+    store = sum(l.nbytes for g in st_r.method_state
+                for l in jax.tree.leaves(g["h"]))
+    assert store > total / 4                      # the store IS the problem
+    assert per_dev * 4 <= total                   # sharding solved it
+    # replicated residue (params, key, scalars) + exact 1/8 client split
+    repl = total - (total - per_dev) * 8 / 7
+    model = client_shard_scaling(total - repl, repl, 8)
+    assert abs(model["bytes_per_device"] - per_dev) <= 8
+
+
+def test_scaling_model():
+    """The roofline scaling model behind the bench: >= 3x at 8 shards for
+    a stats-phase-bound round (the acceptance target), exact memory
+    partition, monotone in the serial fraction."""
+    m = client_shard_scaling(8e6, 1e6, 8)
+    assert m["bytes_per_device"] == 2e6
+    assert m["ideal_speedup"] == 8.0
+    assert m["amdahl_speedup"] >= 3.0
+    assert (client_shard_scaling(8e6, 1e6, 8, serial_fraction=0.5)
+            ["amdahl_speedup"] < m["amdahl_speedup"])
+    assert client_shard_scaling(8e6, 1e6, 1)["amdahl_speedup"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoints across mesh shapes
+# ---------------------------------------------------------------------------
+@needs_mesh
+def test_checkpoint_across_mesh_shapes(setting, tmp_path):
+    """Save on an 8-shard mesh, resume on 1 device — and back onto the
+    mesh: the payload is mesh-shape-agnostic (``save`` gathers to numpy),
+    ``shardings=`` re-places leaves into the target layout."""
+    tasks, B, avail = setting
+    sh = RoundEngine(tasks, B, avail, _cfg("stalevr"),
+                     mesh=sharding.client_mesh(8))
+    st = sh.init_state()
+    for _ in range(2):
+        st, _ = sh.round_step(st)
+    checkpoint.save_state(str(tmp_path), st, 2)
+
+    # resume single-device: continued metrics match the sharded run's
+    ref = RoundEngine(tasks, B, avail, _cfg("stalevr"))
+    st_r, step = checkpoint.restore_state(str(tmp_path), ref.init_state())
+    assert step == 2
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    st_r2, met_r = ref.round_step(st_r)
+
+    # resume back onto the mesh with the engine's layout
+    st_s, _ = checkpoint.restore_state(str(tmp_path), sh.init_state(),
+                                       shardings=sh.state_shardings)
+    assert sharding.CLIENT_AXIS in st_s.losses_ns.sharding.spec
+    st_s2, met_s = sh.round_step(st_s)
+    for k in met_r:
+        np.testing.assert_allclose(np.asarray(met_r[k]),
+                                   np.asarray(met_s[k]),
+                                   rtol=RTOL, atol=ATOL, err_msg=k)
+    _leaves_close(st_r2.params, st_s2.params, "ckpt:params")
+
+
+# ---------------------------------------------------------------------------
+# refusal surface
+# ---------------------------------------------------------------------------
+def test_refuses_wrong_mesh_axes():
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=8, seed=0)
+    bad = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    with pytest.raises(ValueError, match="client axis"):
+        RoundEngine(tasks, B, avail, _cfg("lvr"), mesh=bad)
+
+
+@needs_mesh
+def test_refuses_indivisible_clients():
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=20, seed=0)
+    with pytest.raises(ValueError, match="divide evenly"):
+        RoundEngine(tasks, B, avail, _cfg("lvr"),
+                    mesh=sharding.client_mesh(8))
+
+
+def test_refuses_unshardable_config():
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=8, seed=0)
+    mesh = sharding.client_mesh(1)
+    with pytest.raises(ValueError, match="fuse_tasks=True"):
+        RoundEngine(tasks, B, avail, _cfg("lvr", fuse_tasks=False),
+                    mesh=mesh)
+    with pytest.raises(ValueError, match="jit_round=True"):
+        RoundEngine(tasks, B, avail, _cfg("lvr", jit_round=False),
+                    mesh=mesh)
+
+
+def test_refuses_unshardable_method(monkeypatch):
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=8, seed=0)
+    probe = RoundEngine(tasks, B, avail, _cfg("lvr"))
+    monkeypatch.setattr(type(probe.strategy), "shardable", False)
+    with pytest.raises(ValueError, match="shardable=False"):
+        RoundEngine(tasks, B, avail, _cfg("lvr"),
+                    mesh=sharding.client_mesh(1))
+
+
+def test_refuses_fleet_apis():
+    """Seed/world fleets would vmap-multiply every sharded client leaf —
+    the mesh engine refuses them instead of silently replicating."""
+    tasks, B, avail = build_linear_setting(n_models=2, n_clients=8, seed=0)
+    eng = RoundEngine(tasks, B, avail, _cfg("lvr"),
+                      mesh=sharding.client_mesh(1))
+    with pytest.raises(NotImplementedError, match="client-sharded"):
+        eng.run_seeds([0, 1], 2)
+    with pytest.raises(NotImplementedError, match="client-sharded"):
+        eng.init_states([0, 1])
