@@ -15,6 +15,37 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointSchemaError(KeyError):
+    """The payload's leaf set does not match the restore template.
+
+    Raised (instead of a bare ``KeyError``) when a checkpoint written
+    under an older state schema is restored into a template that grew new
+    fields — e.g. a pre-async ``ExperimentState`` restored into an
+    ``AsyncRoundEngine``, whose state carries the in-flight buffer
+    surface.  ``missing`` lists the template leaves absent from the
+    payload; ``fill_missing=True`` on the restore entry points zero-fills
+    them instead (the migration shim — with async ``timer`` leaves filled
+    with -1, the empty-slot sentinel)."""
+
+    def __init__(self, message: str, missing: Any = ()):  # noqa: D107
+        super().__init__(message)
+        self.missing = tuple(missing)
+
+    def __str__(self) -> str:       # KeyError would repr() the message
+        return self.args[0]
+
+
+# async in-flight ``timer`` leaves are the one schema-migration fill that
+# must NOT be zero: timer == 0 means "this update lands NOW", so a
+# zero-filled [T_g, N] timer would land N empty updates in the first
+# window (clobbering the stale stores through ``refresh``); -1 is the
+# engine's empty-slot sentinel (core.async_engine.EMPTY_SLOT)
+def _fill_value(key: str) -> int:
+    if ".async_state/" in key and key.endswith("/timer"):
+        return -1
+    return 0
+
+
 def _flatten_with_paths(tree: Any) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -46,30 +77,49 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> None:
         json.dump(manifest, f, indent=1)
 
 
-def _unflatten_like(flat: Dict[str, np.ndarray], like: Any) -> Any:
+def _unflatten_like(flat: Dict[str, np.ndarray], like: Any,
+                    fill_missing: bool = False) -> Any:
     paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    missing = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        if key not in flat:
+            missing.append(key)
+    if missing and not fill_missing:
+        raise CheckpointSchemaError(
+            f"checkpoint is missing {len(missing)} leaves required by the "
+            f"restore template (first: {missing[0]!r}) — it was written "
+            f"under an older state schema (e.g. a pre-async "
+            f"ExperimentState restored into an async engine); pass "
+            f"fill_missing=True to migrate with blank fields, restart "
+            f"the run, or restore with a matching template",
+            missing=missing)
     leaves = []
     for p, leaf in paths:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                        for q in p)
         arr = flat.get(key)
         if arr is None:
-            raise KeyError(
-                f"checkpoint is missing leaf {key!r} required by the "
-                f"restore template — it was written under an older state "
-                f"schema (e.g. before ExperimentState.client_mask); "
-                f"restart the run or restore with a matching template")
+            arr = np.full(tuple(leaf.shape), _fill_value(key))
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(jnp.asarray(arr, leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
 
 
-def restore(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype template)."""
+def restore(path: str, like: Any, shardings: Optional[Any] = None,
+            fill_missing: bool = False) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template).
+
+    ``fill_missing=True`` is the schema-migration shim: template leaves
+    absent from the payload are blank-filled (zeros; async in-flight
+    timers get -1, the empty-slot sentinel) instead of raising
+    ``CheckpointSchemaError`` — how a pre-async checkpoint resumes under
+    an ``AsyncRoundEngine`` with an empty in-flight buffer."""
     with np.load(path + ".npz") as data:
         flat = {k: data[k] for k in data.files}
-    tree = _unflatten_like(flat, like)
+    tree = _unflatten_like(flat, like, fill_missing=fill_missing)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)
     return tree
@@ -140,8 +190,9 @@ def save_state(directory: str, state: Any, step: int,
 
 def restore_state(directory: str, like: Any, step: Optional[int] = None,
                   prefix: str = "state_",
-                  shardings: Optional[Any] = None) -> Tuple[Optional[Any],
-                                                            Optional[int]]:
+                  shardings: Optional[Any] = None,
+                  fill_missing: bool = False) -> Tuple[Optional[Any],
+                                                       Optional[int]]:
     """Restore a full experiment state saved by ``save_state``.
 
     ``like`` is a shape/dtype template with the same tree structure (e.g. a
@@ -152,13 +203,18 @@ def restore_state(directory: str, like: Any, step: Optional[int] = None,
     ``shardings`` (e.g. a client-sharded engine's ``state_shardings``)
     places the restored leaves straight into their mesh layout — the
     payload itself is mesh-shape-agnostic (``save`` gathers to numpy), so
-    a run saved on an 8-shard mesh restores onto 1 device and back."""
+    a run saved on an 8-shard mesh restores onto 1 device and back.
+
+    ``fill_missing`` migrates older payloads forward: leaves the template
+    has but the payload lacks (e.g. ``async_state`` when resuming a
+    pre-async run under an ``AsyncRoundEngine``) are blank-filled rather
+    than raising ``CheckpointSchemaError``."""
     if step is None:
         step = latest_step(directory, prefix)
     if step is None:
         return None, None
     return restore(os.path.join(directory, f"{prefix}{step}"), like,
-                   shardings=shardings), step
+                   shardings=shardings, fill_missing=fill_missing), step
 
 
 def latest_step(directory: str, prefix: str = "ckpt_") -> Optional[int]:

@@ -1,0 +1,633 @@
+"""Asynchronous event-driven MMFL engine: the round barrier becomes an
+aggregation WINDOW over a traced event clock.
+
+``AsyncRoundEngine`` generalizes ``RoundEngine.round_step`` to
+``window_step``: each window the server (1) probes losses and samples the
+cohort exactly as the synchronous engine does, (2) STARTS local rounds on
+the sampled clients, whose updates land after heterogeneous per-client
+delays drawn from a pluggable ``core.delay`` model (deterministic lag,
+geometric straggler, trace-driven replay), and (3) aggregates whatever
+LANDED this window.  Clients may also arrive/depart by a presence trace
+([T, N] availability rows cycled along the event clock).
+
+The in-flight surface lives in ``ExperimentState.async_state`` — per
+signature group a dict of
+
+    inflight  [T_g, N, params]   the buffered update of each client
+    coeff     [T_g, N]           its aggregation coefficient (sampled at
+                                 START time — the unbiased d/(Bp) weight
+                                 of the distribution it was drawn from)
+    timer     [T_g, N]  int32    windows until it lands (-1 = empty slot,
+                                 0 = lands THIS window)
+    age       [T_g, N]  int32    staleness: windows since its local round
+                                 started (0 <= age <= max_lag_windows)
+
+— client-sharded under the existing mesh contract and donated like the
+stale stores.  At most one update per (client, task) is in flight: a
+fresh start SUPERSEDES an unlanded buffered update (the client aborted
+its stale work and restarted).
+
+**Correctness story.**  The landed subset aggregates over the FULL
+client axis (``idx = arange(N)``, ``act = arrived``) — exactly the call
+shape every strategy's ``aggregate`` already supports, and for the
+StaleVR family the Eq. 18 stale-store math IS the delayed-update
+correction path: landing refreshes h, non-landed clients contribute
+their stale term, Eq. 20/21 beta estimation sees the landing's true
+staleness through its round stamps.  Strategies whose math contradicts
+asynchrony (``needs_all_updates``: GVR, full, roundrobin_gvr, stalevr —
+every client's FRESH update is the barrier being dropped) declare
+``async_ok = False`` and are refused at construction for nonzero delays.
+
+**The synchronous barrier is the zero-delay special case.**  With
+``max_lag == 0`` and no presence trace, ``window_step`` structurally IS
+``RoundEngine.round_step_fn`` (same closures, same RNG schedule, same
+contraction lengths — the delay stream is folded off the state key on a
+separate tag and never consumed): async(delay=0) == sync BIT-FOR-BIT
+for every registered method (tests/test_async.py), including the
+client-sharded and fleet paths.  The buffered window path necessarily
+contracts over N instead of the cohort, so it only engages when delays
+(or presence) make it semantically different.
+
+Window metrics add ``arrived`` (landed real-client updates, [S]) and
+``staleness`` (mean landing age in windows, [S]) to the Sec. 3.3
+monitors; both are exact integer sums in f32, so the sharded engine
+reproduces them bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convergence, delay as delay_mod, methods, sampling, \
+    sharding, stale
+from repro.core.engine import (ExperimentState, RoundEngine, ServerConfig,
+                               Task, World)
+
+#: fold_in tag separating the delay stream from the sync key schedule
+#: (``keys = split(state.key, 2 + S)``) — drawing delays never perturbs
+#: the sampling/training draws, which is what keeps delay=0 bit-exact.
+_DELAY_STREAM = 0x5A11
+
+#: ``timer`` sentinel for an empty in-flight slot.  NOT 0: timer == 0
+#: means "lands this window", and a zero-filled timer would land N
+#: zero-updates at once (clobbering stale stores through ``refresh``) —
+#: why the checkpoint migration shim fills timers with -1, not 0.
+EMPTY_SLOT = -1
+
+
+@dataclasses.dataclass
+class AsyncConfig:
+    """The async axis of one experiment: who lags, how long, how often
+    the server aggregates, and who is present.
+
+    ``delay`` is a ``core.delay.DelayModel`` instance or a registry name
+    (then ``delay_kwargs`` are its constructor arguments).  ``window_size``
+    W batches W event-clock ticks per aggregation window: a delay of t
+    ticks misses ceil(t / W) windows.  ``presence`` is an optional [T, N]
+    0/1 trace cycled along the event clock (row ``tick % T``): absent
+    clients drop their sampled assignment that window (a no-show — the
+    server sampled them in expectation, they never trained)."""
+    delay: Any = "zero"
+    delay_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    window_size: int = 1
+    presence: Optional[Any] = None
+
+
+class AsyncRoundEngine(RoundEngine):
+    """Event-driven engine: ``RoundEngine`` plus the in-flight buffer
+    subsystem.  ``state.round`` counts WINDOWS (the event clock ticks
+    ``window_size`` per step); every inherited surface — scanned
+    ``rollout``, vmapped seed/world fleets, the client-sharded mesh,
+    checkpointing, donation — works unchanged on the extended state."""
+
+    def __init__(self, tasks, B, avail, cfg: ServerConfig,
+                 async_cfg: Optional[AsyncConfig] = None, **kwargs):
+        acfg = async_cfg if async_cfg is not None else AsyncConfig()
+        delay = acfg.delay
+        if isinstance(delay, str):
+            delay = delay_mod.make_delay(delay, **acfg.delay_kwargs)
+        self.async_cfg = acfg
+        self.delay_model = delay
+        self.window_size = int(acfg.window_size)
+        self.max_lag_windows = delay_mod.lag_in_windows(
+            delay.max_lag, self.window_size)
+        self._presence_np = None
+        if acfg.presence is not None:
+            pres = np.asarray(acfg.presence, np.float32)
+            n = int(np.asarray(B).shape[0])
+            if pres.ndim != 2 or pres.shape[1] != n:
+                raise ValueError(
+                    f"presence trace must be [T, N={n}]; got shape "
+                    f"{pres.shape}")
+            self._presence_np = pres
+        # buffered == the window path is semantically different from the
+        # sync barrier; delay=0 with no presence stays the bit-identical
+        # synchronous transition (every method welcome there)
+        self.buffered = (self.max_lag_windows > 0
+                         or self._presence_np is not None)
+        if self.buffered and not methods.get_class(cfg.method).async_ok:
+            raise ValueError(
+                f"method {cfg.method!r} declares async_ok=False — its "
+                f"aggregation needs every client's fresh update each "
+                f"round, which is exactly the barrier the async engine "
+                f"drops; run it with zero delay and no presence trace, "
+                f"or pick one of: {', '.join(methods.async_methods())}")
+        super().__init__(tasks, B, avail, cfg, **kwargs)
+        if self.buffered and self.mesh is None:
+            self._window_pure = [self.make_window_fn(s)
+                                 for s in range(self.S)]
+            self._g_window = [self.make_group_window_fn(g)
+                              for g in range(self.n_groups)]
+
+    # ------------------------------------------------------------------
+    # async state: construction, views, layout
+    # ------------------------------------------------------------------
+    def _blank_task_async(self, params: Any) -> Dict[str, Any]:
+        """One task's empty in-flight surface (zeros + empty timers)."""
+        N = self.N
+        return {
+            "inflight": stale.init_stale_store(params, N),
+            "coeff": jnp.zeros((N,), jnp.float32),
+            "timer": jnp.full((N,), EMPTY_SLOT, jnp.int32),
+            "age": jnp.zeros((N,), jnp.int32),
+        }
+
+    def _assemble_state(self, params: List[Any], key: jax.Array,
+                        world: Optional[World] = None) -> ExperimentState:
+        st = super()._assemble_state(params, key, world)
+        blank = [self._blank_task_async(params[s]) for s in range(self.S)]
+        return st._replace(async_state=self.group_stack(blank))
+
+    def task_async_state(self, state: ExperimentState, s: int) -> Any:
+        """Task s's in-flight buffers (slot view of its group's stack)."""
+        g, j = self.task_gs[s]
+        return jax.tree.map(lambda a: a[j], state.async_state[g])
+
+    def _async_state_specs(self, struct: Any) -> Any:
+        """Every async leaf is client-indexed after the group-stack axis
+        — the same ``spec_for(True, lead=1)`` layout as the stale
+        stores ([T_g, N-sharded, ...])."""
+        return tuple(
+            jax.tree.map(lambda _: sharding.spec_for(True, lead=1), d)
+            for d in struct.async_state)
+
+    # ------------------------------------------------------------------
+    # the event-window transition
+    # ------------------------------------------------------------------
+    def round_step_fn(self, state: ExperimentState,
+                      world: Optional[World] = None
+                      ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
+        """The window transition.  Zero delay + no presence: structurally
+        the synchronous ``round_step_fn`` (the bit-for-bit equivalence);
+        otherwise the buffered insert/extract/advance window below."""
+        if not self.buffered:
+            return super().round_step_fn(state, world)
+        return self._window_step_fn(state, world)
+
+    # the async vocabulary for the same transition: rollouts, fleets and
+    # the jitted ``round_step`` all route through round_step_fn above
+    window_step_fn = round_step_fn
+
+    @property
+    def window_step(self) -> Callable:
+        return self.round_step
+
+    def _presence_row(self, tick: jnp.ndarray) -> Optional[jnp.ndarray]:
+        """[N] presence mask at event-clock ``tick`` (None = everyone)."""
+        if self._presence_np is None:
+            return None
+        tbl = jnp.asarray(self._presence_np)
+        return tbl[jnp.mod(tick, tbl.shape[0])]
+
+    def _delay_keys(self, key: jax.Array) -> jnp.ndarray:
+        """[S] per-task delay keys folded OFF the state key on the
+        ``_DELAY_STREAM`` tag — a separate stream from the sync split
+        schedule, so the sync draws are untouched by construction."""
+        k_delay = jax.random.fold_in(key, _DELAY_STREAM)
+        return jnp.stack([jax.random.fold_in(k_delay, s)
+                          for s in range(self.S)])
+
+    def make_window_fn(self, s: int,
+                       local_all: Optional[Callable] = None) -> Callable:
+        """Task s's buffered window: cohort training starts at the window
+        open (same slot-keyed per-client math as the synchronous
+        ``make_round_fn`` cohort path), fresh updates enter the in-flight
+        buffer under their drawn delay, and whatever lands aggregates
+        over the full client axis."""
+        strat = self.strategy
+        N, cohort = self.N, self.cohort_size
+        W = self.window_size
+        dm = self.delay_model
+        static_view = (self.d[:, s], self._d_v[:, s], self._B_v,
+                       self.proc_client, self.world.client_mask)
+        local_all = local_all or self._local_all[s]
+
+        def window_fn(params, mstate, astate, train_in, p_col, act_v,
+                      data, lr, round_f, tick, dkey, pres, view=None):
+            d_col, d_v_col, B_v, proc, cmask = (static_view if view is None
+                                                else view)
+            coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
+            coeff_client = jnp.zeros((N,)).at[proc].add(coeffs_v)
+            act_client = (jnp.zeros((N,)).at[proc]
+                          .add(act_v) > 0).astype(jnp.float32)
+            if pres is not None:
+                # departed clients no-show: sampled, never trained
+                act_client = act_client * pres
+            # START: the sampled cohort opens local rounds this window
+            # (stable argsort + slot-keyed randomness, as in the sync
+            # cohort path — padding/capacity invariants carry over)
+            idx = jnp.argsort(-act_client)[:cohort]
+            keys = sampling.index_keys(train_in, cohort)
+            data_c = jax.tree.map(lambda x: x[idx], data)
+            corr = strat.local_correction(mstate, idx)
+            G_c, _ = local_all(params, keys, data_c, lr, corr)
+            act_c = act_client[idx]
+            # heterogeneous upload delays, ticks -> windows
+            ticks = dm.delays(dkey, tick, N)
+            delay_w = delay_mod.delays_in_windows(ticks, W)
+            started = jnp.zeros((N,)).at[idx].set(act_c)
+            # INSERT: fresh starts supersede any unlanded in-flight row
+            def put(buf, g):
+                sel = act_c.reshape((-1,) + (1,) * (g.ndim - 1)) > 0
+                return buf.at[idx].set(
+                    jnp.where(sel, g.astype(buf.dtype), buf[idx]))
+            inflight = jax.tree.map(put, astate["inflight"], G_c)
+            coeff_buf = jnp.where(started > 0, coeff_client,
+                                  astate["coeff"])
+            timer = jnp.where(started > 0, delay_w, astate["timer"])
+            age = jnp.where(started > 0, 0, astate["age"])
+            # EXTRACT: aggregate the landings over the FULL client axis
+            # (the needs-all call shape every strategy supports; for the
+            # stale family the Eq. 18 store math corrects the delay)
+            arrived = (timer == 0).astype(jnp.float32)
+            new_w, new_st, extras = strat.aggregate(
+                params, mstate, inflight, coeff_buf * arrived, arrived,
+                jnp.arange(N), d_col=d_col, lr=lr, round_idx=round_f,
+                mask=cmask)
+            # ADVANCE: clear landed slots, age the live ones
+            live = timer > 0
+            new_ast = {
+                "inflight": jax.tree.map(
+                    lambda b: b * live.astype(b.dtype).reshape(
+                        (N,) + (1,) * (b.ndim - 1)),
+                    inflight),
+                "coeff": jnp.where(live, coeff_buf, 0.0),
+                "timer": jnp.where(live, timer - 1, EMPTY_SLOT),
+                "age": jnp.where(live, age + 1, 0),
+            }
+            n_arr = convergence.ordered_sum(arrived * cmask)
+            extras = dict(extras)
+            extras["arrived"] = n_arr
+            extras["staleness"] = (convergence.ordered_sum(
+                arrived * age.astype(jnp.float32) * cmask)
+                / jnp.maximum(n_arr, 1.0))
+            return new_w, new_st, new_ast, extras
+
+        return window_fn
+
+    def make_group_window_fn(self, g: int) -> Callable:
+        """Signature group g's fused window (mirrors
+        ``make_group_round_fn`` with the in-flight axes riding along)."""
+        grp = self.groups[g]
+        win_one = self.make_window_fn(grp[0],
+                                      local_all=self._local_all[grp[0]])
+
+        def window_g(params_g, state_g, astate_g, train_in_g, p_g, act_g,
+                     data_g, lr, round_f, tick, dkeys_g, pres, view_g):
+            if len(grp) == 1:
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                d_col, d_v_col, B_v, proc, cmask = view_g
+                out = win_one(sq(params_g), sq(state_g), sq(astate_g),
+                              sq(train_in_g), p_g[0], act_g[0],
+                              sq(data_g), lr, round_f, tick, dkeys_g[0],
+                              pres,
+                              (d_col[0], d_v_col[0], B_v, proc, cmask))
+                return jax.tree.map(lambda a: a[None], out)   # 4-tuple
+            return jax.vmap(
+                win_one,
+                in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, 0, None,
+                         (0, 0, None, None, None)))(
+                params_g, state_g, astate_g, train_in_g, p_g, act_g,
+                data_g, lr, round_f, tick, dkeys_g, pres, view_g)
+
+        return window_g
+
+    def _window_step_fn(self, state: ExperimentState,
+                        world: Optional[World] = None
+                        ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
+        """One buffered window: phases 1-3 (stats, sampling, monitors)
+        are byte-for-byte the synchronous phases; phase 4 swaps the
+        barrier round for the insert/extract/advance window."""
+        cfg, S = self.cfg, self.S
+        strat = self.strategy
+        explicit = world is not None
+        w = self.world if world is None else world
+        round_f = state.round.astype(jnp.float32)
+        lr = jnp.float32(cfg.lr) * jnp.float32(cfg.lr_decay) ** round_f
+        keys = jax.random.split(state.key, 2 + S)
+        new_key, k_sample = keys[0], keys[1]
+        task_keys = keys[2:]
+        delay_keys = self._delay_keys(state.key)
+        tick = state.round * self.window_size
+        pres = self._presence_row(tick)
+        fused = self.fuse_tasks
+
+        # ---- 1) stats for the sampler (async_ok methods never need the
+        # all-client G/norms branch — it is the barrier itself) ----------
+        if fused:
+            stats = [self._g_stats[g](state.params[g], w.data[g],
+                                      task_keys[np.asarray(grp)], lr,
+                                      explicit)
+                     for g, grp in enumerate(self.groups)]
+            losses_ns = self._to_task_cols([st[0] for st in stats])
+        else:
+            stats = [self._stats_pure[s](self.task_params(state, s),
+                                         self._task_data(w, s, explicit),
+                                         task_keys[s], lr, explicit)
+                     for s in range(S)]
+            losses_ns = jnp.stack([st[0] for st in stats], axis=1)
+        norms_ns = None
+
+        # ---- 2) sampling ------------------------------------------------
+        ctx = self.sampler_ctx(state.round, world)
+        if self.probabilities_hook is not None:
+            p = self.probabilities_hook(ctx, losses_ns, norms_ns)
+        else:
+            p = strat.probabilities(ctx, losses_ns, norms_ns)
+        p = p * w.proc_mask[:, None]
+        active = strat.sample(k_sample, p, ctx, losses_ns)
+        active = active * w.proc_mask[:, None]
+
+        # ---- 3) Sec. 3.3 monitors ---------------------------------------
+        metrics = self.sampling_metrics(p, active, losses_ns, world)
+
+        # ---- 4) buffered per-task window --------------------------------
+        d_v_t = w.d[w.proc_client] if explicit else self._d_v
+        B_v_t = w.B[w.proc_client] if explicit else self._B_v
+        proc_t = w.proc_client if explicit else self.proc_client
+        cmask_t = w.client_mask if explicit else self.world.client_mask
+        beta_parts: List[Any] = []
+        arr_parts: List[jnp.ndarray] = []
+        stl_parts: List[jnp.ndarray] = []
+        if fused:
+            new_params, new_mstate, new_astate = [], [], []
+            for g, grp in enumerate(self.groups):
+                ia = np.asarray(grp)
+                view = (w.d[:, ia].T, d_v_t[:, ia].T, B_v_t, proc_t,
+                        cmask_t)
+                new_w, new_st, new_ast, extras = self._g_window[g](
+                    state.params[g], state.method_state[g],
+                    state.async_state[g], task_keys[ia], p[:, ia].T,
+                    active[:, ia].T, w.data[g], lr, round_f, tick,
+                    delay_keys[ia], pres, view)
+                new_params.append(new_w)
+                new_mstate.append(new_st)
+                new_astate.append(new_ast)
+                beta_parts.append(extras.get("beta"))
+                arr_parts.append(extras["arrived"])
+                stl_parts.append(extras["staleness"])
+            if beta_parts[0] is not None:
+                metrics["beta"] = self._scatter_tasks(
+                    beta_parts, tail_shape=(self.N,))
+        else:
+            new_params = [state.params[g] for g in range(self.n_groups)]
+            new_mstate = [state.method_state[g]
+                          for g in range(self.n_groups)]
+            new_astate = [state.async_state[g]
+                          for g in range(self.n_groups)]
+            betas: List[jnp.ndarray] = []
+            arr_s: List[jnp.ndarray] = []
+            stl_s: List[jnp.ndarray] = []
+            for s in range(S):
+                g, j = self.task_gs[s]
+                view = ((w.d[:, s], d_v_t[:, s], B_v_t, proc_t, cmask_t)
+                        if explicit else None)
+                new_w, new_st, new_ast, extras = self._window_pure[s](
+                    self.task_params(state, s),
+                    self.task_method_state(state, s),
+                    self.task_async_state(state, s), task_keys[s],
+                    p[:, s], active[:, s],
+                    self._task_data(w, s, explicit), lr, round_f, tick,
+                    delay_keys[s], pres, view)
+                new_params[g] = jax.tree.map(
+                    lambda a, v: a.at[j].set(v), new_params[g], new_w)
+                new_mstate[g] = jax.tree.map(
+                    lambda a, v: a.at[j].set(v), new_mstate[g], new_st)
+                new_astate[g] = jax.tree.map(
+                    lambda a, v: a.at[j].set(v), new_astate[g], new_ast)
+                if "beta" in extras:
+                    betas.append(extras["beta"])
+                arr_s.append(extras["arrived"])
+                stl_s.append(extras["staleness"])
+            if betas:
+                metrics["beta"] = jnp.stack(betas)
+            arr_parts = [jnp.stack([arr_s[s] for s in grp])
+                         for grp in self.groups]
+            stl_parts = [jnp.stack([stl_s[s] for s in grp])
+                         for grp in self.groups]
+        metrics["arrived"] = self._scatter_tasks(arr_parts)
+        metrics["staleness"] = self._scatter_tasks(stl_parts)
+        new_state = ExperimentState(
+            params=tuple(new_params), method_state=tuple(new_mstate),
+            key=new_key, round=state.round + 1, losses_ns=losses_ns,
+            client_mask=state.client_mask, task_group=state.task_group,
+            task_slot=state.task_slot, async_state=tuple(new_astate))
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    # client-sharded window
+    # ------------------------------------------------------------------
+    def _make_group_window_loc(self, g: int) -> Callable:
+        """Group g's buffered window over ONE shard's client block
+        (mirrors ``_make_group_round_loc``: replicated sampling arrays,
+        global-rank cohort keys, shard-local buffers, delays drawn with
+        the shard's global index offset — per-client math bitwise the
+        single-device window)."""
+        grp = self.groups[g]
+        strat = self.strategy
+        N, n_loc, cohort = self.N, self.n_loc, self.cohort_size
+        cohort_loc = min(cohort, n_loc)
+        W = self.window_size
+        dm = self.delay_model
+        local_all = self._local_all[grp[0]]
+        axis = sharding.CLIENT_AXIS
+
+        def win_one(params, mstate, astate, train_in, p_col, act_v, data,
+                    lr, round_f, tick, dkey, pres, view, off):
+            d_col, d_v_col, B_v, proc, cmask = view    # replicated [N]/[V]
+            coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
+            coeff_client = jnp.zeros((N,)).at[proc].add(coeffs_v)
+            act_client = (jnp.zeros((N,)).at[proc]
+                          .add(act_v) > 0).astype(jnp.float32)
+            if pres is not None:
+                act_client = act_client * pres
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, off, n_loc)
+            coeff_loc, act_loc = sl(coeff_client), sl(act_client)
+            d_loc, cmask_loc = sl(d_col), sl(cmask)
+            # START: local members of the global cohort, global-rank keys
+            acts_i = act_client.astype(jnp.int32)
+            rank = jnp.cumsum(acts_i) - acts_i
+            rank_loc = sl(rank)
+            in_cohort = act_loc * (rank_loc < cohort)
+            idx = jnp.argsort(-in_cohort)[:cohort_loc]
+            slot_keys = jax.vmap(
+                lambda i: jax.random.fold_in(train_in, i))(rank_loc[idx])
+            data_c = jax.tree.map(lambda x: x[idx], data)
+            corr = strat.local_correction(mstate, idx)
+            G_c, _ = local_all(params, slot_keys, data_c, lr, corr)
+            act_c = in_cohort[idx]
+            ticks = dm.delays(dkey, tick, n_loc, offset=off)
+            delay_w = delay_mod.delays_in_windows(ticks, W)
+            started = jnp.zeros((n_loc,)).at[idx].set(act_c)
+            # INSERT into the shard-local buffers
+            def put(buf, g_):
+                sel = act_c.reshape((-1,) + (1,) * (g_.ndim - 1)) > 0
+                return buf.at[idx].set(
+                    jnp.where(sel, g_.astype(buf.dtype), buf[idx]))
+            inflight = jax.tree.map(put, astate["inflight"], G_c)
+            coeff_buf = jnp.where(started > 0, coeff_loc,
+                                  astate["coeff"])
+            timer = jnp.where(started > 0, delay_w, astate["timer"])
+            age = jnp.where(started > 0, 0, astate["age"])
+            # EXTRACT: shard-local landings, psum'd inside aggregate
+            arrived = (timer == 0).astype(jnp.float32)
+            new_w, new_st, extras = strat.aggregate(
+                params, mstate, inflight, coeff_buf * arrived, arrived,
+                jnp.arange(n_loc), d_col=d_loc, lr=lr, round_idx=round_f,
+                mask=cmask_loc, axis_name=axis)
+            # ADVANCE
+            live = timer > 0
+            new_ast = {
+                "inflight": jax.tree.map(
+                    lambda b: b * live.astype(b.dtype).reshape(
+                        (n_loc,) + (1,) * (b.ndim - 1)),
+                    inflight),
+                "coeff": jnp.where(live, coeff_buf, 0.0),
+                "timer": jnp.where(live, timer - 1, EMPTY_SLOT),
+                "age": jnp.where(live, age + 1, 0),
+            }
+            # 0/1 integer sums in f32: exact, so psum-of-partials is
+            # BITWISE the single-device ordered sum
+            n_arr = jax.lax.psum(
+                convergence.ordered_sum(arrived * cmask_loc), axis)
+            stl = jax.lax.psum(
+                convergence.ordered_sum(
+                    arrived * age.astype(jnp.float32) * cmask_loc), axis)
+            extras = dict(extras)
+            extras["arrived"] = n_arr
+            extras["staleness"] = stl / jnp.maximum(n_arr, 1.0)
+            return new_w, new_st, new_ast, extras
+
+        def window_g(params_g, state_g, astate_g, train_in_g, p_g, act_g,
+                     data_g, lr, round_f, tick, dkeys_g, pres, view_g,
+                     off):
+            if len(grp) == 1:
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                d_col, d_v_col, B_v, proc, cmask = view_g
+                out = win_one(sq(params_g), sq(state_g), sq(astate_g),
+                              sq(train_in_g), p_g[0], act_g[0],
+                              sq(data_g), lr, round_f, tick, dkeys_g[0],
+                              pres,
+                              (d_col[0], d_v_col[0], B_v, proc, cmask),
+                              off)
+                return jax.tree.map(lambda a: a[None], out)
+            return jax.vmap(
+                win_one,
+                in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, 0, None,
+                         (0, 0, None, None, None), None))(
+                params_g, state_g, astate_g, train_in_g, p_g, act_g,
+                data_g, lr, round_f, tick, dkeys_g, pres, view_g, off)
+
+        return window_g
+
+    def _make_sharded_body(self) -> Callable:
+        """The buffered window as one shard_map body (the zero-delay
+        engine keeps the base body — async_state passes through it
+        untouched, preserving the sharded bit-equivalence)."""
+        if not self.buffered:
+            return super()._make_sharded_body()
+        cfg, S = self.cfg, self.S
+        strat = self.strategy
+        axis = sharding.CLIENT_AXIS
+        n_loc, groups = self.n_loc, self.groups
+        W = self.window_size
+        d_full, d_v, B_v = self.d, self._d_v, self._B_v
+        proc, proc_mask = self.proc_client, self.world.proc_mask
+        cmask_full = self.world.client_mask
+        g_stats = [self._make_group_stats_loc(g)
+                   for g in range(self.n_groups)]
+        g_window = [self._make_group_window_loc(g)
+                    for g in range(self.n_groups)]
+
+        def body(state: ExperimentState, data: Tuple[Any, ...]
+                 ) -> Tuple[ExperimentState, Dict[str, jnp.ndarray]]:
+            off = jax.lax.axis_index(axis) * n_loc
+            round_f = state.round.astype(jnp.float32)
+            lr = jnp.float32(cfg.lr) * jnp.float32(cfg.lr_decay) ** round_f
+            keys = jax.random.split(state.key, 2 + S)
+            new_key, k_sample = keys[0], keys[1]
+            task_keys = keys[2:]
+            delay_keys = self._delay_keys(state.key)
+            tick = state.round * W
+            pres = self._presence_row(tick)    # replicated [N] row
+
+            # ---- 1) stats on the local client block ---------------------
+            stats = [g_stats[g](state.params[g], data[g],
+                                task_keys[np.asarray(grp)], lr, off)
+                     for g, grp in enumerate(groups)]
+            losses_loc = self._to_task_cols([st[0] for st in stats],
+                                            n=n_loc)
+            losses_ns = jax.lax.all_gather(losses_loc, axis, axis=0,
+                                           tiled=True)
+
+            # ---- 2) sampling (replicated) -------------------------------
+            ctx = self.sampler_ctx(state.round)
+            if self.probabilities_hook is not None:
+                p = self.probabilities_hook(ctx, losses_ns, None)
+            else:
+                p = strat.probabilities(ctx, losses_ns, None)
+            p = p * proc_mask[:, None]
+            active = strat.sample(k_sample, p, ctx, losses_ns)
+            active = active * proc_mask[:, None]
+
+            # ---- 3) monitors (replicated) -------------------------------
+            metrics = self.sampling_metrics(p, active, losses_ns)
+
+            # ---- 4) buffered window on local blocks ---------------------
+            new_params, new_mstate, new_astate = [], [], []
+            beta_parts, arr_parts, stl_parts = [], [], []
+            for g, grp in enumerate(groups):
+                ia = np.asarray(grp)
+                view = (d_full[:, ia].T, d_v[:, ia].T, B_v, proc,
+                        cmask_full)
+                new_w, new_st, new_ast, extras = g_window[g](
+                    state.params[g], state.method_state[g],
+                    state.async_state[g], task_keys[ia], p[:, ia].T,
+                    active[:, ia].T, data[g], lr, round_f, tick,
+                    delay_keys[ia], pres, view, off)
+                new_params.append(new_w)
+                new_mstate.append(new_st)
+                new_astate.append(new_ast)
+                beta_parts.append(extras.get("beta"))
+                arr_parts.append(extras["arrived"])
+                stl_parts.append(extras["staleness"])
+            if beta_parts[0] is not None:
+                beta_loc = self._scatter_tasks(beta_parts,
+                                               tail_shape=(n_loc,))
+                metrics["beta"] = jax.lax.all_gather(
+                    beta_loc, axis, axis=1, tiled=True)
+            metrics["arrived"] = self._scatter_tasks(arr_parts)
+            metrics["staleness"] = self._scatter_tasks(stl_parts)
+            new_state = ExperimentState(
+                params=tuple(new_params), method_state=tuple(new_mstate),
+                key=new_key, round=state.round + 1, losses_ns=losses_loc,
+                client_mask=state.client_mask,
+                task_group=state.task_group, task_slot=state.task_slot,
+                async_state=tuple(new_astate))
+            return new_state, metrics
+
+        return body

@@ -1,0 +1,167 @@
+"""Pluggable per-client upload-delay models for the async engine.
+
+A delay model answers ONE traced question each event-clock window: "if
+client i starts a local round now, how many clock ticks until its update
+lands at the server?"  The answer is an [n] int32 vector in
+``[0, max_lag]`` where ``max_lag`` is a STATIC (Python int) bound — the
+async engine sizes its in-flight buffers and its staleness invariants
+from it, and ``max_lag == 0`` is the structural switch that recovers the
+synchronous barrier (``core.async_engine``).
+
+Draw contract (mirrors ``sampling.index_keys``): randomized models key
+each client's draw by (key, GLOBAL client index) via ``fold_in``, so
+
+  * padded worlds draw bit-identical delays for their real clients
+    (prefix invariance), and
+  * a client-sharded engine reproduces the single-device draws by
+    passing its shard's global ``offset`` (shardability by construction).
+
+Deterministic models (``deterministic``, ``trace``) ignore the key; the
+trace model additionally consumes the traced ``round_idx`` (the event
+clock) and cycles its [T, n] table.
+
+Registry: ``@register_delay("name")`` / ``make_delay("name", **kw)`` —
+the string surface ``fl.experiments``/``fl.sweep`` expose as the sweep's
+delay axis.
+"""
+from __future__ import annotations
+
+from typing import Any, ClassVar, Dict, List, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sampling
+
+
+class DelayModel:
+    """Base delay model: zero delay (every update lands in its own
+    window — the synchronous special case)."""
+
+    name: ClassVar[str] = "?"
+    #: static upper bound on any drawn delay, in event-clock ticks.  The
+    #: async engine's buffer math and the staleness invariant
+    #: 0 <= age <= ceil(max_lag / window_size) hang off this Python int.
+    max_lag: int = 0
+
+    def delays(self, key: jax.Array, round_idx: Any, n: int,
+               offset: Any = 0) -> jnp.ndarray:
+        """[n] int32 ticks in [0, max_lag] for clients
+        [offset, offset + n) at event-clock time ``round_idx``."""
+        return jnp.zeros((n,), jnp.int32)
+
+    def __repr__(self) -> str:  # sweep labels / bench derived strings
+        return f"{type(self).__name__}(max_lag={self.max_lag})"
+
+
+_REGISTRY: Dict[str, Type[DelayModel]] = {}
+
+
+def register_delay(name: str):
+    def deco(cls: Type[DelayModel]) -> Type[DelayModel]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_delay_class(name: str) -> Type[DelayModel]:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown delay model {name!r}; available: "
+                       f"{', '.join(available_delay_models())}")
+    return _REGISTRY[name]
+
+
+def make_delay(name: str, **kwargs: Any) -> DelayModel:
+    return get_delay_class(name)(**kwargs)
+
+
+def available_delay_models() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+@register_delay("zero")
+class ZeroDelay(DelayModel):
+    """No delay: async(delay=0) == sync, the headline equivalence."""
+    max_lag = 0
+
+
+@register_delay("deterministic")
+class DeterministicDelay(DelayModel):
+    """Every start lands exactly ``lag`` ticks later (scalar), or client
+    i lands ``lag[i]`` ticks later (per-client [N] vector — fixed
+    heterogeneous stragglers)."""
+
+    def __init__(self, lag: Any = 1):
+        lag_np = np.asarray(lag, np.int32)
+        if np.any(lag_np < 0):
+            raise ValueError("deterministic lag must be >= 0")
+        self.max_lag = int(lag_np.max())
+        self._lag = lag_np
+
+    def delays(self, key, round_idx, n, offset=0):
+        if self._lag.ndim == 0:
+            return jnp.full((n,), int(self._lag), jnp.int32)
+        rows = jax.lax.dynamic_slice_in_dim(
+            jnp.asarray(self._lag), jnp.asarray(offset, jnp.int32), n)
+        return rows.astype(jnp.int32)
+
+
+@register_delay("geometric")
+class GeometricDelay(DelayModel):
+    """Geometric straggler: each tick an in-flight update finishes with
+    probability ``q`` — delay = #failures before the first success,
+    clipped to the static ``max_lag`` (the buffer bound)."""
+
+    def __init__(self, q: float = 0.5, max_lag: int = 4):
+        if not 0.0 < q <= 1.0:
+            raise ValueError(f"geometric success rate q={q} must be in "
+                             f"(0, 1]")
+        if max_lag < 0:
+            raise ValueError("max_lag must be >= 0")
+        self.q = float(q)
+        self.max_lag = int(max_lag)
+
+    def delays(self, key, round_idx, n, offset=0):
+        u = sampling.index_uniform(key, n, offset=offset)      # [n] in [0,1)
+        # inverse-CDF geometric (failures before success), exact at q=1
+        ticks = jnp.floor(jnp.log1p(-u) / np.log1p(-self.q + 1e-12))
+        return jnp.clip(ticks, 0, self.max_lag).astype(jnp.int32)
+
+
+@register_delay("trace")
+class TraceDelay(DelayModel):
+    """Trace-driven delays: a [T, N] int32 table of per-(tick, client)
+    lags, cycled along the event clock (row ``round_idx % T``) — replay
+    of measured device straggler traces."""
+
+    def __init__(self, trace: Any):
+        trace_np = np.asarray(trace, np.int32)
+        if trace_np.ndim != 2:
+            raise ValueError(f"trace must be [T, N]; got shape "
+                             f"{trace_np.shape}")
+        if np.any(trace_np < 0):
+            raise ValueError("trace delays must be >= 0")
+        self.max_lag = int(trace_np.max()) if trace_np.size else 0
+        self._trace = trace_np
+
+    def delays(self, key, round_idx, n, offset=0):
+        tbl = jnp.asarray(self._trace)
+        row = tbl[jnp.mod(jnp.asarray(round_idx, jnp.int32),
+                          tbl.shape[0])]
+        return jax.lax.dynamic_slice_in_dim(
+            row, jnp.asarray(offset, jnp.int32), n).astype(jnp.int32)
+
+
+def lag_in_windows(max_lag: int, window_size: int) -> int:
+    """Static tick bound -> window bound: an update ``t`` ticks slow
+    misses ``ceil(t / W)`` aggregation windows of size ``W``."""
+    if window_size < 1:
+        raise ValueError(f"window_size must be >= 1; got {window_size}")
+    return -(-int(max_lag) // int(window_size))
+
+
+def delays_in_windows(ticks: jnp.ndarray, window_size: int) -> jnp.ndarray:
+    """Per-client tick delays -> window delays (same ceil-div)."""
+    return (ticks + (window_size - 1)) // window_size

@@ -128,7 +128,16 @@ class ExperimentState(NamedTuple):
     ``client_mask`` [N] records which client rows are real (1) vs padding
     (0) — checkpointed so a padded run resumes with the same world
     contract.  Checkpoints written before the grouped layout cannot restore
-    into a current engine template (restore raises a schema error)."""
+    into a current engine template (restore raises a schema error).
+
+    ``async_state`` is the event-driven engine's in-flight surface
+    (``core.async_engine``): a per-GROUP tuple of dicts holding the
+    [T_g, N, params] in-flight update buffers and the [T_g, N] landing
+    timers / staleness counters — None on synchronous engines, threaded
+    (and donated / client-sharded) exactly like the stale stores when an
+    ``AsyncRoundEngine`` attaches it.  Restoring a pre-async checkpoint
+    into an async template raises ``checkpoint.CheckpointSchemaError``
+    unless the migration shim (``fill_missing``) zero-fills it."""
     params: Tuple[Any, ...]
     method_state: Tuple[Any, ...]
     key: jax.Array
@@ -137,6 +146,7 @@ class ExperimentState(NamedTuple):
     client_mask: Optional[jax.Array] = None   # [N] 1 real / 0 padding
     task_group: Optional[jax.Array] = None    # [S] int32 task -> group
     task_slot: Optional[jax.Array] = None     # [S] int32 task -> slot
+    async_state: Optional[Any] = None         # per-group in-flight buffers
 
 
 # ---------------------------------------------------------------------------
@@ -807,6 +817,14 @@ class RoundEngine:
             jax.random.PRNGKey(0))
         return self.strategy.state_client_axes(struct)
 
+    def _async_state_specs(self, struct: Any) -> Any:
+        """PartitionSpecs for ``ExperimentState.async_state`` under the
+        client mesh.  The synchronous engine carries None (an empty
+        pytree — no specs needed); ``AsyncRoundEngine`` overrides with
+        the in-flight buffer layout (every async leaf is client-indexed
+        after the group-stack axis, like the stale stores)."""
+        return None
+
     def _build_sharded(self) -> None:
         """State/data PartitionSpecs, NamedShardings, and the jitted
         shard_map step for the client mesh.
@@ -827,7 +845,8 @@ class RoundEngine:
                              self._mstate_flags(g))
                 for g in range(self.n_groups)),
             key=P(), round=P(), losses_ns=P(axis), client_mask=P(axis),
-            task_group=P(), task_slot=P())
+            task_group=P(), task_slot=P(),
+            async_state=self._async_state_specs(struct))
         self.state_shardings = sharding.tree_shardings(self.mesh,
                                                        self.state_specs)
         self.data_spec = P(None, axis)
@@ -1064,7 +1083,7 @@ class RoundEngine:
                 params=tuple(new_params), method_state=tuple(new_mstate),
                 key=new_key, round=state.round + 1, losses_ns=losses_loc,
                 client_mask=state.client_mask, task_group=state.task_group,
-                task_slot=state.task_slot)
+                task_slot=state.task_slot, async_state=state.async_state)
             return new_state, metrics
 
         return body
@@ -1276,7 +1295,7 @@ class RoundEngine:
             params=tuple(new_params), method_state=tuple(new_mstate),
             key=new_key, round=state.round + 1, losses_ns=losses_ns,
             client_mask=state.client_mask, task_group=state.task_group,
-            task_slot=state.task_slot)
+            task_slot=state.task_slot, async_state=state.async_state)
         return new_state, metrics
 
     # ------------------------------------------------------------------

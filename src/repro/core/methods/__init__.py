@@ -8,8 +8,9 @@ subclass of ``MethodStrategy`` + an import line here; the server engine,
 the distributed trainer, the benchmarks, and the tests discover it through
 ``available_methods()``."""
 from repro.core.methods.base import (MethodStrategy, SamplerContext,
-                                     available_methods, distributed_methods,
-                                     get_class, make, register)
+                                     async_methods, available_methods,
+                                     distributed_methods, get_class, make,
+                                     register)
 from repro.core.methods.mixins import (LossSamplingMixin, StaleStoreMixin,
                                        UniformSamplingMixin)
 from repro.core.methods.stale_family import StaleVRFamily
@@ -32,6 +33,6 @@ from repro.core.methods import power_of_choice  # noqa: F401
 __all__ = [
     "MethodStrategy", "SamplerContext", "StaleVRFamily",
     "LossSamplingMixin", "StaleStoreMixin", "UniformSamplingMixin",
-    "available_methods", "distributed_methods", "get_class", "make",
-    "register",
+    "async_methods", "available_methods", "distributed_methods",
+    "get_class", "make", "register",
 ]

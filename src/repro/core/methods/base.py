@@ -89,6 +89,17 @@ class MethodStrategy:
     # partial + psum) must set False — the engine then refuses the mesh
     # instead of silently computing shard-local garbage.
     shardable: ClassVar[bool] = True
+    # usable under the event-driven async engine with NONZERO delays
+    # (``core.async_engine``): the async window hands ``aggregate`` only
+    # the updates that LANDED this window (a sparse, delayed subset over
+    # the full client axis).  needs_all_updates strategies contradict
+    # that by definition — every client's FRESH update every round is
+    # exactly the barrier async drops — so they set False and the async
+    # engine refuses them at construction (the zero-delay special case,
+    # being structurally the synchronous path, still accepts every
+    # method).  Stale-store strategies are the intended citizens: their
+    # Eq. 18 correction math is the delayed-update correction path.
+    async_ok: ClassVar[bool] = True
     # True when the strategy derives STATIC Python sizes from the budget m:
     # under a world-vmapped grid those sizes freeze at the template world's
     # m_host, so worlds with a different budget would silently sample
@@ -220,3 +231,8 @@ def available_methods() -> List[str]:
 def distributed_methods() -> List[str]:
     """Methods the distributed trainer can run (sampling-side only)."""
     return sorted(n for n, c in _REGISTRY.items() if c.distributed_ok)
+
+
+def async_methods() -> List[str]:
+    """Methods the async engine can run with nonzero delays."""
+    return sorted(n for n, c in _REGISTRY.items() if c.async_ok)

@@ -13,6 +13,7 @@ from repro.core.methods.base import MethodStrategy, register
 class FullParticipationMethod(MethodStrategy):
     needs_all_updates = True
     uses_loss_stats = False
+    async_ok = False      # full participation IS the round barrier
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
         avail_v = sampling.processor_budget_utilities(

@@ -13,6 +13,7 @@ class GVRMethod(MethodStrategy):
     needs_all_updates = True
     uses_loss_stats = False
     needs_grad_norms = True
+    async_ok = False      # ||G|| needs every client's FRESH update
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
         return sampling.gvr_probabilities(norms_ns, ctx.d, ctx.B,

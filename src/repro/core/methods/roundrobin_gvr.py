@@ -11,6 +11,7 @@ class RoundRobinGVRMethod(MethodStrategy):
     needs_all_updates = True
     uses_loss_stats = False
     needs_grad_norms = True
+    async_ok = False      # ||G|| needs every client's FRESH update
 
     def probabilities(self, ctx, losses_ns, norms_ns=None):
         avail = sampling.roundrobin_mask(

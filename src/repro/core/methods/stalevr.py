@@ -12,6 +12,8 @@ from repro.core.methods.stale_family import StaleVRFamily
 @register("stalevr")
 class StaleVRMethod(LossSamplingMixin, StaleVRFamily):
     needs_all_updates = True
+    async_ok = False      # exact beta* (Eq. 20) needs all fresh updates;
+                          # StaleVRE is the async-capable estimator
 
     def _beta(self, state, G, h_cohort, act, idx, round_idx):
         # G covers all N clients here (idx == arange(N))

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import methods
+from repro.core.async_engine import AsyncConfig, AsyncRoundEngine
 from repro.core.engine import (PROBE_TAKE, RoundEngine, World,
                                build_world_arrays)
 from repro.core.server import MMFLServer, ModelAdapter, ServerConfig, Task
@@ -241,7 +242,14 @@ class ExperimentSpec:
     ``run_seed_fleet`` (stacked accuracy traces, one dispatch per chunk)
     — set ``eval_every=0`` (or >= ``rounds``) for the fully fused
     init+rollout+eval fleet dispatch.  ``linear=True`` swaps the CNN/LSTM
-    world for the seconds-fast linear micro-setting (benchmarks, CI)."""
+    world for the seconds-fast linear micro-setting (benchmarks, CI).
+
+    ``async_cfg`` is the ASYNC AXIS: ``AsyncConfig`` kwargs (or an
+    ``AsyncConfig``) selecting the event-driven engine — e.g.
+    ``{"delay": "geometric", "delay_kwargs": {"q": 0.5, "max_lag": 4},
+    "window_size": 2}``.  ``rounds`` then counts aggregation WINDOWS; the
+    zero-delay default is bit-identical to the synchronous engine, so the
+    axis composes with seed fleets and eval cadences unchanged."""
     method: str = "lvr"
     n_models: int = 3
     n_clients: int = 120
@@ -252,6 +260,7 @@ class ExperimentSpec:
     data_seed: int = 0
     eval_every: int = 5
     server: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    async_cfg: Optional[Any] = None
 
 
 def build_world(n_models: int, n_clients: int, data_seed: int = 0,
@@ -278,11 +287,21 @@ def build_world(n_models: int, n_clients: int, data_seed: int = 0,
                          label_frac=label_frac)
 
 
+def resolve_async_cfg(async_cfg: Any) -> Optional[AsyncConfig]:
+    """Normalize an async-axis value (None / kwargs dict / AsyncConfig)."""
+    if async_cfg is None or isinstance(async_cfg, AsyncConfig):
+        return async_cfg
+    return AsyncConfig(**async_cfg)
+
+
 def build_engine(spec: ExperimentSpec) -> RoundEngine:
     tasks, B, avail = build_world(spec.n_models, spec.n_clients,
                                   data_seed=spec.data_seed, small=spec.small,
                                   linear=spec.linear)
     cfg = ServerConfig(method=spec.method, seed=spec.seeds[0], **spec.server)
+    acfg = resolve_async_cfg(spec.async_cfg)
+    if acfg is not None:
+        return AsyncRoundEngine(tasks, B, avail, cfg, acfg)
     return RoundEngine(tasks, B, avail, cfg)
 
 

@@ -30,9 +30,10 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 
 import numpy as np
 
+from repro.core.async_engine import AsyncRoundEngine
 from repro.core.engine import RoundEngine, ServerConfig
-from repro.fl.experiments import (build_world, run_seed_fleet, stack_worlds,
-                                  world_fleet)
+from repro.fl.experiments import (build_world, resolve_async_cfg,
+                                  run_seed_fleet, stack_worlds, world_fleet)
 
 # two-sided 95% Student-t quantiles by degrees of freedom: seed fleets are
 # SMALL (3-5 replicates), where the normal z=1.96 would understate the CI
@@ -92,11 +93,21 @@ class MethodRun:
     overrides the spec-level ``ServerConfig`` kwargs.  ``probabilities`` is
     an optional hook factory ``engine -> (ctx, losses, norms) -> p [V,S]``
     pinning the sampling distribution inside the traced round (Fig. 5's
-    fixed two-group sampler)."""
+    fixed two-group sampler).
+
+    ``async_cfg`` is the ASYNC AXIS of the grid: ``AsyncConfig`` kwargs
+    (or an ``AsyncConfig``) selecting the event-driven engine for this
+    run — delay model x window size sweep cells are MethodRuns of the
+    same method under different ``async_cfg``s (give them distinct
+    labels).  Overrides the spec-level ``async_cfg`` default; ``rounds``
+    then counts aggregation windows.  Seed fleets vmap over the async
+    engine unchanged; ``vmap_worlds`` grids refuse the axis (the
+    in-flight buffers would multiply per world)."""
     method: str
     label: str = ""
     server: Dict[str, Any] = dataclasses.field(default_factory=dict)
     probabilities: Optional[Callable[[RoundEngine], Callable]] = None
+    async_cfg: Optional[Any] = None
 
     def __post_init__(self):
         self.label = self.label or self.method
@@ -129,6 +140,9 @@ class SweepSpec:
     eval_every: int = 0
     server: Dict[str, Any] = dataclasses.field(default_factory=dict)
     vmap_worlds: bool = False
+    # spec-level async default (AsyncConfig kwargs); a MethodRun's own
+    # async_cfg takes precedence
+    async_cfg: Optional[Any] = None
 
     def method_runs(self) -> List[MethodRun]:
         return [r if isinstance(r, MethodRun) else MethodRun(method=r)
@@ -254,7 +268,10 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
         for run in spec.method_runs():
             eng = _cached_engine(
                 engines, run, spec, seeds,
-                lambda cfg: RoundEngine(tasks, B, avail, cfg))
+                lambda cfg, acfg: (
+                    AsyncRoundEngine(tasks, B, avail, cfg, acfg)
+                    if acfg is not None
+                    else RoundEngine(tasks, B, avail, cfg)))
             out = run_seed_fleet(eng, seeds, spec.rounds,
                                  eval_every=spec.eval_every)
             result.add(SweepCell(
@@ -267,23 +284,39 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
 def _cached_engine(engines: Dict[Any, Any], run: MethodRun, spec: SweepSpec,
                    seeds: Tuple[int, ...], factory: Callable):
     """Engine-per-compile-signature cache shared by BOTH execution paths:
-    cells agreeing on (method, server overrides, sampling hook) share one
-    engine and therefore one compiled executable.  ``factory(cfg)`` builds
-    the cached value — a ``RoundEngine``, or ``world_fleet``'s (engine,
+    cells agreeing on (method, server overrides, sampling hook, async
+    config) share one engine and therefore one compiled executable.
+    ``factory(cfg, async_cfg)`` builds the cached value — a
+    ``RoundEngine``/``AsyncRoundEngine``, or ``world_fleet``'s (engine,
     stacked worlds) pair; the sampling hook is attached at build, before
     the first compile (it is read at trace time)."""
     server_kw = {**spec.server, **run.server}
+    acfg = resolve_async_cfg(run.async_cfg if run.async_cfg is not None
+                             else spec.async_cfg)
     sig = (run.method, tuple(sorted(server_kw.items())),
-           id(run.probabilities) if run.probabilities else None)
+           id(run.probabilities) if run.probabilities else None,
+           repr(acfg))
     value = engines.get(sig)
     if value is None:
         cfg = ServerConfig(method=run.method, seed=seeds[0], **server_kw)
-        value = factory(cfg)
+        value = factory(cfg, acfg)
         eng = value[0] if isinstance(value, tuple) else value
         if run.probabilities is not None:
             eng.probabilities_hook = run.probabilities(eng)
         engines[sig] = value
     return value
+
+
+def _world_fleet_sync(built, cfg, acfg, prepared):
+    """World grids stay synchronous: an async world fleet would multiply
+    the [T_g, N, params] in-flight buffers by the world axis."""
+    if acfg is not None:
+        raise ValueError(
+            "vmap_worlds sweeps do not support the async axis (async_cfg): "
+            "the per-world in-flight buffers would multiply every "
+            "client-state leaf; run async cells as per-setting seed fleets "
+            "(vmap_worlds=False)")
+    return world_fleet(built, cfg, prepared)
 
 
 def _run_sweep_worlds(spec: SweepSpec, result: SweepResult,
@@ -305,7 +338,8 @@ def _run_sweep_worlds(spec: SweepSpec, result: SweepResult,
         for run in spec.method_runs():
             eng, stacked = _cached_engine(
                 engines, run, spec, seeds,
-                lambda cfg: world_fleet(built, cfg, prepared))
+                lambda cfg, acfg: _world_fleet_sync(built, cfg, acfg,
+                                                    prepared))
             _, mets, accs = eng.run_worlds(stacked, seeds, spec.rounds)
             accs = np.asarray(accs)                   # [W, n_seeds, S]
             mets = {k: np.asarray(v) for k, v in mets.items()}

@@ -12,6 +12,13 @@ Multiple models (--models or repeated --arch) train concurrently: each
 round, every model's cohort is drawn from the same shared client population
 under the shared server budget m — the MMFL coupling.
 
+``--async`` drops the round barrier: dispatched cohorts still train
+immediately (against the params they downloaded) but their weighted deltas
+land only after per-client delays drawn from a ``core.delay`` model, with
+busy clients excluded from sampling until they land.  ``--async --delay
+zero`` replays the synchronous loop identically; methods that need the
+round barrier (``async_ok = False``) are refused up front.
+
 The loop is built on the SAME ``ExperimentState`` pytree as the single-host
 engine (``repro.core.engine``): per-model params, per-model method state
 (the StaleVR family's stale store + beta estimator ride along as ordinary
@@ -41,7 +48,9 @@ import numpy as np
 from repro.checkpoint import checkpoint
 from repro.configs.base import DEFAULT_ROUND, FLRoundConfig, InputShape
 from repro.configs.registry import get_config
+from repro.core import delay as delay_mod
 from repro.core import methods, stale
+from repro.core.async_engine import _DELAY_STREAM
 from repro.core.engine import ExperimentState
 from repro.data import synthetic
 from repro.fl import steps as fl_steps
@@ -117,6 +126,64 @@ def _init_state(strategy, params: List, key, N: int, S: int
                            client_mask=jnp.ones((N,), jnp.float32))
 
 
+def _make_delay_model(args):
+    """CLI surface over the ``core.delay`` registry (``--async`` only).
+    Trace-driven delays need a [T, N] table and stay an engine/sweep-level
+    feature."""
+    if args.delay == "deterministic":
+        return delay_mod.make_delay("deterministic", lag=args.lag)
+    if args.delay == "geometric":
+        return delay_mod.make_delay("geometric", q=args.delay_q,
+                                    max_lag=args.max_lag)
+    return delay_mod.make_delay(args.delay)
+
+
+def _run_cohort(mdl, params0_s, mstate_s, active_ids, coeff_n, C,
+                local_batch, batch_key, strategy):
+    """Chunked local training for one model's dispatched cohort.
+
+    Returns the coefficient-weighted delta summed over the cohort, the
+    per-client update rows (stale methods only), the H1 sum, and the
+    per-client training losses in ``active_ids`` order.  Reads only the
+    dispatch-time params/stale rows (what the clients downloaded), so the
+    synchronous loop applies the result immediately while ``--async``
+    buffers it until the dispatch's delay elapses."""
+    use_stale = strategy.uses_stale_store
+    zero_sm = (jax.tree.map(jnp.zeros_like, params0_s)
+               if use_stale else None)
+    n_chunks = int(np.ceil(len(active_ids) / C))
+    delta_acc = None
+    h1, losses_log = 0.0, []
+    g_rows = []
+    for ci in range(n_chunks):
+        ids = active_ids[ci * C:(ci + 1) * C]
+        cohort = np.resize(ids, C)        # pad by repeating
+        valid = np.zeros(C)
+        valid[: len(ids)] = 1.0
+        dweights_c = jnp.asarray(coeff_n[cohort] * valid)
+        toks = _batch_ids(batch_key(ci), mdl["data"], cohort, local_batch)
+        batch = {"tokens": jnp.asarray(toks[..., :-1])}
+        if use_stale:
+            # Eq. 18's fresh-update half per chunk; the stale
+            # mean over ALL clients is applied once, after the
+            # chunks (zero stale_sum here)
+            h_c = jax.tree.map(lambda x: x[cohort], mstate_s["h"])
+            new_params, mets, G, _beta_c = mdl["step"](
+                params0_s, batch, jnp.ones((C,)), dweights_c,
+                h_c, zero_sm)
+            g_rows.append(jax.tree.map(
+                lambda x: x[: len(ids)], G))
+        else:
+            new_params, mets = mdl["step"](
+                params0_s, batch, jnp.ones((C,)), dweights_c)
+        delta = jax.tree.map(lambda a, b: a - b, params0_s, new_params)
+        delta_acc = delta if delta_acc is None else jax.tree.map(
+            lambda a, b: a + b, delta_acc, delta)
+        h1 += float(mets["H1"])
+        losses_log.append(np.asarray(mets["losses"])[: len(ids)])
+    return delta_acc, g_rows, h1, np.concatenate(losses_log)
+
+
 def train(args) -> Dict:
     strategy, mesh, C, models, params0, key = _init_models(
         args, jax.random.PRNGKey(args.seed))
@@ -126,6 +193,25 @@ def train(args) -> Dict:
     d = jnp.full((N, S), 1.0 / N)
     m_budget = args.active_rate * N
     os.makedirs(args.out, exist_ok=True)
+
+    run_async = bool(getattr(args, "use_async", False))
+    dm = None
+    if run_async:
+        if not type(strategy).async_ok:
+            raise ValueError(
+                f"--async: method {args.method!r} needs every client's "
+                f"fresh update each round (the round barrier); "
+                f"async-capable methods: "
+                f"{', '.join(methods.async_methods())}")
+        dm = _make_delay_model(args)
+        print(f"async: delay={dm.name} max_lag={dm.max_lag}", flush=True)
+    # host-level event state: dispatched-but-unlanded cohorts and the
+    # clients they occupy (a busy client cannot start a new local run;
+    # the single-host engine's buffered path supersedes instead — see
+    # core.async_engine).  NOT part of ExperimentState: --resume restarts
+    # with an empty buffer.
+    busy = np.zeros((N, S), dtype=bool)
+    inflight: List[Dict] = []
 
     state = _init_state(strategy, params0, key, N, S)
     start_round, history = 0, []
@@ -156,6 +242,15 @@ def train(args) -> Dict:
             def stream(phase: int, s: int, ci: int):
                 k = jax.random.fold_in(k_round, phase)
                 return jax.random.fold_in(jax.random.fold_in(k, s), ci)
+            delays_r = None
+            if run_async:
+                # per-client landing delays (in rounds) for anything
+                # dispatched this round — a stream disjoint from the
+                # sampling/report/batch phases, same tag as the engine's
+                k_delay = jax.random.fold_in(k_round, _DELAY_STREAM)
+                delays_r = np.stack(
+                    [np.asarray(dm.delays(jax.random.fold_in(k_delay, s),
+                                          r, N)) for s in range(S)], axis=1)
             params = list(state.params)
             mstate = list(state.method_state)
             losses_ns = state.losses_ns
@@ -187,71 +282,105 @@ def train(args) -> Dict:
                 # C (the mesh's dp capacity); deltas accumulate against the
                 # round-start params so aggregation stays unbiased (Eq. 3)
                 act_s = np.asarray(act[:, s])
+                if run_async:
+                    act_s = act_s * (~busy[:, s])   # busy can't re-start
                 active_ids = np.where(act_s > 0)[0]
                 if len(active_ids) == 0:
-                    active_ids = np.array([int(np.argmax(np.asarray(p[:, s])))])
-                act_col = jnp.asarray(act[:, s]).at[active_ids[0]].set(1.0)
+                    if run_async:
+                        free = np.where(~busy[:, s])[0]
+                        if len(free) == 0:   # every client still computing
+                            round_mets[f"loss/{mdl['name']}"] = float("nan")
+                            round_mets[f"H1/{mdl['name']}"] = 0.0
+                            round_mets[f"active/{mdl['name']}"] = 0
+                            continue
+                        active_ids = np.array(
+                            [int(free[np.argmax(np.asarray(p[free, s]))])])
+                    else:
+                        active_ids = np.array(
+                            [int(np.argmax(np.asarray(p[:, s])))])
+                act_col = jnp.asarray(act_s).at[active_ids[0]].set(1.0)
                 # the strategy owns the aggregation weighting (unbiased
                 # d/(B p) for the VR family, normalized FedAvg weights for
                 # biased selection like power_of_choice)
                 coeff_n = np.asarray(strategy.coefficients(
                     d[:, s], B, jnp.clip(p[:, s], 1e-3, None), act_col))
-                n_chunks = int(np.ceil(len(active_ids) / C))
                 params0_s = params[s]
-                use_stale = strategy.uses_stale_store
-                zero_sm = (jax.tree.map(jnp.zeros_like, params0_s)
-                           if use_stale else None)
-                delta_acc = None
-                h1, losses_log = 0.0, []
-                g_rows = []
-                for ci in range(n_chunks):
-                    ids = active_ids[ci * C:(ci + 1) * C]
-                    cohort = np.resize(ids, C)        # pad by repeating
-                    valid = np.zeros(C)
-                    valid[: len(ids)] = 1.0
-                    dweights_c = jnp.asarray(coeff_n[cohort] * valid)
-                    toks = _batch_ids(stream(2, s, ci), mdl["data"],
-                                      cohort, args.local_batch)
-                    batch = {"tokens": jnp.asarray(toks[..., :-1])}
-                    if use_stale:
-                        # Eq. 18's fresh-update half per chunk; the stale
-                        # mean over ALL clients is applied once, after the
-                        # chunks (zero stale_sum here)
-                        h_c = jax.tree.map(lambda x: x[cohort],
-                                           mstate[s]["h"])
-                        new_params, mets, G, _beta_c = mdl["step"](
-                            params0_s, batch, jnp.ones((C,)), dweights_c,
-                            h_c, zero_sm)
-                        g_rows.append(jax.tree.map(
-                            lambda x: x[: len(ids)], G))
-                    else:
-                        new_params, mets = mdl["step"](
-                            params0_s, batch, jnp.ones((C,)), dweights_c)
-                    delta = jax.tree.map(lambda a, b: a - b, params0_s,
-                                         new_params)
-                    delta_acc = delta if delta_acc is None else jax.tree.map(
-                        lambda a, b: a + b, delta_acc, delta)
-                    h1 += float(mets["H1"])
-                    client_losses = np.asarray(mets["losses"])[: len(ids)]
-                    losses_log.append(client_losses)
-                new_w = jax.tree.map(lambda a, b: a - b, params0_s,
-                                     delta_acc)
-                if use_stale:
-                    new_w, mstate[s] = _apply_stale(
-                        strategy, mstate[s], new_w, d[:, s], r,
-                        active_ids, g_rows)
-                params[s] = new_w
-                all_losses = np.concatenate(losses_log)
+                if run_async:
+                    # one dispatch per distinct delay value: the partition
+                    # trains NOW (against the params it downloaded) and its
+                    # weighted delta lands ``dl`` rounds later.  dl == 0
+                    # reuses the synchronous batch stream, so
+                    # --async --delay zero replays a sync run identically.
+                    dls = delays_r[active_ids, s].astype(int)
+                    h1, parts = 0.0, []
+                    for dl in np.unique(dls):
+                        ids_d = active_ids[dls == dl]
+                        phase = 2 if int(dl) == 0 else 2 + int(dl)
+                        delta, g_rows, h1_d, ls = _run_cohort(
+                            mdl, params0_s, mstate[s], ids_d, coeff_n, C,
+                            args.local_batch,
+                            lambda ci, _p=phase, _s=s: stream(_p, _s, ci),
+                            strategy)
+                        inflight.append(dict(
+                            land=r + int(dl), s=s, ids=ids_d, delta=delta,
+                            g_rows=g_rows, dispatched=r, seq=len(inflight)))
+                        if int(dl) > 0:
+                            busy[ids_d, s] = True
+                        h1 += h1_d
+                        parts.append((ids_d, ls))
+                    disp_ids = np.concatenate([i for i, _ in parts])
+                    all_losses = np.concatenate([l for _, l in parts])
+                else:
+                    delta_acc, g_rows, h1, all_losses = _run_cohort(
+                        mdl, params0_s, mstate[s], active_ids, coeff_n, C,
+                        args.local_batch,
+                        lambda ci, _s=s: stream(2, _s, ci), strategy)
+                    disp_ids = active_ids
+                    new_w = jax.tree.map(lambda a, b: a - b, params0_s,
+                                         delta_acc)
+                    if strategy.uses_stale_store:
+                        new_w, mstate[s] = _apply_stale(
+                            strategy, mstate[s], new_w, d[:, s], r,
+                            active_ids, g_rows)
+                    params[s] = new_w
                 if mdl["report"] is None or args.report_every > 1:
                     # keep the sampler's loss view fresh from training
                     # losses (the report refresh would overwrite this at
                     # the top of the next round when report_every == 1)
                     ln = np.array(losses_ns)
-                    ln[active_ids, s] = all_losses
+                    ln[disp_ids, s] = all_losses
                     losses_ns = jnp.asarray(ln)
                 round_mets[f"loss/{mdl['name']}"] = float(np.mean(all_losses))
                 round_mets[f"H1/{mdl['name']}"] = h1
-                round_mets[f"active/{mdl['name']}"] = int(len(active_ids))
+                round_mets[f"active/{mdl['name']}"] = int(len(disp_ids))
+            if run_async:
+                # landing window: apply every dispatch whose delay elapsed,
+                # oldest first, with the SAME Eq. 18 epilogue the sync loop
+                # runs — stale mean + refresh against landing-time state
+                # (the fresh-correction half inside each delta was computed
+                # against the dispatch-time stale rows the clients saw)
+                landed = sorted((e for e in inflight if e["land"] <= r),
+                                key=lambda e: (e["land"], e["seq"]))
+                inflight = [e for e in inflight if e["land"] > r]
+                n_arr = np.zeros(S, int)
+                age_sum = np.zeros(S, float)
+                for e in landed:
+                    es = e["s"]
+                    busy[e["ids"], es] = False
+                    new_w = jax.tree.map(lambda a, b: a - b, params[es],
+                                         e["delta"])
+                    if strategy.uses_stale_store:
+                        new_w, mstate[es] = _apply_stale(
+                            strategy, mstate[es], new_w, d[:, es], r,
+                            e["ids"], e["g_rows"])
+                    params[es] = new_w
+                    n_arr[es] += len(e["ids"])
+                    age_sum[es] += (r - e["dispatched"]) * len(e["ids"])
+                for s, mdl in enumerate(models):
+                    round_mets[f"arrived/{mdl['name']}"] = int(n_arr[s])
+                    round_mets[f"staleness/{mdl['name']}"] = (
+                        round(age_sum[s] / n_arr[s], 3) if n_arr[s]
+                        else 0.0)
             state = ExperimentState(
                 params=tuple(params), method_state=tuple(mstate),
                 key=new_key, round=jnp.asarray(r + 1, jnp.int32),
@@ -328,6 +457,24 @@ def build_parser():
     ap.add_argument("--eta-cap", type=float, default=None,
                     help="footnote-3 per-client participation cap "
                          "(capped water-filling; 1.0 == uncapped)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="event-driven rounds: dispatched cohorts land "
+                         "after per-client delays drawn from --delay; a "
+                         "client stays busy until its update lands. "
+                         "In-flight dispatches are NOT checkpointed, so "
+                         "--resume restarts with an empty buffer. "
+                         "--async --delay zero replays the synchronous "
+                         "loop identically")
+    ap.add_argument("--delay", default="geometric",
+                    choices=["zero", "deterministic", "geometric"],
+                    help="--async delay model (core.delay registry; "
+                         "trace-driven delays are an engine/sweep feature)")
+    ap.add_argument("--lag", type=int, default=1,
+                    help="--delay deterministic: rounds of landing lag")
+    ap.add_argument("--delay-q", type=float, default=0.5,
+                    help="--delay geometric: per-round landing probability")
+    ap.add_argument("--max-lag", type=int, default=4,
+                    help="--delay geometric: lag clip (rounds)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)

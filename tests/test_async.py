@@ -1,0 +1,379 @@
+"""The async engine's headline contracts.
+
+1. **async(delay=0) == sync bit-for-bit** for every registered method:
+   with a zero-lag delay model and no presence trace the window step IS
+   the synchronous round (same closures, same RNG schedule — the delay
+   stream is folded on a separate tag), so params, method state and
+   metrics match ``jnp.array_equal`` exactly, including under the
+   client-sharded mesh.
+2. With nonzero delays the StaleVR-family correction path converges on
+   the linear micro world, and the in-flight invariants hold: timers in
+   [-1, max_lag_windows], ages in [0, max_lag_windows], zero buffered
+   mass in empty slots.
+3. ``needs_all_updates`` strategies refuse the buffered path at
+   construction; checkpoints round-trip the new state and pre-async
+   payloads migrate through the ``fill_missing`` shim (timers -1).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint
+from repro.core import delay as delay_mod, methods, sharding
+from repro.core.async_engine import (AsyncConfig, AsyncRoundEngine,
+                                     EMPTY_SLOT)
+from repro.core.engine import RoundEngine, ServerConfig
+from repro.fl.experiments import build_linear_setting
+
+ALL_METHODS = methods.available_methods()
+ASYNC_METHODS = methods.async_methods()
+BARRIER_METHODS = sorted(set(ALL_METHODS) - set(ASYNC_METHODS))
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def setting():
+    return build_linear_setting(n_models=2, n_clients=12, seed=0)
+
+
+def _cfg(method: str, **kw) -> ServerConfig:
+    base = dict(method=method, local_epochs=1, seed=1, active_rate=0.4,
+                batch_size=8)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _geom(q=0.5, max_lag=3, **kw) -> AsyncConfig:
+    return AsyncConfig(delay="geometric",
+                       delay_kwargs={"q": q, "max_lag": max_lag}, **kw)
+
+
+def _assert_trees_equal(a, b, what):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        assert bool(jnp.array_equal(x, y)), what
+
+
+# ---------------------------------------------------------------------------
+# 1) the headline equivalence: async(delay=0) == sync, bit for bit
+# ---------------------------------------------------------------------------
+class TestZeroDelayEquivalence:
+    @pytest.mark.parametrize("method", ALL_METHODS)
+    def test_all_methods_bitwise(self, setting, method):
+        tasks, B, avail = setting
+        cfg = _cfg(method)
+        sync = RoundEngine(tasks, B, avail, cfg)
+        asyn = AsyncRoundEngine(tasks, B, avail, cfg)   # delay="zero"
+        assert not asyn.buffered
+        s, a = sync.init_state(), asyn.init_state()
+        _assert_trees_equal(s.params, a.params, f"{method}: init params")
+        for r in range(2):
+            s, ms = sync.round_step(s)
+            a, ma = asyn.round_step(a)
+            _assert_trees_equal(s.params, a.params,
+                                f"{method}: params @ round {r}")
+            _assert_trees_equal(s.method_state, a.method_state,
+                                f"{method}: method state @ round {r}")
+            _assert_trees_equal(ms, ma, f"{method}: metrics @ round {r}")
+        # the async state rides along untouched: still blank
+        for g in a.async_state:
+            assert bool((g["timer"] == EMPTY_SLOT).all())
+            assert float(jnp.abs(g["coeff"]).max()) == 0.0
+
+    def test_rollout_bitwise(self, setting):
+        tasks, B, avail = setting
+        cfg = _cfg("stalevre")
+        sync = RoundEngine(tasks, B, avail, cfg)
+        asyn = AsyncRoundEngine(tasks, B, avail, cfg)
+        s, ms = sync.rollout(sync.init_state(), 5)
+        a, ma = asyn.rollout(asyn.init_state(), 5)
+        _assert_trees_equal(s.params, a.params, "rollout params")
+        _assert_trees_equal(ms, ma, "rollout metrics")
+
+    def test_window_step_is_round_step(self, setting):
+        tasks, B, avail = setting
+        asyn = AsyncRoundEngine(tasks, B, avail, _cfg("random"))
+        assert asyn.window_step is asyn.round_step
+
+    def test_sharded_zero_delay_bitwise(self, setting):
+        # 1-shard mesh parity runs on any host; the base sharded body
+        # must thread async_state through untouched
+        tasks, B, avail = setting
+        cfg = _cfg("stalevre")
+        mesh = sharding.client_mesh(1)
+        sync = RoundEngine(tasks, B, avail, cfg, mesh=mesh)
+        asyn = AsyncRoundEngine(tasks, B, avail, cfg, mesh=mesh)
+        s, a = sync.init_state(), asyn.init_state()
+        for _ in range(2):
+            s, ms = sync.round_step(s)
+            a, ma = asyn.round_step(a)
+        _assert_trees_equal(s.params, a.params, "sharded params")
+        _assert_trees_equal(ms, ma, "sharded metrics")
+
+
+# ---------------------------------------------------------------------------
+# 2) the buffered window: convergence, invariants, semantics
+# ---------------------------------------------------------------------------
+class TestBufferedWindow:
+    @pytest.mark.parametrize("method",
+                             ["stalevre", "fedvarp", "fedstale", "mifa"])
+    def test_stale_family_converges_under_delay(self, setting, method):
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(tasks, B, avail, _cfg(method), _geom())
+        assert eng.buffered
+        state, m = eng.rollout(eng.init_state(), 30)
+        loss = np.asarray(m["loss"]).mean(axis=1)
+        assert np.isfinite(loss).all()
+        assert loss[-5:].mean() < loss[:5].mean()     # training progresses
+        # landed mass is reported
+        assert float(np.asarray(m["arrived"]).sum()) > 0
+
+    def test_inflight_invariants(self, setting):
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(tasks, B, avail, _cfg("stalevre"),
+                               _geom(q=0.4, max_lag=5))
+        state = eng.init_state()
+        for _ in range(6):
+            state, m = eng.round_step(state)
+            for g in state.async_state:
+                timer = np.asarray(g["timer"])
+                age = np.asarray(g["age"])
+                assert timer.min() >= EMPTY_SLOT
+                assert timer.max() <= eng.max_lag_windows
+                assert age.min() >= 0
+                assert age.max() <= eng.max_lag_windows
+                empty = timer == EMPTY_SLOT
+                assert np.all(np.asarray(g["coeff"])[empty] == 0.0)
+                assert np.all(np.asarray(g["age"])[empty] == 0)
+                for leaf in jax.tree.leaves(g["inflight"]):
+                    mass = np.abs(np.asarray(leaf)).reshape(
+                        empty.shape + (-1,)).sum(-1)
+                    assert np.all(mass[empty] == 0.0)
+            stl = np.asarray(m["staleness"])
+            assert (stl >= 0).all() and (stl <= eng.max_lag_windows).all()
+
+    def test_deterministic_lag_delays_first_landing(self, setting):
+        # lag=2 ticks, W=1: nothing can land in windows 0-1
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(
+            tasks, B, avail, _cfg("fedvarp"),
+            AsyncConfig(delay="deterministic", delay_kwargs={"lag": 2}))
+        state, m = eng.rollout(eng.init_state(), 6)
+        arrived = np.asarray(m["arrived"])
+        assert (arrived[:2] == 0).all()
+        assert arrived[2:].sum() > 0
+        # every landing is exactly lag_in_windows stale
+        stl = np.asarray(m["staleness"])[arrived.astype(bool)]
+        assert np.all(stl == 2.0)
+
+    def test_window_size_batches_ticks(self, setting):
+        # lag=3 ticks under W=2 -> updates miss ceil(3/2)=2 windows
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(
+            tasks, B, avail, _cfg("fedvarp"),
+            AsyncConfig(delay="deterministic", delay_kwargs={"lag": 3},
+                        window_size=2))
+        assert eng.max_lag_windows == 2
+        state, m = eng.rollout(eng.init_state(), 6)
+        arrived = np.asarray(m["arrived"])
+        assert (arrived[:2] == 0).all()
+        stl = np.asarray(m["staleness"])[arrived.astype(bool)]
+        assert np.all(stl == 2.0)
+
+    def test_presence_trace_drops_departed(self, setting):
+        tasks, B, avail = setting
+        N = B.shape[0]
+        absent_all = np.zeros((1, N), np.float32)      # nobody ever shows
+        eng = AsyncRoundEngine(tasks, B, avail, _cfg("fedvarp"),
+                               AsyncConfig(presence=absent_all))
+        assert eng.buffered
+        state, m = eng.rollout(eng.init_state(), 3)
+        assert float(np.asarray(m["arrived"]).sum()) == 0.0
+        # present world matches: the all-ones trace changes nothing vs
+        # the zero-delay path semantically (landings are immediate)
+        eng2 = AsyncRoundEngine(tasks, B, avail, _cfg("fedvarp"),
+                                AsyncConfig(presence=np.ones((1, N),
+                                                             np.float32)))
+        state2, m2 = eng2.rollout(eng2.init_state(), 3)
+        assert float(np.asarray(m2["arrived"]).sum()) > 0
+
+    def test_presence_shape_validated(self, setting):
+        tasks, B, avail = setting
+        with pytest.raises(ValueError, match="presence"):
+            AsyncRoundEngine(tasks, B, avail, _cfg("fedvarp"),
+                             AsyncConfig(presence=np.ones((2, 3))))
+
+    def test_seed_fleet_on_buffered_engine(self, setting):
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(tasks, B, avail, _cfg("stalevre"), _geom())
+        states, metrics, accs = eng.run_seeds([0, 1], n_rounds=3)
+        assert np.asarray(metrics["loss"]).shape[:2] == (2, 3)
+        assert np.isfinite(np.asarray(metrics["loss"])).all()
+        assert np.asarray(accs).shape[0] == 2
+
+    def test_buffered_sharded_parity(self, setting):
+        # 1-shard mesh: the sharded window body vs the single-device
+        # window (per-client math is bitwise; the delta psum regroups at
+        # ulp level — same tolerance as tests/test_sharding.py)
+        tasks, B, avail = setting
+        cfg = _cfg("stalevre")
+        acfg = _geom()
+        ref = AsyncRoundEngine(tasks, B, avail, cfg, acfg)
+        shd = AsyncRoundEngine(tasks, B, avail, cfg, acfg,
+                               mesh=sharding.client_mesh(1))
+        s1, s8 = ref.init_state(), shd.init_state()
+        for _ in range(3):
+            s1, m1 = ref.round_step(s1)
+            s8, m8 = shd.round_step(s8)
+            np.testing.assert_array_equal(np.asarray(m1["arrived"]),
+                                          np.asarray(m8["arrived"]))
+            np.testing.assert_array_equal(np.asarray(m1["staleness"]),
+                                          np.asarray(m8["staleness"]))
+        for x, y in zip(jax.tree.leaves(s1.params),
+                        jax.tree.leaves(s8.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=1e-6)
+        for x, y in zip(
+                jax.tree.leaves([g["timer"] for g in s1.async_state]),
+                jax.tree.leaves([g["timer"] for g in s8.async_state])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    @needs_mesh
+    def test_buffered_sharded_parity_8(self, setting):
+        tasks, B, avail = setting
+        cfg = _cfg("stalevre")
+        acfg = _geom()
+        ref = AsyncRoundEngine(tasks, B, avail, cfg, acfg)
+        shd = AsyncRoundEngine(tasks, B, avail, cfg, acfg,
+                               mesh=sharding.client_mesh(8))
+        s1, s8 = ref.init_state(), shd.init_state()
+        for _ in range(3):
+            s1, m1 = ref.round_step(s1)
+            s8, m8 = shd.round_step(s8)
+            np.testing.assert_array_equal(np.asarray(m1["arrived"]),
+                                          np.asarray(m8["arrived"]))
+        for x, y in zip(jax.tree.leaves(s1.params),
+                        jax.tree.leaves(s8.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 3) refusals, delay models, checkpoint migration
+# ---------------------------------------------------------------------------
+class TestAsyncRefusal:
+    @pytest.mark.parametrize("method", BARRIER_METHODS)
+    def test_barrier_methods_refused_when_buffered(self, setting, method):
+        tasks, B, avail = setting
+        with pytest.raises(ValueError, match="async_ok"):
+            AsyncRoundEngine(tasks, B, avail, _cfg(method),
+                             AsyncConfig(delay="deterministic",
+                                         delay_kwargs={"lag": 1}))
+
+    @pytest.mark.parametrize("method", BARRIER_METHODS)
+    def test_barrier_methods_fine_at_zero_delay(self, setting, method):
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(tasks, B, avail, _cfg(method))
+        assert not eng.buffered
+
+    def test_registry_split_is_exhaustive(self):
+        assert set(ASYNC_METHODS) | set(BARRIER_METHODS) == set(ALL_METHODS)
+        assert set(BARRIER_METHODS) == {"gvr", "full", "roundrobin_gvr",
+                                        "stalevr"}
+
+
+class TestDelayModels:
+    def test_registry(self):
+        names = delay_mod.available_delay_models()
+        assert {"zero", "deterministic", "geometric", "trace"} <= set(names)
+        assert isinstance(delay_mod.make_delay("zero"),
+                          delay_mod.ZeroDelay)
+
+    def test_deterministic_vector_and_offset(self):
+        dm = delay_mod.make_delay("deterministic",
+                                  lag=np.array([0, 1, 2, 3, 4, 5]))
+        key = jax.random.PRNGKey(0)
+        full = np.asarray(dm.delays(key, 0, 6))
+        np.testing.assert_array_equal(full, [0, 1, 2, 3, 4, 5])
+        part = np.asarray(dm.delays(key, 0, 3, offset=2))
+        np.testing.assert_array_equal(part, full[2:5])
+        assert dm.max_lag == 5
+
+    def test_geometric_bounds_and_offset_invariance(self):
+        dm = delay_mod.make_delay("geometric", q=0.3, max_lag=4)
+        key = jax.random.PRNGKey(3)
+        full = np.asarray(dm.delays(key, 5, 16))
+        assert full.min() >= 0 and full.max() <= 4
+        # index-keyed draws: a shard's offset block matches the full rows
+        blk = np.asarray(dm.delays(key, 5, 8, offset=8))
+        np.testing.assert_array_equal(blk, full[8:])
+
+    def test_trace_cycles(self):
+        tbl = np.array([[0, 1], [2, 3], [4, 5]], np.int32)
+        dm = delay_mod.make_delay("trace", trace=tbl)
+        key = jax.random.PRNGKey(0)
+        np.testing.assert_array_equal(np.asarray(dm.delays(key, 4, 2)),
+                                      tbl[1])      # 4 mod 3 == 1
+        assert dm.max_lag == 5
+
+    def test_lag_in_windows(self):
+        assert delay_mod.lag_in_windows(0, 1) == 0
+        assert delay_mod.lag_in_windows(3, 1) == 3
+        assert delay_mod.lag_in_windows(3, 2) == 2
+        assert delay_mod.lag_in_windows(4, 4) == 1
+        with pytest.raises(ValueError):
+            delay_mod.lag_in_windows(3, 0)
+
+
+class TestAsyncCheckpoint:
+    def test_async_state_round_trips(self, setting, tmp_path):
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(tasks, B, avail, _cfg("stalevre"), _geom())
+        state = eng.init_state()
+        state, _ = eng.round_step(state)
+        checkpoint.save_state(str(tmp_path), state, 1)
+        back, step = checkpoint.restore_state(str(tmp_path),
+                                              eng.init_state(), step=1)
+        assert step == 1
+        _assert_trees_equal(state, back, "async checkpoint round-trip")
+
+    def test_pre_async_restore_raises_schema_error(self, setting,
+                                                   tmp_path):
+        tasks, B, avail = setting
+        cfg = _cfg("stalevre")
+        sync = RoundEngine(tasks, B, avail, cfg)
+        s, _ = sync.round_step(sync.init_state())
+        checkpoint.save_state(str(tmp_path), s, 3)
+        asyn = AsyncRoundEngine(tasks, B, avail, cfg, _geom())
+        with pytest.raises(checkpoint.CheckpointSchemaError) as ei:
+            checkpoint.restore_state(str(tmp_path), asyn.init_state(),
+                                     step=3)
+        assert any(".async_state/" in k for k in ei.value.missing)
+
+    def test_migration_shim_zero_fills(self, setting, tmp_path):
+        tasks, B, avail = setting
+        cfg = _cfg("stalevre")
+        sync = RoundEngine(tasks, B, avail, cfg)
+        s, _ = sync.round_step(sync.init_state())
+        checkpoint.save_state(str(tmp_path), s, 3)
+        asyn = AsyncRoundEngine(tasks, B, avail, cfg, _geom())
+        mig, step = checkpoint.restore_state(str(tmp_path),
+                                             asyn.init_state(), step=3,
+                                             fill_missing=True)
+        # migrated leaves present in the payload restore exactly
+        _assert_trees_equal(s.params, mig.params, "migrated params")
+        for g in mig.async_state:
+            # empty in-flight buffer: timers -1 (NOT 0 — that would land
+            # N blank updates in the first window), everything else 0
+            assert bool((g["timer"] == EMPTY_SLOT).all())
+            assert float(jnp.abs(g["coeff"]).max()) == 0.0
+            assert int(g["age"].max()) == 0
+        # and the migrated state steps
+        mig2, m = asyn.round_step(mig)
+        assert np.isfinite(np.asarray(m["loss"])).all()
