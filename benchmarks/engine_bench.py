@@ -457,6 +457,46 @@ def bench_async(method: str = "stalevre", target_acc: float = 0.80,
     return us, derived
 
 
+def bench_model_world(method: str = "stalevre", rounds: int = 3,
+                      reps: int = 2) -> Tuple[float, str]:
+    """Fused rounds on the REAL-MODEL task world
+    (``build_model_setting``: two qwen3-like transformer tasks + one
+    mamba task through the full model stack) vs the per-task loop on the
+    same world — the task-fusion A/B of ``bench_task_fusion`` with model
+    compute instead of linear toys.  Local training dominates here, so
+    the steady ratio approaches 1x; the number that moves is the COLD
+    build+trace+compile delta (the loop traces each arch group per task,
+    the fused path once per group)."""
+    from repro.fl.experiments import build_model_setting
+
+    tasks, B, avail = build_model_setting()
+    cfg_kw = dict(local_epochs=1, seed=1, active_rate=0.5, batch_size=4)
+    row: Dict[str, float] = {}
+    for fused in (True, False):
+        tag = "fused" if fused else "loop"
+        t0 = time.perf_counter()
+        eng = RoundEngine(tasks, B, avail,
+                          ServerConfig(method=method, fuse_tasks=fused,
+                                       **cfg_kw))
+        state, _ = eng.rollout(eng.init_state(), rounds)
+        jax.block_until_ready(state)
+        row[f"cold_{tag}"] = time.perf_counter() - t0
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state, mets = eng.rollout(state, rounds)
+            jax.block_until_ready(mets)
+            best = min(best, time.perf_counter() - t0)
+        row[f"rps_{tag}"] = rounds / best
+    us = 1e6 / row["rps_fused"]
+    derived = (f"speedup={row['rps_fused'] / row['rps_loop']:.2f}x;"
+               f"cold_fused_s={row['cold_fused']:.2f};"
+               f"cold_loop_s={row['cold_loop']:.2f};"
+               f"rps_fused={row['rps_fused']:.2f};"
+               f"rps_loop={row['rps_loop']:.2f}")
+    return us, derived
+
+
 def _parse(derived: str) -> Dict[str, float]:
     out = {}
     for part in derived.split(";"):
@@ -486,6 +526,11 @@ def main():
     ap.add_argument("--n-clients", type=int, default=512)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--model-world", action="store_true",
+                    help="include the real-model task-world round bench "
+                         "in a --smoke run (always included in full runs; "
+                         "it pays several model-stack compiles, so the "
+                         "default smoke profile skips it)")
     args = ap.parse_args()
     if args.sharded_worker:
         _sharded_worker(args.method, args.n_clients, args.rounds, args.reps)
@@ -513,6 +558,11 @@ def main():
         chunk=5 if args.smoke else 10,
         max_windows=40 if args.smoke else 200,
         target_acc=0.5 if args.smoke else 0.80)
+    model_world_entry = None
+    if not args.smoke or args.model_world:
+        us_m, d_m = bench_model_world(
+            "stalevre", rounds=2 if args.smoke else 3, reps=2)
+        model_world_entry = {"us_per_round": us_m, **_parse(d_m)}
     parsed_h = _parse(d_h)
     if parsed_h.get("skipped"):
         sharded_entry = {"skipped":
@@ -533,6 +583,9 @@ def main():
         "sharded_scaling": sharded_entry,
         "async_vs_sync": {"us_per_window": us_a, **_parse(d_a)},
     }
+    if model_world_entry is not None:
+        report["model_world_round"] = model_world_entry
+        print(f"engine_model_world_stalevre,{us_m:.1f},{d_m}")
     print(f"engine_round_{args.method},{us_f:.1f},{d_f}")
     print(f"engine_scan_{args.method},{us_s:.1f},{d_s}")
     print(f"engine_sweep_{args.method},{us_w:.1f},{d_w}")

@@ -1,9 +1,22 @@
 """Kernel micro-benchmarks (CPU wall time of the jnp reference path + the
-interpret-mode correctness delta; TPU wall time requires real hardware)."""
+interpret-mode correctness delta; TPU wall time requires real hardware).
+
+Running the module directly (``python benchmarks/kernels_bench.py``)
+writes ``BENCH_kernels.json``; ``--smoke`` (the CI ``kernels-smoke`` job)
+writes ``BENCH_kernels.smoke.json`` instead, so smoke runs can never
+clobber checked-in numbers.  Besides the per-kernel rows the report
+carries a ``model_worlds`` section: measured local-step wall time of each
+real-model world arch (``fl.experiments.build_model_setting`` dims,
+forward+grad on the reference path) against the analytic roofline step
+accounting (``roofline.analytic.model_world_step``) — see
+``benchmarks/README_roofline.md`` for how to read those numbers."""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,8 +28,8 @@ from repro.kernels.batched_dot.ref import batched_dot_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.stale_agg.ops import stale_delta_pallas, unflatten_like
-from repro.kernels.stale_agg.stale_agg import stale_agg
-from repro.kernels.stale_agg.ref import stale_agg_ref
+from repro.kernels.stale_agg.stale_agg import stale_agg, stale_agg_refresh
+from repro.kernels.stale_agg.ref import stale_agg_ref, stale_agg_refresh_ref
 
 
 def _time(f, *args, reps=5) -> float:
@@ -98,6 +111,38 @@ def bench_stale_agg_production() -> Tuple[float, float]:
     return us, err
 
 
+def bench_stale_agg_refresh() -> Tuple[float, float]:
+    """The fused Eq. 18 delta + stale-store refresh scatter
+    (``stale_agg_refresh`` — the per-shard kernel path of the stale
+    family's ``aggregate``).  Wall time is the jnp reference composition
+    (delta + masked scatter) at the production shape (64-cohort over a
+    256-client 1M-param store); the correctness delta runs the kernel in
+    interpret mode on a small shape against ``stale_agg_refresh_ref`` —
+    delta within float tolerance, refreshed store BITWISE (the scatter
+    copies rows, no arithmetic; raises if it ever differs)."""
+    C, N, P = 64, 256, 1_000_000
+    keys = jax.random.split(jax.random.PRNGKey(4), 6)
+    G = jax.random.normal(keys[0], (C, P), jnp.bfloat16)
+    h = jax.random.normal(keys[1], (N, P), jnp.bfloat16)
+    coeff = jax.random.uniform(keys[2], (C,))
+    beta = jax.random.uniform(keys[3], (C,))
+    act = (jax.random.uniform(keys[4], (C,)) > 0.5).astype(jnp.float32)
+    idx = jax.random.permutation(keys[5], N)[:C].astype(jnp.int32)
+    ss = jnp.zeros((P,), jnp.float32)
+    ref = jax.jit(stale_agg_refresh_ref)
+    us = _time(ref, coeff, beta, act, idx, G, h, ss)
+
+    Ps = 4096
+    d1, s1 = stale_agg_refresh(coeff, beta, act, idx, G[:, :Ps], h[:, :Ps],
+                               ss[:Ps], interpret=True)
+    d2, s2 = stale_agg_refresh_ref(coeff, beta, act, idx, G[:, :Ps],
+                                   h[:, :Ps], ss[:Ps])
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2),
+                                  err_msg="refreshed store must be bitwise")
+    err = float(np.max(np.abs(np.asarray(d1) - np.asarray(d2))))
+    return us, err
+
+
 def bench_flash_attention() -> Tuple[float, float]:
     B, H, S, D = 1, 4, 1024, 128
     keys = jax.random.split(jax.random.PRNGKey(2), 3)
@@ -112,3 +157,83 @@ def bench_flash_attention() -> Tuple[float, float]:
                        causal=True)
     err = float(np.max(np.abs(np.asarray(o1) - np.asarray(o2))))
     return us, err
+
+
+def bench_model_world(arch: str = "qwen3-0.6b", batch: int = 4,
+                      seq: int = 16) -> Tuple[float, str]:
+    """Measured vs roofline for ONE local-training step of a real-model
+    world task: jit'd forward+grad of the arch adapter (the exact closure
+    the engine vmaps — attention / selective scan via the model stack, the
+    reference jnp path on CPU) against the analytic step accounting of
+    ``roofline.analytic.model_world_step`` at the same dims.  ``derived``
+    carries the analytic terms plus the achieved FLOP/s, so the ratio to
+    the host's peak is readable straight off the JSON."""
+    from repro.fl.experiments import _arch_adapter, _model_cfg
+    from repro.roofline.analytic import model_world_step
+
+    cfg = _model_cfg(arch)
+    adapter = _arch_adapter(cfg)
+    key = jax.random.PRNGKey(0)
+    params = adapter.init(key)
+    x = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    batch_d = {"x": x, "y": jnp.zeros((batch,), jnp.int32)}
+    step = jax.jit(jax.value_and_grad(adapter.loss_fn))
+    us = _time(step, params, batch_d)
+    model = model_world_step(cfg, batch, seq, local_steps=1)
+    gflops = model["hlo_equiv_flops"] / (us / 1e6) / 1e9
+    derived = (f"model_flops={model['model_flops']:.0f};"
+               f"hlo_equiv_flops={model['hlo_equiv_flops']:.0f};"
+               f"attn_flops={model['attn_flops']:.0f};"
+               f"scan_flops={model['scan_flops']:.0f};"
+               f"hbm_bytes={model['hbm_bytes']:.0f};"
+               f"intensity={model['arithmetic_intensity']:.2f};"
+               f"measured_gflops={gflops:.2f}")
+    return us, derived
+
+
+def _parse(derived: str) -> Dict[str, float]:
+    out = {}
+    for part in derived.split(";"):
+        k, v = part.split("=")
+        out[k] = float(v.rstrip("x"))
+    return out
+
+
+SMOKE_OUT = "BENCH_kernels.smoke.json"
+
+MODEL_WORLD_ARCHS = ("qwen3-0.6b", "falcon-mamba-7b")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: identical measurements (the reference-path "
+                         "wall times are already CPU-cheap), written to "
+                         f"{SMOKE_OUT} so the checked-in full-scale "
+                         "BENCH_kernels.json is never clobbered")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out = args.out or (SMOKE_OUT if args.smoke else "BENCH_kernels.json")
+
+    report: Dict[str, object] = {"smoke": bool(args.smoke)}
+    for name, fn in (("batched_dot", bench_batched_dot),
+                     ("stale_agg", bench_stale_agg),
+                     ("stale_agg_production", bench_stale_agg_production),
+                     ("stale_agg_refresh", bench_stale_agg_refresh),
+                     ("flash_attention", bench_flash_attention)):
+        us, err = fn()
+        report[name] = {"us": us, "max_err": err}
+        print(f"kernel_{name},{us:.1f},max_err={err:.2e}")
+    worlds: Dict[str, Dict[str, float]] = {}
+    for arch in MODEL_WORLD_ARCHS:
+        us, derived = bench_model_world(arch)
+        worlds[arch] = {"us_per_step": us, **_parse(derived)}
+        print(f"model_world_{arch},{us:.1f},{derived}")
+    report["model_worlds"] = worlds
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

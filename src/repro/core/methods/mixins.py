@@ -2,12 +2,25 @@
 loss-/uniform-probability helpers reused across the method family."""
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sampling, stale
+
+
+def use_batched_dot_kernel() -> bool:
+    """Route the Eq. 20 beta measurement through the fused Pallas
+    ``batched_dot`` kernel (one pass for <G,h> and ||h||^2)?  Same gate
+    convention as ``stale_family.use_stale_agg_kernel``: default on TPU
+    only; ``REPRO_BATCHED_DOT_KERNEL=1`` forces the kernel path (interpret
+    mode off-TPU), ``=0`` disables it.  Read at TRACE time."""
+    flag = os.environ.get("REPRO_BATCHED_DOT_KERNEL", "")
+    if flag in ("0", "1"):
+        return flag == "1"
+    return jax.default_backend() == "tpu"
 
 
 class LossSamplingMixin:
@@ -84,4 +97,7 @@ class StaleStoreMixin:
     def measure_beta(G: Any, h: Any) -> jnp.ndarray:
         """beta* = <G, h> / ||h||^2  (Eq. 20) — the single authority both
         the server aggregation and ``fl.steps.stale_step`` call."""
+        if use_batched_dot_kernel():
+            from repro.kernels.batched_dot.ops import optimal_beta_pallas
+            return optimal_beta_pallas(G, h)
         return stale.optimal_beta(G, h)

@@ -55,17 +55,22 @@ class StaleVRFamily(StaleStoreMixin, MethodStrategy):
         beta_all, state = self._beta(state, G, h_cohort, act, idx, round_idx)
         beta_all = beta_all * hv                    # stale term only if valid
         if use_stale_agg_kernel():
-            # Fused Pallas path (TPU): precompute the stale mean, then the
-            # kernel streams the cohort correction sum_a P_a (G_a - b_a h_a)
-            # over [C, P] tiles without materializing the corrected updates.
-            # Under sharding both halves are per-shard partials — one psum
-            # reduces the combined delta, same collective as the onedot.
+            # Fused Pallas path (TPU): precompute the stale mean, then ONE
+            # kernel pass streams the cohort correction sum_a P_a (G_a -
+            # b_a h_a) over [C, P] tiles AND scatters the refreshed rows
+            # (h_i <- G_i for active i) back into the aliased store — each
+            # cohort store row is read once and rewritten in place, instead
+            # of a delta read + a second refresh-scatter read.  Under
+            # sharding both delta halves are per-shard partials — one psum
+            # reduces the combined delta, same collective as the onedot —
+            # while the scatter lands on the shard-local store block.
             from repro.kernels.stale_agg import ops as stale_agg_ops
             stale_sum = stale.stale_mean(state["h"], d_col * beta_all)
-            delta = aggregation.psum_tree(
-                stale_agg_ops.stale_delta_pallas(
-                    coeff, G, h_cohort, beta_all[idx], stale_sum),
-                axis_name)
+            delta_loc, h = stale_agg_ops.stale_delta_refresh_pallas(
+                coeff, G, state["h"], beta_all[idx], act, idx, stale_sum)
+            delta = aggregation.psum_tree(delta_loc, axis_name)
+            hv = state["h_valid"].at[idx].set(
+                jnp.maximum(state["h_valid"][idx], act))
         else:
             # Eq. 18 in the order-pinned one-dot form: the stale mean's
             # weights (processors of client i share h_i: sum_b (d/B) beta h
@@ -77,6 +82,6 @@ class StaleVRFamily(StaleStoreMixin, MethodStrategy):
             delta = aggregation.stale_delta_onedot(
                 coeff, G, h_cohort, beta_all[idx], state["h"],
                 d_col * beta_all, axis_name=axis_name)
+            h, hv = self.refresh(state, G, act, idx)
         new_w = aggregation.apply_delta(w, delta)
-        h, hv = self.refresh(state, G, act, idx)
         return new_w, {**state, "h": h, "h_valid": hv}, {"beta": beta_all}

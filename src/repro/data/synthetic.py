@@ -71,3 +71,22 @@ def make_token_stream(rng: np.random.Generator, vocab: int, n_tokens: int,
     base = rng.zipf(1.3, size=n_tokens).astype(np.int64)
     toks = (base + rng.integers(0, 7, size=n_tokens)) % vocab
     return toks.astype(np.int32)
+
+
+def make_token_task(rng: np.random.Generator, vocab: int, n_clients: int,
+                    cap: int, seq_len: int, n_test: int = 16
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-client LM shards for the real-model task worlds.
+
+    Each client's rows come from its own Zipf stream shifted by a
+    client-specific token offset (non-iid vocabulary slices across
+    clients, the LM analogue of the label shards).  Returns
+    (x [n_clients, cap, seq_len] int32, test_x [n_test, seq_len] int32);
+    next-token targets are the sequences themselves (the model's loss
+    shifts internally)."""
+    x = np.empty((n_clients, cap, seq_len), np.int32)
+    for c in range(n_clients):
+        stream = make_token_stream(rng, vocab, cap * seq_len)
+        x[c] = ((stream + (c * 7) % vocab) % vocab).reshape(cap, seq_len)
+    test = make_token_stream(rng, vocab, n_test * seq_len)
+    return x, test.reshape(n_test, seq_len)

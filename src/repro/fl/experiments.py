@@ -26,8 +26,10 @@ from repro.core.async_engine import AsyncConfig, AsyncRoundEngine
 from repro.core.engine import (PROBE_TAKE, RoundEngine, World,
                                build_world_arrays)
 from repro.core.server import MMFLServer, ModelAdapter, ServerConfig, Task
+from repro.configs.base import ArchConfig
+from repro.configs.registry import get_config
 from repro.data import partition, synthetic
-from repro.models import cnn, lstm
+from repro.models import cnn, lstm, transformer
 
 
 def _cnn_adapter(n_classes: int, channels: int, in_ch: int = 1) -> ModelAdapter:
@@ -221,6 +223,89 @@ def build_linear_setting(n_models: int = 2, n_clients: int = 16,
     if avail_rate is not None:
         avail = partition.availability(
             np.random.default_rng((seed, 1)), n_clients, n_models,
+            frac_all=float(avail_rate))
+    return tasks, B, avail
+
+
+# ---------------------------------------------------------------------------
+# real-model setting: registry archs through the full model stack + kernels
+# ---------------------------------------------------------------------------
+
+
+def _model_cfg(name: str) -> ArchConfig:
+    """Test-scale dims for a registry arch: real structure (GQA heads /
+    SSM recurrence, RoPE, tied embeddings, the family's block wiring) at
+    CI-compilable sizes.  ``.reduced()`` then a further shrink."""
+    cfg = get_config(name).reduced()
+    return dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128,
+                               vocab_size=128, n_heads=2, n_kv_heads=1,
+                               head_dim=32, ssm_state=8)
+
+
+def _arch_adapter(cfg: ArchConfig) -> ModelAdapter:
+    """Loss/accuracy/init closures over the FULL model stack for one arch.
+
+    The forward pass routes through the Pallas kernels under the model
+    gates (``attention.use_flash_kernel`` / ``mamba.use_ssm_kernel``; the
+    reference jnp paths otherwise).  Call this ONCE per arch config and
+    share the returned adapter across that arch's tasks: ``task_signature``
+    compares the closures by identity, so a shared adapter (plus the shared
+    ``cfg`` instance inside it) is what lets same-arch tasks fuse into one
+    vmapped group — and distinct archs split groups naturally."""
+
+    def init(key):
+        return transformer.init(key, cfg)
+
+    def loss_fn(p, batch):
+        loss, _ = transformer.forward(p, cfg, {"tokens": batch["x"]})
+        return loss
+
+    def accuracy(p, batch):
+        lg = transformer.logits(p, cfg, {"tokens": batch["x"]})
+        return jnp.mean(jnp.argmax(lg[:, :-1], -1) == batch["x"][:, 1:])
+
+    return ModelAdapter(init=init, loss_fn=loss_fn, accuracy=accuracy)
+
+
+def build_model_setting(archs: Sequence[str] = ("qwen3-0.6b", "qwen3-0.6b",
+                                                "falcon-mamba-7b"),
+                        n_clients: int = 8, cap: int = 8, seq_len: int = 16,
+                        seed: int = 0, avail_rate: Optional[float] = None
+                        ) -> Tuple[List[Task], np.ndarray, np.ndarray]:
+    """Real-model task world: one LM task per entry of ``archs``, each
+    running the registry architecture (scaled to ``_model_cfg`` dims) with
+    its own non-iid token shards.  The default world is the mixed
+    transformer+mamba fusion case: two qwen3 tasks share one adapter (one
+    vmapped group) while the falcon-mamba task forms a second group.
+
+    Returns (tasks, B, avail) in the exact ``build_linear_setting`` world
+    contract, so every engine path (fused, per-task loop, sharded, async)
+    runs unchanged on top."""
+    rng = np.random.default_rng(seed)
+    cfgs: Dict[str, ArchConfig] = {}
+    adapters: Dict[str, ModelAdapter] = {}
+    tasks: List[Task] = []
+    for s, name in enumerate(archs):
+        if name not in cfgs:
+            cfgs[name] = _model_cfg(name)
+            adapters[name] = _arch_adapter(cfgs[name])
+        cfg = cfgs[name]
+        x, test_x = synthetic.make_token_task(rng, cfg.vocab_size, n_clients,
+                                              cap, seq_len)
+        # next-token targets live inside "x"; "y" is a schema placeholder
+        # (the engine's data contract slices it, the adapter ignores it)
+        tasks.append(Task(
+            name=f"{name}-{s}", model=adapters[name],
+            data={"x": jnp.asarray(x),
+                  "y": jnp.zeros((n_clients, cap), jnp.int32),
+                  "count": jnp.full((n_clients,), cap, jnp.int32)},
+            test={"x": jnp.asarray(test_x),
+                  "y": jnp.zeros((test_x.shape[0],), jnp.int32)}))
+    B = rng.integers(1, 4, n_clients)
+    avail = np.ones((n_clients, len(archs)), bool)
+    if avail_rate is not None:
+        avail = partition.availability(
+            np.random.default_rng((seed, 1)), n_clients, len(archs),
             frac_all=float(avail_rate))
     return tasks, B, avail
 

@@ -2,31 +2,72 @@
 
 ``flash_gqa`` takes the model-layout tensors ([B, S, H, dh], grouped KV),
 repeats KV heads, and dispatches to the Pallas kernel (interpret mode
-off-TPU).  Enabled in the model stack via ``ArchConfig`` -> use_flash flag
-on the attention call sites."""
+off-TPU).  Enabled in the model stack via ``attention.use_flash_kernel``.
+
+``pallas_call`` carries no built-in VJP, but the engine's local step runs
+``jax.value_and_grad`` over the whole model — so ``flash_gqa`` defines a
+``custom_vjp`` whose backward pass is ``jax.vjp`` of the pure-jnp oracle
+(``ref.attention_ref`` lifted to the GQA layout).  Gradients on the kernel
+path are therefore EXACTLY the reference gradients (the materialized-softmax
+backward, O(S^2) memory — fine at the test/world shapes; a flash backward
+kernel is future work, see ROADMAP)."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.batched_dot.ops import _interpret_default
 from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _gqa_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             causal: bool, window: int) -> jnp.ndarray:
+    """Reference GQA in the model layout ([B,S,H,dh], grouped KV).
+
+    Differentiable end-to-end: the ``jnp.repeat`` KV expansion folds the
+    per-group gradients back onto the grouped heads under ``jax.vjp``."""
+    n_rep = q.shape[2] // k.shape[2]
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    out = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_gqa(q, k, v, causal, window, interpret):
+    B, S, Hq, dh = q.shape
+    n_rep = Hq // k.shape[2]
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal,
+                          window=window, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _flash_gqa_fwd(q, k, v, causal, window, interpret):
+    return _flash_gqa(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _flash_gqa_bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _gqa_ref(q_, k_, v_, causal, window), q, k, v)
+    return vjp(g.astype(q.dtype))
+
+
+_flash_gqa.defvjp(_flash_gqa_fwd, _flash_gqa_bwd)
 
 
 def flash_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
               causal: bool = True, window: int = 0,
               interpret: bool | None = None) -> jnp.ndarray:
-    """q [B,S,Hq,dh]; k/v [B,S,Hk,dh] -> [B,S,Hq,dh]."""
+    """q [B,S,Hq,dh]; k/v [B,S,Hk,dh] -> [B,S,Hq,dh] (differentiable)."""
     interpret = _interpret_default() if interpret is None else interpret
-    B, S, Hq, dh = q.shape
-    Hk = k.shape[2]
-    n_rep = Hq // Hk
-    if n_rep > 1:
-        k = jnp.repeat(k, n_rep, axis=2)
-        v = jnp.repeat(v, n_rep, axis=2)
-    qt = q.transpose(0, 2, 1, 3)
-    kt = k.transpose(0, 2, 1, 3)
-    vt = v.transpose(0, 2, 1, 3)
-    out = flash_attention(qt, kt, vt, causal=causal, window=window,
-                          interpret=interpret)
-    return out.transpose(0, 2, 1, 3)
+    return _flash_gqa(q, k, v, causal, window, interpret)

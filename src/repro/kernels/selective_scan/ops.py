@@ -1,16 +1,46 @@
-"""Jit'd wrapper: drop-in replacement for models.mamba._ssm_scan."""
+"""Jit'd wrapper: drop-in replacement for models.mamba._ssm_scan.
+
+``pallas_call`` carries no built-in VJP, but the engine's local step runs
+``jax.value_and_grad`` over the whole model — so ``ssm_scan_pallas`` defines
+a ``custom_vjp`` whose backward pass is ``jax.vjp`` of the pure-jnp oracle
+(``ref.selective_scan_ref``, the sequential recurrence).  Gradients on the
+kernel path are therefore EXACTLY the reference gradients; the backward is
+O(S) sequential, fine at the test/world shapes (a chunked backward kernel
+is future work, see ROADMAP)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
+import functools
+
+import jax
 
 from repro.kernels.batched_dot.ops import _interpret_default
+from repro.kernels.selective_scan.ref import selective_scan_ref
 from repro.kernels.selective_scan.selective_scan import selective_scan
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _ssm_scan(u, dt, A, B, C, D, interpret):
+    return selective_scan(u, dt, B, C, A, D, interpret=interpret)
+
+
+def _ssm_scan_fwd(u, dt, A, B, C, D, interpret):
+    return _ssm_scan(u, dt, A, B, C, D, interpret), (u, dt, A, B, C, D)
+
+
+def _ssm_scan_bwd(interpret, res, g):
+    u, dt, A, B, C, D = res
+    _, vjp = jax.vjp(
+        lambda u_, dt_, A_, B_, C_, D_: selective_scan_ref(
+            u_, dt_, B_, C_, A_, D_), u, dt, A, B, C, D)
+    return vjp(g)
+
+
+_ssm_scan.defvjp(_ssm_scan_fwd, _ssm_scan_bwd)
+
+
 def ssm_scan_pallas(u, dt, A, B, C, D, interpret: bool | None = None):
-    """Same contract as mamba._ssm_scan: returns (y, h_last is NOT tracked
+    """Same contract as mamba._ssm_scan's y output (h_last is NOT tracked
     by the kernel fast path — use the jnp path when a decode cache is
-    needed)."""
+    needed).  Differentiable via custom_vjp (reference gradients)."""
     interpret = _interpret_default() if interpret is None else interpret
-    y = selective_scan(u, dt, B, C, A, D, interpret=interpret)
-    return y
+    return _ssm_scan(u, dt, A, B, C, D, interpret)

@@ -6,8 +6,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregation
 from repro.kernels.batched_dot.ops import _interpret_default, flatten_cohort
-from repro.kernels.stale_agg.stale_agg import stale_agg
+from repro.kernels.stale_agg.stale_agg import stale_agg, stale_agg_refresh
 
 
 def unflatten_like(flat: jnp.ndarray, template: Any) -> Any:
@@ -17,6 +18,19 @@ def unflatten_like(flat: jnp.ndarray, template: Any) -> Any:
     for l in leaves:
         n = l.size
         out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def unflatten_cohort(flat: jnp.ndarray, template: Any) -> Any:
+    """[C, P] -> pytree of [C, ...] leaves (inverse of ``flatten_cohort``)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    C = flat.shape[0]
+    out, off = [], 0
+    for l in leaves:
+        n = l.size // l.shape[0]
+        out.append(flat[:, off:off + n].reshape((C,) + l.shape[1:])
+                   .astype(l.dtype))
         off += n
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -34,3 +48,46 @@ def stale_delta_pallas(coeff: jnp.ndarray, G: Any, h: Any, beta: jnp.ndarray,
         [l.reshape(-1).astype(jnp.float32) for l in leaves])
     delta = stale_agg(coeff, beta, Gf, hf, sum_f, interpret=interpret)
     return unflatten_like(delta, stale_sum)
+
+
+def stale_delta_refresh_pallas(coeff: jnp.ndarray, G: Any, h_store: Any,
+                               beta: jnp.ndarray, act: jnp.ndarray,
+                               idx: jnp.ndarray, stale_sum: Any,
+                               interpret: bool | None = None
+                               ) -> tuple[Any, Any]:
+    """Fused Eq. 18 delta + stale-store refresh over parameter pytrees.
+
+    ``G``/``beta``/``coeff``/``act``/``idx`` cover the cohort; ``h_store``
+    is the full [N, ...] store (shard-local block under the mesh).  Returns
+    ``(delta, new_h)`` — the per-shard partial delta (callers ``psum`` it)
+    and the refreshed store, produced by ONE kernel pass that streams each
+    cohort store row exactly once.  Equivalent to
+    ``stale_delta_refresh_ref`` up to reduction-order ulps."""
+    interpret = _interpret_default() if interpret is None else interpret
+    Gf = flatten_cohort(G)
+    hf = flatten_cohort(h_store)
+    leaves = jax.tree.leaves(stale_sum)
+    sum_f = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+    delta, new_h = stale_agg_refresh(coeff, beta, act, idx, Gf, hf, sum_f,
+                                     interpret=interpret)
+    return unflatten_like(delta, stale_sum), unflatten_cohort(new_h, h_store)
+
+
+def stale_delta_refresh_ref(coeff: jnp.ndarray, G: Any, h_store: Any,
+                            beta: jnp.ndarray, act: jnp.ndarray,
+                            idx: jnp.ndarray, stale_weights: jnp.ndarray,
+                            axis_name: str | None = None) -> tuple[Any, Any]:
+    """Order-pinned reference for the fused delta + refresh: EXACTLY the
+    ``stale_delta_onedot`` contraction followed by EXACTLY the mixin's
+    refresh scatter ops, so the reference engine path stays bitwise
+    unchanged by the fusion (tests/test_methods_properties.py pins it)."""
+    h_cohort = jax.tree.map(lambda x: x[idx], h_store)
+    delta = aggregation.stale_delta_onedot(coeff, G, h_cohort, beta, h_store,
+                                           stale_weights, axis_name=axis_name)
+
+    def leaf(hh, gg):
+        mask = act.reshape((-1,) + (1,) * (gg.ndim - 1)) > 0
+        return hh.at[idx].set(jnp.where(mask, gg.astype(hh.dtype), hh[idx]))
+
+    return delta, jax.tree.map(leaf, h_store, G)

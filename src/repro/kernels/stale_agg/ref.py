@@ -12,3 +12,19 @@ def stale_agg_ref(coeff: jnp.ndarray, beta: jnp.ndarray, G: jnp.ndarray,
     corr = G - beta.astype(jnp.float32)[:, None] * h
     return stale_sum.astype(jnp.float32) + jnp.einsum(
         "c,cp->p", coeff.astype(jnp.float32), corr)
+
+
+def stale_agg_refresh_ref(coeff: jnp.ndarray, beta: jnp.ndarray,
+                          act: jnp.ndarray, idx: jnp.ndarray,
+                          G: jnp.ndarray, h: jnp.ndarray,
+                          stale_sum: jnp.ndarray
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the fused delta + refresh scatter.
+
+    coeff, beta, act: [C]; idx: [C] distinct store rows; G: [C, P];
+    h: [N, P] store; stale_sum: [P] -> (delta [P] f32, refreshed h [N, P]).
+    The delta reads the PRE-refresh store rows (Algorithm 2 order)."""
+    delta = stale_agg_ref(coeff, beta, G, h[idx], stale_sum)
+    mask = (act > 0)[:, None]
+    new_h = h.at[idx].set(jnp.where(mask, G.astype(h.dtype), h[idx]))
+    return delta, new_h

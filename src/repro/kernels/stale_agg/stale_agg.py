@@ -21,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_P = 16 * 1024  # f32 elements per tile per client stream
 
@@ -62,3 +63,90 @@ def stale_agg(coeff: jnp.ndarray, beta: jnp.ndarray, G: jnp.ndarray,
         interpret=interpret,
     )(coeff, beta, G, h, stale_sum)
     return out[:P]
+
+
+# ---------------------------------------------------------------------------
+# extended kernel: Eq. 18 delta + the stale-store refresh in ONE pass
+# ---------------------------------------------------------------------------
+
+
+def _refresh_kernel(idx_ref, coeff_ref, beta_ref, act_ref,
+                    g_ref, h_ref, sum_ref, delta_ref, store_ref):
+    """Grid (P//BLOCK_P, C), cohort innermost.  Per (tile, cohort slot c):
+    stream G[c] and the store row h[idx[c]] ONCE, accumulate the Eq. 18
+    correction into the resident delta tile, and write the refreshed row
+    (G if active, the unchanged h otherwise) straight back into the
+    aliased store — the refresh scatter rides the same pass instead of a
+    second [C, P] read + XLA scatter rebuild."""
+    c = pl.program_id(1)
+    g = g_ref[0].astype(jnp.float32)                 # [BLOCK_P]
+    h = h_ref[0].astype(jnp.float32)
+    contrib = coeff_ref[c] * (g - beta_ref[c] * h)
+
+    @pl.when(c == 0)
+    def _init():
+        delta_ref[...] = sum_ref[...].astype(jnp.float32) + contrib
+
+    @pl.when(c > 0)
+    def _accum():
+        delta_ref[...] = delta_ref[...] + contrib
+
+    store_ref[0] = jnp.where(act_ref[c] > 0, g, h).astype(store_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def stale_agg_refresh(coeff: jnp.ndarray, beta: jnp.ndarray,
+                      act: jnp.ndarray, idx: jnp.ndarray, G: jnp.ndarray,
+                      h: jnp.ndarray, stale_sum: jnp.ndarray,
+                      block_p: int = BLOCK_P, interpret: bool = False
+                      ) -> tuple:
+    """Fused Eq. 18 delta + in-place stale-store refresh scatter.
+
+    coeff, beta, act: [C]; idx: [C] int (cohort slot -> store row, DISTINCT
+    rows — the engine's argsort/arange cohorts guarantee it, and duplicate
+    rows would race the aliased scatter); G: [C, P]; h: [N, P] store;
+    stale_sum: [P].  Returns (delta [P] f32, refreshed store [N, P]).
+
+    The store operand is aliased to the store output
+    (``input_output_aliases``), so rows outside ``idx`` are never copied:
+    under the engine's donation contract the refresh is an in-place
+    scatter on the live buffer (exactly in-place when P is already a
+    multiple of ``block_p``; otherwise the P-axis padding pays one copy,
+    same convention as ``stale_agg``).  idx/coeff/beta/act are
+    scalar-prefetched so the store-row DMA addresses are known before the
+    tile body runs."""
+    C, P = G.shape
+    N = h.shape[0]
+    block_p = min(block_p, max(128, P))
+    pad = (-P) % block_p
+    if pad:
+        G = jnp.pad(G, ((0, 0), (0, pad)))
+        h = jnp.pad(h, ((0, 0), (0, pad)))
+        stale_sum = jnp.pad(stale_sum, (0, pad))
+    Pp = P + pad
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Pp // block_p, C),
+        in_specs=[
+            pl.BlockSpec((1, block_p), lambda p, c, idx, *_: (c, p)),
+            pl.BlockSpec((1, block_p), lambda p, c, idx, *_: (idx[c], p)),
+            pl.BlockSpec((block_p,), lambda p, c, idx, *_: (p,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p,), lambda p, c, idx, *_: (p,)),
+            pl.BlockSpec((1, block_p), lambda p, c, idx, *_: (idx[c], p)),
+        ],
+    )
+    delta, store = pl.pallas_call(
+        _refresh_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Pp,), jnp.float32),
+                   jax.ShapeDtypeStruct((N, Pp), h.dtype)],
+        # operand indices count the 4 scalar-prefetch args: G=4, h=5
+        input_output_aliases={5: 1},
+        interpret=interpret,
+    )(idx.astype(jnp.int32), coeff.astype(jnp.float32),
+      beta.astype(jnp.float32), act.astype(jnp.float32), G, h, stale_sum)
+    if pad:
+        return delta[:P], store[:, :P]
+    return delta, store

@@ -8,6 +8,7 @@ ring buffer for long_500k on pure-attention archs).
 from __future__ import annotations
 
 import math
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -15,6 +16,22 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import layers
+
+
+def use_flash_kernel() -> bool:
+    """Route the training/prefill attention through the Pallas flash
+    kernel?  Same gate convention as ``stale_family.use_stale_agg_kernel``:
+    default on TPU only; ``REPRO_FLASH_KERNEL=1`` forces the kernel path
+    (interpret mode off-TPU — how CPU tests exercise the wiring), ``=0``
+    disables it.  Read at TRACE time: set the env var before tracing.
+
+    The flash path assumes contiguous positions 0..S-1 (its causal/window
+    mask uses absolute sequence indices), which holds at every training and
+    prefill call site; ``decode_attention`` never routes here."""
+    flag = os.environ.get("REPRO_FLASH_KERNEL", "")
+    if flag in ("0", "1"):
+        return flag == "1"
+    return jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -86,6 +103,12 @@ def attention(p, cfg: ArchConfig, x: jnp.ndarray,
     if positions is None:
         positions = jnp.arange(S)
     q, k, v = _project_qkv(p, cfg, x, positions)
+    if use_flash_kernel():
+        # kernel path: flash_gqa repeats the grouped KV itself and carries
+        # a custom_vjp (backward = the reference attention's gradients)
+        from repro.kernels.flash_attention.ops import flash_gqa
+        out = flash_gqa(q, k, v, causal=True, window=cfg.train_window)
+        return layers.dense(p["wo"], out.reshape(B, S, cfg.n_heads * cfg.dh))
     n_rep = cfg.n_heads // cfg.n_kv_heads
     k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
 

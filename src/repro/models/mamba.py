@@ -8,6 +8,7 @@ makes the SSM archs native runners of the ``long_500k`` shape.
 from __future__ import annotations
 
 import math
+import os
 from typing import Tuple
 
 import jax
@@ -15,6 +16,20 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import layers
+
+
+def use_ssm_kernel() -> bool:
+    """Route the full-sequence selective scan through the Pallas
+    ``selective_scan`` kernel?  Same gate convention as
+    ``stale_family.use_stale_agg_kernel``: default on TPU only;
+    ``REPRO_SSM_KERNEL=1`` forces the kernel path (interpret mode off-TPU —
+    how CPU tests exercise the wiring), ``=0`` disables it.  Read at TRACE
+    time.  The kernel fast path does not track ``h_last``, so calls that
+    need a decode cache (``return_cache=True``) always use the jnp scan."""
+    flag = os.environ.get("REPRO_SSM_KERNEL", "")
+    if flag in ("0", "1"):
+        return flag == "1"
+    return jax.default_backend() == "tpu"
 
 
 def dt_rank(cfg: ArchConfig) -> int:
@@ -101,9 +116,22 @@ def mamba(p, cfg: ArchConfig, x: jnp.ndarray, return_cache: bool = False):
     dt_in, Bmat, Cmat = jnp.split(proj, [r, r + N], axis=-1)
     dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # [B,S,di]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))            # [di,N]
-    y, h_last = _ssm_scan(u_conv.astype(jnp.float32), dt.astype(jnp.float32), A,
-                          Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
-                          p["D"].astype(jnp.float32))
+    if use_ssm_kernel() and not return_cache:
+        # kernel path: custom_vjp (backward = the reference recurrence's
+        # gradients); no h_last, so only when no decode cache is needed
+        from repro.kernels.selective_scan.ops import ssm_scan_pallas
+        y = ssm_scan_pallas(u_conv.astype(jnp.float32),
+                            dt.astype(jnp.float32), A,
+                            Bmat.astype(jnp.float32),
+                            Cmat.astype(jnp.float32),
+                            p["D"].astype(jnp.float32))
+        h_last = None
+    else:
+        y, h_last = _ssm_scan(u_conv.astype(jnp.float32),
+                              dt.astype(jnp.float32), A,
+                              Bmat.astype(jnp.float32),
+                              Cmat.astype(jnp.float32),
+                              p["D"].astype(jnp.float32))
     y = y.astype(x.dtype) * jax.nn.silu(z)
     out = y @ p["out_proj"]
     if return_cache:

@@ -194,17 +194,11 @@ def embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
 # ---------------------------------------------------------------------------
 
 
-def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
-            q_chunk: int = 1024, remat: bool = False, unroll: int = 1,
-            remat_policy: str = "full") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Training forward: returns (mean next-token CE loss, aux metrics).
+def _trunk(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+           q_chunk: int, remat: bool, unroll: int, remat_policy: str):
+    """Embed -> block scan -> final norm -> full logits [B, S_total, V].
 
-    ``remat=True`` rematerializes each block in the backward pass (scan over
-    layers stores only the per-layer carry).  ``remat_policy="dots"`` keeps
-    matmul outputs (no recompute forward: 8ND -> 6ND compute at higher
-    activation memory — EXPERIMENTS.md §Perf-5).  ``unroll`` unrolls the
-    layer scan (used by the roofline validation: XLA cost_analysis counts
-    scan bodies once, so the validation lowers an unrolled variant)."""
+    Shared by ``forward`` (training loss) and ``logits`` (evaluation)."""
     x, mask = embed_inputs(params, cfg, batch)
     S = x.shape[1]
     positions = jnp.arange(S)
@@ -222,17 +216,43 @@ def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
                                params["blocks"], unroll=unroll)
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params.get("lm_head", params["embed"])
-    logits = x @ (head["w"] if not cfg.tie_embeddings else head["w"].T)
+    return x @ (head["w"] if not cfg.tie_embeddings else head["w"].T), mask, aux
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            q_chunk: int = 1024, remat: bool = False, unroll: int = 1,
+            remat_policy: str = "full") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: returns (mean next-token CE loss, aux metrics).
+
+    ``remat=True`` rematerializes each block in the backward pass (scan over
+    layers stores only the per-layer carry).  ``remat_policy="dots"`` keeps
+    matmul outputs (no recompute forward: 8ND -> 6ND compute at higher
+    activation memory — EXPERIMENTS.md §Perf-5).  ``unroll`` unrolls the
+    layer scan (used by the roofline validation: XLA cost_analysis counts
+    scan bodies once, so the validation lowers an unrolled variant)."""
+    full_logits, mask, aux = _trunk(params, cfg, batch, q_chunk, remat,
+                                    unroll, remat_policy)
     # next-token prediction on the token region
     tgt = batch["tokens"]
     n_front = cfg.n_frontend_tokens
-    logits_t = logits[:, n_front:, :]
+    logits_t = full_logits[:, n_front:, :]
     loss_mask = None if mask is None else mask[:, n_front:]
     loss = layers.cross_entropy(logits_t[:, :-1], tgt[:, 1:],
                                 None if loss_mask is None else loss_mask[:, 1:])
     if cfg.family == "moe":
         loss = loss + MOE_AUX_WEIGHT * aux / cfg.n_layers
     return loss, aux
+
+
+def logits(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+           q_chunk: int = 1024) -> jnp.ndarray:
+    """Full next-token logits over the token region, [B, S, V].
+
+    The evaluation entry point: ``fl.experiments`` accuracy closures score
+    next-token argmax hits from these (same trunk as ``forward``, so kernel
+    gates apply identically)."""
+    full_logits, _, _ = _trunk(params, cfg, batch, q_chunk, False, 1, "full")
+    return full_logits[:, cfg.n_frontend_tokens:, :]
 
 
 def prefill(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],

@@ -187,6 +187,25 @@ def roofline(cfg: ArchConfig, shape: InputShape, rcfg: FLRoundConfig,
     }
 
 
+def model_world_step(cfg: ArchConfig, batch: int, seq: int,
+                     local_steps: int = 1) -> Dict[str, float]:
+    """Analytic cost of ONE local-training step of a model-world task
+    (``fl.experiments.build_model_setting``): global FLOPs and HBM bytes
+    for ``batch`` x ``seq`` tokens on a single chip, reusing the
+    production step accounting (remat-adjusted blocks, causal attention,
+    selective-scan ops).  ``benchmarks/kernels_bench.py`` divides the
+    measured local-step wall time by these terms to report
+    measured-vs-roofline for the real-model worlds."""
+    shape = InputShape("model_world", seq, batch, "train")
+    rcfg = FLRoundConfig(local_steps=local_steps, clients_per_round=1)
+    fl = step_flops(cfg, shape, rcfg, "fedavg")
+    by = step_bytes(cfg, shape, rcfg, "fedavg", chips=1, model_shards=1)
+    return {"model_flops": fl["useful"], "hlo_equiv_flops": fl["hlo_equiv"],
+            "attn_flops": fl["attn"], "scan_flops": fl["scan"],
+            "hbm_bytes": by,
+            "arithmetic_intensity": fl["hlo_equiv"] / max(by, 1.0)}
+
+
 def client_shard_scaling(client_bytes: float, replicated_bytes: float,
                          n_shards: int, serial_fraction: float = 0.1
                          ) -> Dict[str, float]:

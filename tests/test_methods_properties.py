@@ -321,6 +321,147 @@ def test_async_zero_inflight_mass_on_padded_clients(trace, window, n_pad):
             assert np.all(pad_rows == 0.0), "in-flight mass on padding"
 
 
+# ---------------------------------------------------------------------------
+# extended stale_agg scatter (fused Eq. 18 delta + refresh): the refresh
+# touches exactly the active rows, padded/masked cohort slots produce zero
+# writes and exact-zero delta mass, and the reference-path composition is
+# bitwise stale_delta_onedot + the mixin's scatter
+# ---------------------------------------------------------------------------
+
+from repro.core import aggregation, stale  # noqa: E402
+from repro.core.methods.mixins import StaleStoreMixin  # noqa: E402
+from repro.kernels.stale_agg.ops import (  # noqa: E402
+    stale_delta_refresh_pallas, stale_delta_refresh_ref)
+from repro.kernels.stale_agg.stale_agg import stale_agg_refresh  # noqa: E402
+
+
+@st.composite
+def _refresh_case(draw):
+    C = draw(st.integers(1, 4))
+    N = draw(st.integers(C, 8))
+    P = draw(st.integers(1, 200))
+    seed = draw(st.integers(0, 10_000))
+    act = np.asarray(draw(st.lists(st.booleans(), min_size=C, max_size=C)),
+                     np.float32)
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(N)[:C].astype(np.int32)   # DISTINCT rows (engine
+    return C, N, P, rng, act, idx                   # argsort/arange contract)
+
+
+@given(_refresh_case())
+@settings(max_examples=10, deadline=None)
+def test_fused_refresh_touches_exactly_active_rows(case):
+    """Store rows addressed by an ACTIVE cohort slot become that slot's G
+    bitwise; every other row — inactive slots' rows and rows outside the
+    cohort — survives the fused kernel bitwise untouched."""
+    C, N, P, rng, act, idx = case
+    G = jnp.asarray(rng.normal(size=(C, P)), jnp.float32)
+    h = jnp.asarray(rng.normal(size=(N, P)), jnp.float32)
+    ss = jnp.asarray(rng.normal(size=(P,)), jnp.float32)
+    coeff = jnp.asarray(rng.uniform(0.1, 1, C), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0, 1, C), jnp.float32)
+    _, store = stale_agg_refresh(coeff, beta, jnp.asarray(act),
+                                 jnp.asarray(idx), G, h, ss,
+                                 block_p=128, interpret=True)
+    store = np.asarray(store)
+    active_rows = {int(idx[c]): c for c in range(C) if act[c] > 0}
+    for n in range(N):
+        if n in active_rows:
+            np.testing.assert_array_equal(store[n],
+                                          np.asarray(G[active_rows[n]]))
+        else:
+            np.testing.assert_array_equal(store[n], np.asarray(h[n]))
+
+
+@given(_refresh_case(), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_fused_refresh_zero_writes_on_padding(case, n_pad):
+    """Padded cohort slots (the engine's contract: act 0, coeff 0, mapped
+    to masked store rows) receive zero writes, and their delta
+    contribution is EXACTLY zero: the delta with padded slots equals the
+    delta over the real slots alone, bitwise."""
+    C, N, P, rng, act, idx = case
+    G = np.asarray(rng.normal(size=(C, P)), np.float32)
+    h = np.asarray(rng.normal(size=(N + n_pad, P)), np.float32)
+    ss = jnp.asarray(rng.normal(size=(P,)), jnp.float32)
+    coeff = np.asarray(rng.uniform(0.1, 1, C), np.float32)
+    beta = np.asarray(rng.uniform(0, 1, C), np.float32)
+    # widen the cohort with padding slots addressing the padding rows
+    G_p = np.concatenate([G, rng.normal(size=(n_pad, P)).astype(np.float32)])
+    act_p = np.concatenate([act, np.zeros(n_pad, np.float32)])
+    coeff_p = np.concatenate([coeff, np.zeros(n_pad, np.float32)])
+    beta_p = np.concatenate([beta, rng.uniform(0, 1, n_pad).astype(np.float32)])
+    idx_p = np.concatenate([idx, (N + np.arange(n_pad)).astype(np.int32)])
+
+    d_pad, s_pad = stale_agg_refresh(
+        jnp.asarray(coeff_p), jnp.asarray(beta_p), jnp.asarray(act_p),
+        jnp.asarray(idx_p), jnp.asarray(G_p), jnp.asarray(h), ss,
+        block_p=128, interpret=True)
+    d_real, _ = stale_agg_refresh(
+        jnp.asarray(coeff), jnp.asarray(beta), jnp.asarray(act),
+        jnp.asarray(idx), jnp.asarray(G), jnp.asarray(h), ss,
+        block_p=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_pad)[N:], h[N:])
+    np.testing.assert_array_equal(np.asarray(d_pad), np.asarray(d_real))
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(4, 8))
+@settings(max_examples=10, deadline=None)
+def test_refresh_ref_is_onedot_plus_mixin_scatter_bitwise(seed, C, N):
+    """The fused op's reference path is BITWISE the order-pinned
+    ``stale_delta_onedot`` plus the mixin's refresh scatter — so wiring the
+    fused kernel changed nothing on the reference path (fused==loop
+    equivalence and every pinned trajectory survive)."""
+    rng = np.random.default_rng(seed)
+    shapes = {"w": (3, 5), "b": (4,)}
+    G = {k: jnp.asarray(rng.normal(size=(C,) + s), jnp.float32)
+         for k, s in shapes.items()}
+    h = {k: jnp.asarray(rng.normal(size=(N,) + s), jnp.float32)
+         for k, s in shapes.items()}
+    coeff = jnp.asarray(rng.uniform(0.1, 1, C), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0, 1, C), jnp.float32)
+    act = jnp.asarray(rng.integers(0, 2, C), jnp.float32)
+    idx = jnp.asarray(rng.permutation(N)[:C], jnp.int32)
+    sw = jnp.asarray(rng.uniform(0, 1, N), jnp.float32)
+
+    d_ref, h_ref = stale_delta_refresh_ref(coeff, G, h, beta, act, idx, sw)
+    h_cohort = jax.tree.map(lambda x: x[idx], h)
+    d_onedot = aggregation.stale_delta_onedot(coeff, G, h_cohort, beta, h, sw)
+    h_mixin, _ = StaleStoreMixin.refresh(
+        {"h": h, "h_valid": jnp.zeros((N,), jnp.float32)}, G, act, idx)
+    for a, b in zip(jax.tree.leaves(d_ref), jax.tree.leaves(d_onedot)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(h_ref), jax.tree.leaves(h_mixin)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_fused_pytree_delta_matches_ref_within_tolerance(seed):
+    """Kernel (interpret) vs reference composition at the ops level:
+    delta within the documented stale_agg tolerance, store bitwise."""
+    rng = np.random.default_rng(seed)
+    C, N = 3, 6
+    shapes = {"w": (4, 7), "b": (3,)}
+    G = {k: jnp.asarray(rng.normal(size=(C,) + s), jnp.float32)
+         for k, s in shapes.items()}
+    h = {k: jnp.asarray(rng.normal(size=(N,) + s), jnp.float32)
+         for k, s in shapes.items()}
+    coeff = jnp.asarray(rng.uniform(0.1, 1, C), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0, 1, C), jnp.float32)
+    act = jnp.asarray(rng.integers(0, 2, C), jnp.float32)
+    idx = jnp.asarray(rng.permutation(N)[:C], jnp.int32)
+    sw = jnp.asarray(rng.uniform(0, 1, N), jnp.float32)
+    d_ref, h_ref = stale_delta_refresh_ref(coeff, G, h, beta, act, idx, sw)
+    d_k, h_k = stale_delta_refresh_pallas(
+        coeff, G, h, beta, act, idx, stale.stale_mean(h, sw), interpret=True)
+    for a, b in zip(jax.tree.leaves(d_k), jax.tree.leaves(d_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4 * C)
+    for a, b in zip(jax.tree.leaves(h_k), jax.tree.leaves(h_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @given(_trace_st, st.integers(1, 2))
 @settings(max_examples=6, deadline=None)
 def test_async_beta_estimates_finite(trace, window):

@@ -152,3 +152,42 @@ def test_moe_load_balance_aux():
     loss, aux = transformer.forward(params, cfg, batch, q_chunk=16)
     # aux = E * sum(me*ce) >= 1 (perfectly balanced) per layer, summed over L
     assert float(aux) >= 0.9 * cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# init determinism + forward-shape contracts (the engine relies on both:
+# per-task init keys come from split/fold_in of one seed, and fusion
+# stacks same-arch params along a leading task axis)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_init_deterministic_under_index_keys(arch, rng):
+    """init must be a pure function of (key, cfg): the same fold_in-derived
+    key reproduces params bitwise, a different index gives different params
+    with the SAME tree structure (the stacking contract for task fusion)."""
+    cfg = get_config(arch).reduced()
+    k0, k1 = jax.random.fold_in(rng, 0), jax.random.fold_in(rng, 1)
+    p_a = transformer.init(k0, cfg)
+    p_b = transformer.init(k0, cfg)
+    for la, lb in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    p_c = transformer.init(k1, cfg)
+    assert jax.tree.structure(p_a) == jax.tree.structure(p_c)
+    assert any(
+        not np.array_equal(np.asarray(la), np.asarray(lc))
+        for la, lc in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_c)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_logits_shape_contract(arch, rng):
+    """``transformer.logits`` covers exactly the token positions for every
+    registry entry: [B, S, vocab_size], frontend positions sliced off."""
+    cfg = get_config(arch).reduced()
+    params = transformer.init(rng, cfg)
+    B, S = 2, 16
+    batch = _batch(cfg, rng, B, S)
+    lg = jax.jit(
+        lambda p, b: transformer.logits(p, cfg, b, q_chunk=16))(params, batch)
+    assert lg.shape == (B, S, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(lg, np.float32)))

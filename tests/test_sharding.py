@@ -293,3 +293,64 @@ def test_refuses_fleet_apis():
         eng.run_seeds([0, 1], 2)
     with pytest.raises(NotImplementedError, match="client-sharded"):
         eng.init_states([0, 1])
+
+
+# ---------------------------------------------------------------------------
+# real-model task worlds: sharded == single-device through the model stack
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model_setting():
+    """Mixed transformer+mamba world (8 clients — divisible by both the
+    1-shard and 8-shard meshes used below)."""
+    from repro.fl.experiments import build_model_setting
+    return build_model_setting()
+
+
+def _model_cfg(method):
+    return ServerConfig(method=method, local_epochs=1, seed=1,
+                        active_rate=0.5, batch_size=4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["lvr", "stalevre", "random"])
+def test_model_world_one_shard_matches(model_setting, method):
+    """The collective path degenerates on a 1-device mesh and must
+    reproduce the plain engine on real model code."""
+    tasks, B, avail = model_setting
+    ref = RoundEngine(tasks, B, avail, _model_cfg(method))
+    sh = RoundEngine(tasks, B, avail, _model_cfg(method),
+                     mesh=sharding.client_mesh(1))
+    st_r, met_r = ref.rollout(ref.init_state(), 2)
+    st_s, met_s = sh.rollout(sh.init_state(), 2)
+    for k in met_r:
+        np.testing.assert_allclose(np.asarray(met_r[k]),
+                                   np.asarray(met_s[k]),
+                                   rtol=RTOL, atol=ATOL,
+                                   err_msg=f"{method}:{k}")
+    _leaves_close(st_r.params, st_s.params, f"{method}:params")
+    _leaves_close(st_r.method_state, st_s.method_state, f"{method}:mstate")
+
+
+@needs_mesh
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["lvr", "stalevre", "random"])
+def test_model_world_sharded_matches(model_setting, method):
+    """8 clients over 8 shards: per-shard local training + psum'd
+    aggregation on the transformer+mamba world tracks the single-device
+    engine to collective-reduction tolerance."""
+    tasks, B, avail = model_setting
+    ref = RoundEngine(tasks, B, avail, _model_cfg(method))
+    sh = RoundEngine(tasks, B, avail, _model_cfg(method),
+                     mesh=sharding.client_mesh(8))
+    st_r, met_r = ref.rollout(ref.init_state(), 2)
+    st_s, met_s = sh.rollout(sh.init_state(), 2)
+    for k in met_r:
+        np.testing.assert_allclose(np.asarray(met_r[k]),
+                                   np.asarray(met_s[k]),
+                                   rtol=RTOL, atol=ATOL,
+                                   err_msg=f"{method}:{k}")
+    _leaves_close(st_r.params, st_s.params, f"{method}:params")
+    np.testing.assert_allclose(ref.evaluate(st_r), sh.evaluate(st_s),
+                               atol=1e-6)

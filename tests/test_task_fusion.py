@@ -353,3 +353,51 @@ def test_facade_per_task_views_on_grouped_state(mixed_world):
     assert [p["w"].shape[0] for p in srv.params] == [16, 8, 16, 8]
     assert srv.h_valid.shape == (srv.N, srv.S)
     assert srv.beta_state.beta_hat.shape == (srv.N, srv.S)
+
+
+# ---------------------------------------------------------------------------
+# real-model task worlds: transformer + mamba through the model stack
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model_world():
+    """3 tasks over 2 real architectures (2x qwen3-like transformer +
+    1x mamba), local training running through the full model stack
+    (attention / selective scan), scaled to test dims."""
+    from repro.fl.experiments import build_model_setting
+    return build_model_setting()
+
+
+def test_model_world_groups_by_architecture(model_world):
+    """Same-arch transformer tasks share one signature group; the mamba
+    task splits off — mixed worlds form multi-group fusions."""
+    tasks, B, avail = model_world
+    assert group_tasks(tasks) == [[0, 1], [2]]
+    assert task_signature(tasks[0]) == task_signature(tasks[1])
+    assert task_signature(tasks[0]) != task_signature(tasks[2])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["lvr", "stalevre", "random"])
+def test_model_world_fused_matches_loop(model_world, method):
+    """The bit-stability contract survives real model code: fused vmap
+    over the mixed transformer+mamba groups == per-task loop, bitwise,
+    for metrics, params, method state, and eval accuracies."""
+    tasks, B, avail = model_world
+    kw = dict(local_epochs=1, active_rate=0.5, batch_size=4)
+    eng_f = RoundEngine(tasks, B, avail, _cfg(method, **kw))
+    eng_l = RoundEngine(tasks, B, avail, _cfg(method, fuse_tasks=False,
+                                              **kw))
+    assert eng_f.fuse_tasks and not eng_l.fuse_tasks
+    sf, mf = eng_f.rollout(eng_f.init_state(), 2)
+    sl, ml = eng_l.rollout(eng_l.init_state(), 2)
+    assert set(mf) == set(ml)
+    for k in mf:
+        np.testing.assert_array_equal(np.asarray(mf[k]), np.asarray(ml[k]),
+                                      err_msg=f"{method} {k}")
+    _tree_equal(sf.params, sl.params, err=f"{method} params")
+    _tree_equal(sf.method_state, sl.method_state, err=f"{method} mstate")
+    np.testing.assert_array_equal(np.asarray(eng_f.evaluate_fn(sf)),
+                                  np.asarray(eng_l.evaluate_fn(sl)),
+                                  err_msg=f"{method} accs")
