@@ -51,13 +51,26 @@ def _reject_smoke_payloads() -> None:
             f"(n_clients={sharded.get('n_clients')}); full-scale runs "
             f"use >= 512 clients — regenerate with "
             f"`python benchmarks/engine_bench.py`")
+    serve_path = "BENCH_serve.json"
+    if os.path.exists(serve_path):
+        try:
+            with open(serve_path) as f:
+                serve_payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            sys.exit(f"{serve_path} is unreadable ({e}); re-run "
+                     f"`python benchmarks/serve_bench.py` at full scale")
+        if serve_payload.get("smoke"):
+            sys.exit(
+                f"{serve_path} holds smoke-tagged numbers.  Smoke output "
+                f"belongs in BENCH_serve.smoke.json; restore the "
+                f"full-scale file with `python benchmarks/serve_bench.py`")
 
 
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
     _reject_smoke_payloads()
     from benchmarks import engine_bench, kernels_bench, overheads
-    from benchmarks import paper_tables, roofline_report
+    from benchmarks import paper_tables, roofline_report, serve_bench
 
     def timed(name, fn):
         t0 = time.perf_counter()
@@ -123,6 +136,10 @@ def main() -> None:
     # in a subprocess; derived = rounds/sec ratio + per-device state bytes
     # cross-checked against the roofline scaling model)
     timed("engine_sharded_stalevr", engine_bench.bench_sharded_scaling)
+
+    # --- multi-model serving (derived = rps across a rolling hot-swap,
+    # decode tok/s, and the S-models-in-n_groups fusion evidence) ----------
+    timed("serve_multi_model", serve_bench.bench_serve_load)
 
 
 if __name__ == "__main__":

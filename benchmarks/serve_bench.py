@@ -1,0 +1,179 @@
+"""Load-generator benchmark for the multi-model serving layer.
+
+Drives ``repro.serve.MultiModelServer`` with mixed cross-model request
+traffic on the default real-model task world (two qwen3-like transformer
+tasks + one falcon-mamba SSM task — the mixed two-group fusion case) and
+records the production serve metrics:
+
+  * ``rps_before`` / ``rps_after`` — load-generator requests/sec before
+    and after a rolling hot-swap (the acceptance surface: a landing
+    training checkpoint must not degrade steady-state throughput);
+  * ``decode_tok_per_s`` / ``token_ms`` — steady decode throughput and
+    per-token decode latency over the timed waves (device arrays stay on
+    device inside the decode loop — the loop is never host-synced);
+  * ``swap_gap_s`` — the serve-side stall one rolling hot-swap costs: a
+    newer ``state_N`` lands mid-wave, ``poll_hot_swap`` re-reads every
+    slot (ONE npz read via ``restore_model_params_multi``) and swaps the
+    param tables between two decode steps of the in-flight wave;
+  * ``n_models`` / ``n_groups`` / ``dispatches_per_wave`` — the fusion
+    evidence: S models answer in n_groups vmapped dispatches.
+
+Same output contract as ``engine_bench``: ``bench_serve_load`` returns
+(us_per_request, derived).  Running the module directly writes
+``BENCH_serve.json``; ``--smoke`` (CI) writes ``BENCH_serve.smoke.json``
+instead, so smoke runs can never clobber the checked-in full-scale
+numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, Sequence, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import checkpoint  # noqa: E402
+from repro.core.engine import RoundEngine, ServerConfig  # noqa: E402
+from repro.fl.experiments import build_model_setting  # noqa: E402
+from repro.launch.serve import build_adapters  # noqa: E402
+from repro.serve import MultiModelServer, ServeRequest  # noqa: E402
+
+ARCHS = ("qwen3-0.6b", "qwen3-0.6b", "falcon-mamba-7b")
+
+
+def _train_world_checkpoint(tmpdir: str, archs: Sequence[str], seed: int):
+    """A grouped ``ExperimentState`` checkpoint as training writes it
+    (``state_0``), plus the perturbed state the bench lands later as the
+    newly-trained ``state_1`` hot-swap artifact."""
+    tasks, B, avail = build_model_setting(list(archs), n_clients=4, cap=4,
+                                          seq_len=8, seed=seed)
+    eng = RoundEngine(tasks, B, avail,
+                      ServerConfig(method="random", seed=seed))
+    state = eng.init_state()
+    path0 = checkpoint.save_state(tmpdir, state, 0)
+    bumped = state._replace(params=jax.tree.map(lambda x: x * 1.001,
+                                                state.params))
+    return path0, bumped
+
+
+def _wave(rng: np.random.Generator, adapters, n_requests: int,
+          prompt_len: int):
+    """Mixed cross-model traffic: every request draws its target model
+    uniformly; prompts come from the model's own vocab."""
+    reqs = []
+    for _ in range(n_requests):
+        s = int(rng.integers(0, len(adapters)))
+        toks = rng.integers(0, adapters[s].cfg.vocab_size,
+                            size=(prompt_len,), dtype=np.int32)
+        reqs.append(ServeRequest(model=s, tokens=toks))
+    return reqs
+
+
+def bench_serve_load(archs: Sequence[str] = ARCHS, n_requests: int = 12,
+                     prompt_len: int = 16, gen: int = 8, waves: int = 6,
+                     seed: int = 0) -> Tuple[float, str]:
+    """Serve ``waves`` mixed-traffic waves before and after a rolling
+    hot-swap; the swap itself lands mid-wave against in-flight decode."""
+    rng = np.random.default_rng(seed)
+    adapters = build_adapters(archs, test_dims=True)
+    with tempfile.TemporaryDirectory() as tmpdir:
+        path0, bumped = _train_world_checkpoint(tmpdir, archs, seed)
+        server = MultiModelServer.from_checkpoint(path0, adapters)
+
+        # compile the whole pow2 batch ladder up front — mixed traffic
+        # must never hit a compile inside the timed waves
+        server.warmup(prompt_len, gen, max_batch=n_requests)
+
+        def timed_waves(n):
+            done = tokens = 0
+            dec_s = 0.0
+            t0 = time.perf_counter()
+            for _ in range(n):
+                _, st = server.generate(
+                    _wave(rng, adapters, n_requests, prompt_len), gen)
+                done += st.requests
+                tokens += st.requests * (gen - 1)
+                dec_s += st.decode_s
+            return done / (time.perf_counter() - t0), tokens, dec_s
+
+        rps_before, toks_b, dec_b = timed_waves(waves)
+
+        # training lands state_1; swap against the in-flight decode of
+        # the next wave (poll fires between decode steps)
+        checkpoint.save_state(tmpdir, bumped, 1)
+        swap: Dict[str, float] = {}
+
+        def swap_poll(step):
+            if server.version < 1 and step == 1:
+                res = server.poll_hot_swap(tmpdir)
+                if res is not None:
+                    swap["step"], swap["gap_s"] = res
+
+        server.generate(_wave(rng, adapters, n_requests, prompt_len), gen,
+                        swap_poll=swap_poll)
+        if server.version != 1:
+            raise RuntimeError("rolling hot-swap never landed state_1")
+
+        rps_after, toks_a, dec_a = timed_waves(waves)
+
+    dispatches = len(server.groups)
+    tok_per_s = (toks_b + toks_a) / max(dec_b + dec_a, 1e-9)
+    us = 1e6 / max(rps_before, 1e-9)
+    derived = (f"rps_before={rps_before:.2f};rps_after={rps_after:.2f};"
+               f"swap_gap_s={swap['gap_s']:.4f};"
+               f"decode_tok_per_s={tok_per_s:.1f};"
+               f"token_ms={1e3 / max(tok_per_s, 1e-9):.2f};"
+               f"n_models={len(adapters)};n_groups={dispatches}")
+    return us, derived
+
+
+def _parse(derived: str) -> Dict[str, float]:
+    out = {}
+    for part in derived.split(";"):
+        k, v = part.split("=")
+        out[k] = float(v)
+    return out
+
+
+SMOKE_OUT = "BENCH_serve.smoke.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small waves (CI): exercises the full serve "
+                         "path incl. the hot-swap, headline numbers "
+                         f"still recorded — written to {SMOKE_OUT}, "
+                         "NEVER the full-scale file")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_serve.json, or "
+                         f"{SMOKE_OUT} under --smoke so CI smoke runs "
+                         "cannot clobber full-scale numbers)")
+    args = ap.parse_args()
+    out = args.out or (SMOKE_OUT if args.smoke else "BENCH_serve.json")
+    if args.smoke:
+        us, derived = bench_serve_load(n_requests=6, prompt_len=8, gen=6,
+                                       waves=3)
+    else:
+        us, derived = bench_serve_load(n_requests=24, prompt_len=32,
+                                       gen=16, waves=10)
+    report = {
+        "smoke": bool(args.smoke),
+        "archs": list(ARCHS),
+        "serve_load": {"us_per_request": us, **_parse(derived)},
+    }
+    print(f"serve_load,{us:.1f},{derived}")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,11 @@
 """Serving demo: batched prefill + decode for three different architecture
-families (dense / SSM / MoE) through the same serve path, including the
-sliding-window long-context mode.
+families (dense / SSM / MoE) through the same serve path, then the
+multi-model layer answering all three task models from one process.
+
+The arg stubs are derived from ``serve.build_parser()``'s own defaults
+(``parse_args([...])``), so the demo can never drift from the CLI's
+argument surface (a hand-built stub once dropped ``ckpt_model`` and died
+with AttributeError on any state-checkpoint run).
 
 Run:  PYTHONPATH=src python examples/serve_demo.py
 """
@@ -11,9 +16,16 @@ def main():
     for arch in ["qwen3-0.6b-reduced", "falcon-mamba-7b-reduced",
                  "llama4-scout-17b-a16e-reduced"]:
         print(f"=== {arch} ===")
-        args = type("A", (), dict(arch=arch, batch=4, prompt_len=32, gen=12,
-                                  ckpt=None, seed=0))
+        args = serve_mod.build_parser().parse_args(
+            ["--arch", arch, "--gen", "12"])
         serve_mod.serve(args)
+
+    print("=== multi-model: qwen3 x2 + falcon-mamba, one process ===")
+    args = serve_mod.build_parser().parse_args(
+        ["--archs", "qwen3-0.6b", "qwen3-0.6b", "falcon-mamba-7b",
+         "--test-dims", "--gen", "8", "--waves", "2", "--batch", "2",
+         "--prompt-len", "8"])
+    serve_mod.serve_multi(args)
 
 
 if __name__ == "__main__":

@@ -138,6 +138,70 @@ def is_state_checkpoint(path: str) -> bool:
     return any(k.startswith(STATE_PARAMS_PREFIX) for k in manifest["keys"])
 
 
+def _npz_task_map(data, files) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    if ".task_group" in files and ".task_slot" in files:
+        return (np.asarray(data[".task_group"]),
+                np.asarray(data[".task_slot"]))
+    return None
+
+
+def _npz_model_count(data, files) -> int:
+    task_map = _npz_task_map(data, files)
+    if task_map is not None:
+        return int(task_map[0].shape[0])
+    # legacy per-model tuple layout: count distinct .params/{i}/ prefixes
+    models = set()
+    for k in files:
+        if k.startswith(STATE_PARAMS_PREFIX):
+            head = k[len(STATE_PARAMS_PREFIX):].split("/", 1)[0]
+            try:
+                models.add(int(head))
+            except ValueError:
+                pass
+    return len(models)
+
+
+def _npz_model_flat(data, files, model: int) -> Dict[str, np.ndarray]:
+    """Flat {param-path: array} for ONE model slot of a state payload."""
+    task_map = _npz_task_map(data, files)
+    if task_map is not None:
+        task_group, task_slot = task_map
+        if not (0 <= model < task_group.shape[0]):
+            raise KeyError(
+                f"model index {model} out of range for the "
+                f"{task_group.shape[0]}-task state")
+        g = int(task_group[model])
+        slot = int(task_slot[model])
+        prefix = f"{STATE_PARAMS_PREFIX}{g}/"
+        flat = {k[len(prefix):]: data[k][slot] for k in files
+                if k.startswith(prefix)}
+    else:
+        prefix = f"{STATE_PARAMS_PREFIX}{model}/"
+        flat = {k[len(prefix):]: data[k] for k in files
+                if k.startswith(prefix)}
+    if not flat:
+        raise KeyError(
+            f"state payload holds no '{prefix}*' arrays — not a full-state "
+            f"checkpoint, or model index {model} out of range")
+    return flat
+
+
+def state_task_map(path: str) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """The persisted (task_group, task_slot) [S] mapping arrays of a
+    grouped ``ExperimentState`` checkpoint, or None for states written in
+    the distributed trainer's per-model tuple layout (``task_group=None``
+    — identity addressing)."""
+    with np.load(path + ".npz") as data:
+        return _npz_task_map(data, set(data.files))
+
+
+def state_model_count(path: str) -> int:
+    """Number of task models a full-state checkpoint holds (slot
+    enumeration: the serving layer sizes its model table from this)."""
+    with np.load(path + ".npz") as data:
+        return _npz_model_count(data, set(data.files))
+
+
 def restore_model_params(path: str, like: Any, model: int = 0,
                          shardings: Optional[Any] = None) -> Any:
     """Extract ONE model's params from a full ``ExperimentState`` checkpoint
@@ -150,30 +214,42 @@ def restore_model_params(path: str, like: Any, model: int = 0,
     out here.  States without the mapping (the distributed trainer's
     per-model tuples) keep the legacy ``.params/{model}/...`` addressing."""
     with np.load(path + ".npz") as data:
-        files = set(data.files)
-        if ".task_group" in files and ".task_slot" in files:
-            task_group = np.asarray(data[".task_group"])
-            if not (0 <= model < task_group.shape[0]):
-                raise KeyError(
-                    f"model index {model} out of range for the "
-                    f"{task_group.shape[0]}-task state in {path}.npz")
-            g = int(task_group[model])
-            slot = int(np.asarray(data[".task_slot"])[model])
-            prefix = f"{STATE_PARAMS_PREFIX}{g}/"
-            flat = {k[len(prefix):]: data[k][slot] for k in files
-                    if k.startswith(prefix)}
-        else:
-            prefix = f"{STATE_PARAMS_PREFIX}{model}/"
-            flat = {k[len(prefix):]: data[k] for k in files
-                    if k.startswith(prefix)}
-    if not flat:
-        raise KeyError(
-            f"{path}.npz holds no '{prefix}*' arrays — not a full-state "
-            f"checkpoint, or model index {model} out of range")
+        flat = _npz_model_flat(data, set(data.files), model)
     tree = _unflatten_like(flat, like)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)
     return tree
+
+
+def restore_model_params_multi(path: str, likes: Any,
+                               models: Optional[Any] = None,
+                               shardings: Optional[Any] = None) -> list:
+    """Multi-slot restore: every requested model's params from ONE read of
+    a full-state payload (the multi-model serving layer restores all S
+    slots on every rolling hot-swap — a per-slot ``restore_model_params``
+    loop would re-open and re-decompress the npz S times).
+
+    ``likes`` is either a sequence of per-model templates or a single
+    template shared by every requested slot; ``models`` defaults to every
+    slot in the checkpoint.  Returns the params in ``models`` order,
+    slot-by-slot identical to ``restore_model_params``."""
+    with np.load(path + ".npz") as data:
+        files = set(data.files)
+        if models is None:
+            models = range(_npz_model_count(data, files))
+        models = list(models)
+        if isinstance(likes, (list, tuple)):
+            if len(likes) != len(models):
+                raise ValueError(
+                    f"{len(likes)} templates for {len(models)} models")
+            like_of = dict(zip(models, likes))
+        else:
+            like_of = {m: likes for m in models}
+        out = [_unflatten_like(_npz_model_flat(data, files, m), like_of[m])
+               for m in models]
+    if shardings is not None:
+        out = [jax.device_put(t, shardings) for t in out]
+    return out
 
 
 def save_state(directory: str, state: Any, step: int,

@@ -162,13 +162,17 @@ PROBE_TAKE = 64
 _PRIMITIVE = (int, float, bool, str, bytes, type(None))
 
 
-def _fn_signature(f: Callable) -> Tuple:
+def fn_signature(f: Callable) -> Tuple:
     """Identity of a model function for grouping purposes: the code object
     plus the closure's primitive cell values (``_linear_adapter``'s
     ``init`` closes over (n_feat, n_classes); equal ints == same
     architecture).  Non-primitive cells fall back to object identity —
     conservative: equivalent-but-distinct constants split groups rather
-    than silently fusing different math."""
+    than silently fusing different math.
+
+    Shared by the training engine (``task_signature``) and the serving
+    layer (``repro.serve.adapters.serve_signature``): both batch
+    same-signature models into one vmapped dispatch."""
     code = getattr(f, "__code__", None)
     if code is None:
         return ("obj", id(f))
@@ -192,19 +196,21 @@ def task_signature(t: Task) -> Tuple:
     """Tasks with equal signatures compile to the same per-task round
     executable: same model code (loss/accuracy/init) and identical
     data/test shapes — the grouping rule of the fused task axis."""
-    return (_fn_signature(t.model.loss_fn), _fn_signature(t.model.accuracy),
-            _fn_signature(t.model.init),
+    return (fn_signature(t.model.loss_fn), fn_signature(t.model.accuracy),
+            fn_signature(t.model.init),
             _shape_signature(t.data), _shape_signature(t.test))
 
 
-def group_tasks(tasks: Sequence[Task]) -> List[List[int]]:
-    """Partition task indices into signature groups, first-occurrence
-    ordered (tasks within a group keep task order — slot j of group g is
-    the j-th task of that signature)."""
+def group_by_signature(signatures: Sequence[Tuple]) -> List[List[int]]:
+    """Partition indices into equal-signature groups, first-occurrence
+    ordered (items within a group keep input order — slot j of group g is
+    the j-th item of that signature).  The one grouping rule every
+    batched-dispatch surface shares: the fused training round
+    (``group_tasks``) and the multi-model serving layer
+    (``repro.serve``) both consume it."""
     sig_to_g: Dict[Tuple, int] = {}
     groups: List[List[int]] = []
-    for i, t in enumerate(tasks):
-        sig = task_signature(t)
+    for i, sig in enumerate(signatures):
         g = sig_to_g.get(sig)
         if g is None:
             g = len(groups)
@@ -212,6 +218,12 @@ def group_tasks(tasks: Sequence[Task]) -> List[List[int]]:
             groups.append([])
         groups[g].append(i)
     return groups
+
+
+def group_tasks(tasks: Sequence[Task]) -> List[List[int]]:
+    """Partition task indices into signature groups (see
+    ``group_by_signature``)."""
+    return group_by_signature([task_signature(t) for t in tasks])
 
 
 class World(NamedTuple):

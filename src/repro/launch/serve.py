@@ -1,12 +1,20 @@
-"""Serving launcher: batched prefill + decode for any assigned architecture.
+"""Serving launcher: single-model batched prefill/decode, or the
+multi-model layer serving EVERY task of a grouped state checkpoint.
 
-Deploys an MMFL-trained model (or fresh init) with the production serve
-steps: one prefill over the request batch, then token-by-token decode
-against (ring-buffer) caches.
+Single-model mode deploys one architecture (fresh init, a bare params
+checkpoint, or one slot of a full-state checkpoint).  Multi-model mode
+(``--archs``, one registry name per task slot) mirrors MMFL's defining
+axis in production: all S task models hot from ONE ``ExperimentState``
+checkpoint via ``repro.serve.MultiModelServer`` — same-signature models
+answer through one vmapped dispatch, and ``--ckpt-dir`` enables rolling
+hot-swap when training lands a newer ``state_N``.
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b-reduced \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve \
+      --archs qwen3-0.6b qwen3-0.6b falcon-mamba-7b --test-dims \
+      --ckpt results/train/state_20 --ckpt-dir results/train
 """
 from __future__ import annotations
 
@@ -22,13 +30,21 @@ from repro.checkpoint import checkpoint
 from repro.configs.registry import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
+from repro.serve import MultiModelServer, ServeRequest, make_serve_adapter
+
+# fold_in stream tags: init / prompt sampling / frontend features draw
+# from independent streams off the seed key (a shared key would correlate
+# the synthetic prompts with the param init draw)
+_K_INIT, _K_PROMPT, _K_FRONT = 0, 1, 2
 
 
 def serve(args):
     cfg = get_config(args.arch)
     mesh = make_host_mesh()
     key = jax.random.PRNGKey(args.seed)
-    params = transformer.init(key, cfg)
+    k_init, k_prompt, k_front = (jax.random.fold_in(key, t)
+                                 for t in (_K_INIT, _K_PROMPT, _K_FRONT))
+    params = transformer.init(k_init, cfg)
     if args.ckpt:
         like = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
@@ -41,11 +57,11 @@ def serve(args):
             params = checkpoint.restore(args.ckpt, like)
 
     B = args.batch
-    prompt = {"tokens": jax.random.randint(key, (B, args.prompt_len), 0,
+    prompt = {"tokens": jax.random.randint(k_prompt, (B, args.prompt_len), 0,
                                            cfg.vocab_size)}
     if cfg.n_frontend_tokens:
         prompt["frontend"] = jax.random.normal(
-            key, (B, cfg.n_frontend_tokens, cfg.frontend_dim))
+            k_front, (B, cfg.n_frontend_tokens, cfg.frontend_dim))
 
     cache_len = args.prompt_len + cfg.n_frontend_tokens + args.gen + 1
     prefill = jax.jit(lambda p, b: transformer.prefill(p, cfg, b, q_chunk=64,
@@ -58,18 +74,18 @@ def serve(args):
         jax.block_until_ready(logits)
         t_prefill = time.time() - t0
         ids = jnp.argmax(logits, -1).astype(jnp.int32)
-        outputs = [np.asarray(ids)]
+        outputs = [ids]                 # device arrays: no host syncs in
         pos = jnp.int32(args.prompt_len + cfg.n_frontend_tokens)
-        t0 = time.time()
+        t0 = time.time()                # the timed decode loop
         for _ in range(args.gen - 1):
             logits, caches = decode(params, ids, caches, pos)
             ids = jnp.argmax(logits, -1).astype(jnp.int32)
-            outputs.append(np.asarray(ids))
+            outputs.append(ids)
             pos = pos + 1
-        jax.block_until_ready(logits)
+        jax.block_until_ready(ids)
         t_decode = time.time() - t0
 
-    toks = np.stack(outputs, axis=1)
+    toks = np.stack([np.asarray(o) for o in outputs], axis=1)
     stats = {
         "arch": args.arch,
         "batch": B,
@@ -81,20 +97,113 @@ def serve(args):
     return stats
 
 
-def main():
+def _serve_cfg(name: str, test_dims: bool):
+    if test_dims:
+        # the dims build_model_setting trains at — what a grouped state
+        # checkpoint from the real-model task worlds deploys with
+        from repro.fl.experiments import _model_cfg
+        return _model_cfg(name)
+    # same registry convention as launch.train: '-reduced' names resolve
+    # through the registry, so a train-produced state_N restores 1:1
+    return get_config(name)
+
+
+def build_adapters(archs, test_dims: bool = False):
+    """Per-task serve adapters, shared per architecture so same-arch
+    tasks land in one serve-signature group (one vmapped dispatch)."""
+    cfgs, adapters = {}, []
+    for name in archs:
+        if name not in cfgs:
+            cfgs[name] = _serve_cfg(name, test_dims)
+        adapters.append(make_serve_adapter(cfgs[name]))
+    return adapters
+
+
+def serve_multi(args):
+    """Multi-model serving: every task slot of a grouped checkpoint hot
+    in one process, synthetic mixed-traffic waves, optional hot-swap."""
+    adapters = build_adapters(args.archs, args.test_dims)
+    if args.ckpt:
+        server = MultiModelServer.from_checkpoint(args.ckpt, adapters)
+    else:
+        server = MultiModelServer.init(adapters, seed=args.seed)
+    k_prompt = jax.random.fold_in(jax.random.PRNGKey(args.seed), _K_PROMPT)
+
+    def wave(w):
+        reqs = []
+        for s, ad in enumerate(adapters):
+            ks = jax.random.fold_in(jax.random.fold_in(k_prompt, w), s)
+            toks = jax.random.randint(
+                ks, (args.batch, args.prompt_len), 0, ad.cfg.vocab_size)
+            reqs.extend(ServeRequest(model=s, tokens=t)
+                        for t in np.asarray(toks))
+        return reqs
+
+    server.warmup(args.prompt_len, args.gen, max_batch=args.batch)
+    t0 = time.perf_counter()
+    swaps = []
+    done = 0
+    for w in range(args.waves):
+        if args.ckpt_dir:
+            swapped = server.poll_hot_swap(args.ckpt_dir)
+            if swapped is not None:
+                swaps.append({"step": swapped[0],
+                              "swap_s": round(swapped[1], 3)})
+        outs, wstats = server.generate(wave(w), gen=args.gen)
+        done += wstats.requests
+    wall = time.perf_counter() - t0
+    stats = {
+        "archs": list(args.archs),
+        "n_models": server.S,
+        "groups": server.groups,
+        "ckpt_version": server.version,
+        "requests_per_s": round(done / max(wall, 1e-9), 2),
+        "decode_tok_per_s": round(
+            done * (args.gen - 1) / max(wall, 1e-9), 1),
+        "hot_swaps": swaps,
+    }
+    print(json.dumps(stats, indent=1))
+    return stats
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The one serve argument surface.  Demos/benches derive their arg
+    stubs from THIS parser's defaults (``parse_args([...])``) so a stub
+    can never drift from the CLI again."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b-reduced")
+    ap.add_argument("--archs", nargs="+", default=None,
+                    help="multi-model mode: one registry arch per task "
+                         "slot of the grouped state checkpoint")
+    ap.add_argument("--test-dims", action="store_true",
+                    help="scale --archs with the build_model_setting "
+                         "training dims (what engine state checkpoints "
+                         "from the real-model task worlds hold) instead "
+                         "of each arch's .reduced() dims")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--waves", type=int, default=4,
+                    help="multi-model mode: synthetic traffic waves")
     ap.add_argument("--ckpt", default=None,
                     help="params checkpoint OR a full-state checkpoint "
                          "from train.py --ckpt-every (state_N)")
     ap.add_argument("--ckpt-model", type=int, default=0,
                     help="which model's params to serve from a full-state "
-                         "checkpoint")
+                         "checkpoint (single-model mode)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="multi-model mode: watch this directory and "
+                         "rolling-hot-swap when a newer state_N lands")
     ap.add_argument("--seed", type=int, default=0)
-    serve(ap.parse_args())
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+    if args.archs:
+        serve_multi(args)
+    else:
+        serve(args)
 
 
 if __name__ == "__main__":

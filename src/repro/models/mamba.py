@@ -135,7 +135,13 @@ def mamba(p, cfg: ArchConfig, x: jnp.ndarray, return_cache: bool = False):
     y = y.astype(x.dtype) * jax.nn.silu(z)
     out = y @ p["out_proj"]
     if return_cache:
-        cache = {"conv": u[:, S - (k - 1):, :], "ssm": h_last}
+        # last k-1 raw (pre-conv) inputs; prompts shorter than the conv
+        # receptive field keep the implicit leading zeros the causal pad
+        # gave them, so decode's conv window matches the prefill math
+        tail = u[:, max(0, S - (k - 1)):, :]
+        if S < k - 1:
+            tail = jnp.pad(tail, ((0, 0), (k - 1 - S, 0), (0, 0)))
+        cache = {"conv": tail, "ssm": h_last}
         return out, cache
     return out
 

@@ -194,6 +194,13 @@ def embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
 # ---------------------------------------------------------------------------
 
 
+def _head_logits(params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Final-norm'd hidden states -> vocab logits (tied or untied head).
+    The one head projection every serve/train entry point shares."""
+    head = params.get("lm_head", params["embed"])
+    return x @ (head["w"].T if cfg.tie_embeddings else head["w"])
+
+
 def _trunk(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
            q_chunk: int, remat: bool, unroll: int, remat_policy: str):
     """Embed -> block scan -> final norm -> full logits [B, S_total, V].
@@ -215,8 +222,7 @@ def _trunk(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
     (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                                params["blocks"], unroll=unroll)
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    head = params.get("lm_head", params["embed"])
-    return x @ (head["w"] if not cfg.tie_embeddings else head["w"].T), mask, aux
+    return _head_logits(params, cfg, x), mask, aux
 
 
 def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
@@ -270,9 +276,7 @@ def prefill(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
 
     x, caches = jax.lax.scan(body, x, params["blocks"])
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    head = params.get("lm_head", params["embed"])
-    logits = x[:, -1] @ (head["w"] if not cfg.tie_embeddings else head["w"].T)
-    return logits, caches
+    return _head_logits(params, cfg, x[:, -1]), caches
 
 
 def init_caches(cfg: ArchConfig, batch: int, cache_len: int, dtype,
@@ -308,6 +312,4 @@ def decode_step(params, cfg: ArchConfig, ids: jnp.ndarray, caches,
 
     x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    head = params.get("lm_head", params["embed"])
-    logits = x[:, 0] @ (head["w"] if not cfg.tie_embeddings else head["w"].T)
-    return logits, new_caches
+    return _head_logits(params, cfg, x[:, 0]), new_caches

@@ -1,0 +1,10 @@
+"""Multi-model serving layer: all S MMFL-trained models hot from one
+grouped ``ExperimentState`` checkpoint, batched per serve-signature
+group with rolling hot-swap.  See ``repro.serve.server``."""
+from repro.serve.adapters import (ServeAdapter, group_models,
+                                  make_serve_adapter, serve_signature)
+from repro.serve.server import (MultiModelServer, ServeRequest, WaveStats)
+
+__all__ = ["ServeAdapter", "group_models", "make_serve_adapter",
+           "serve_signature", "MultiModelServer", "ServeRequest",
+           "WaveStats"]

@@ -1,0 +1,79 @@
+"""Per-architecture serve adapters: the inference analogue of the
+training engine's model adapters.
+
+``make_serve_adapter(cfg)`` builds prefill/decode/init closures over one
+``ArchConfig`` — build it ONCE per architecture and share the instance
+across that architecture's task models, exactly like
+``fl.experiments._arch_adapter`` shares its training closures.  The
+sharing is what makes inference batching work: ``serve_signature``
+compares the closures with ``repro.core.engine.fn_signature`` (code
+object + closure cells — the same rule that groups tasks for the fused
+training round), so same-arch models land in one group and
+``MultiModelServer`` answers them with ONE vmapped prefill/decode
+dispatch, while distinct architectures split naturally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core.engine import fn_signature, group_by_signature
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeAdapter:
+    """Functional inference interface for one architecture.
+
+    ``prefill(params, tokens, cache_len)`` -> (last-token logits [B, V],
+    decode caches); ``decode(params, ids, caches, pos)`` -> (logits
+    [B, V], new caches); ``init(key)`` -> fresh params (the template
+    shape authority for checkpoint restores)."""
+    cfg: ArchConfig
+    init: Callable[[Any], Any]
+    prefill: Callable[[Any, Any, int], Tuple[Any, Any]]
+    decode: Callable[[Any, Any, Any, Any], Tuple[Any, Any]]
+
+
+def make_serve_adapter(cfg: ArchConfig, q_chunk: int = 64) -> ServeAdapter:
+    """Serve closures over ``cfg`` (dense / ssm / hybrid / moe families —
+    ``transformer``'s entry points route each family's block wiring,
+    including the Mamba O(1) decode cache).  Token-only: the stub
+    frontend archs (vlm/audio) need per-request frontend features the
+    batched request path does not carry."""
+    if cfg.n_frontend_tokens:
+        raise ValueError(
+            f"{cfg.name}: frontend-token archs (vlm/audio stubs) are not "
+            f"servable through the batched multi-model path — their "
+            f"requests need per-request frontend features; use the "
+            f"single-model `launch.serve.serve` path")
+
+    def init(key):
+        return transformer.init(key, cfg)
+
+    def prefill(params, tokens, cache_len):
+        return transformer.prefill(params, cfg, {"tokens": tokens},
+                                   q_chunk=q_chunk, cache_len=cache_len)
+
+    def decode(params, ids, caches, pos):
+        return transformer.decode_step(params, cfg, ids, caches, pos)
+
+    return ServeAdapter(cfg=cfg, init=init, prefill=prefill, decode=decode)
+
+
+def serve_signature(adapter: ServeAdapter) -> Tuple:
+    """Models with equal signatures share one compiled serve executable:
+    same prefill/decode/init code and closure constants (the shared
+    ``cfg`` instance inside a shared adapter).  Conservative by identity,
+    like the training rule: distinct-but-equal configs split rather than
+    silently fusing different architectures."""
+    return (fn_signature(adapter.prefill), fn_signature(adapter.decode),
+            fn_signature(adapter.init))
+
+
+def group_models(adapters: Sequence[ServeAdapter]) -> List[List[int]]:
+    """Partition model indices into serve-signature groups —
+    ``repro.core.engine.group_by_signature``, the training engine's
+    grouping, applied to inference batching."""
+    return group_by_signature([serve_signature(a) for a in adapters])

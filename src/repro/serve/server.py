@@ -1,0 +1,279 @@
+"""Multi-model serving on one grouped ``ExperimentState`` checkpoint.
+
+MMFL trains S models concurrently; this is the production counterpart —
+all S trained models serve concurrently from the artifacts training
+produces.  ``MultiModelServer`` loads every slot of a full-state
+checkpoint (the persisted ``task_group``/``task_slot`` mapping addresses
+the signature-grouped param stacks), keeps the params hot as per-group
+stacks, and answers mixed cross-model request traffic with ONE vmapped
+prefill/decode dispatch per serve-signature group — the training
+engine's task-axis fusion applied to inference.
+
+Rolling hot-swap: ``poll_hot_swap`` watches a checkpoint directory and,
+when a newer ``state_N`` lands, re-reads every slot's params (one npz
+read via ``restore_model_params_multi``) and swaps the stacked tables in
+place.  Decode closures take params as an argument, so in-flight decode
+simply consumes the new table at its next step — caches are
+params-independent and survive the swap untouched.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint
+from repro.serve.adapters import ServeAdapter, group_models
+
+# dedicated fold_in tag for serve-side param init streams (fresh-init
+# deployments); disjoint from the training engine's nested streams
+_INIT_TAG = 0x5E21
+
+
+class ServeRequest(NamedTuple):
+    """One generation request: ``model`` indexes the served task models,
+    ``tokens`` is the int prompt [P]."""
+    model: int
+    tokens: np.ndarray
+
+
+class WaveStats(NamedTuple):
+    """Timing of one ``generate`` wave (all requests answered)."""
+    requests: int
+    tokens: int             # generated tokens (requests * gen)
+    prefill_s: float
+    decode_s: float
+    dispatches: int         # vmapped group dispatches (prefill count)
+
+
+class MultiModelServer:
+    """All S task models hot, batched per serve-signature group.
+
+    ``adapters`` is the per-model list of (shared-per-arch)
+    ``ServeAdapter`` instances; ``params`` the per-model param list.  Use
+    ``MultiModelServer.from_checkpoint`` for the deploy path and
+    ``MultiModelServer.init`` for a fresh-init deployment."""
+
+    def __init__(self, adapters: Sequence[ServeAdapter],
+                 params: Sequence[Any], version: int = -1):
+        self.adapters = list(adapters)
+        self.S = len(self.adapters)
+        if len(params) != self.S:
+            raise ValueError(f"{len(params)} param trees for {self.S} models")
+        # inference batching: the engine's signature grouping over the
+        # serve closures — same-arch models form one vmapped group
+        self.groups = group_models(self.adapters)
+        self.model_gs: List[tuple] = [(-1, -1)] * self.S
+        for g, grp in enumerate(self.groups):
+            for j, s in enumerate(grp):
+                self.model_gs[s] = (g, j)
+        # checkpoint-restore templates (shape/dtype authority per model)
+        self.likes = [jax.eval_shape(a.init, jax.random.PRNGKey(0))
+                      for a in self.adapters]
+        self.version = version
+        self.swap_count = 0
+        self._prefill: Dict[tuple, Callable] = {}
+        self._decode: Dict[int, Callable] = {}
+        self._stacked: List[Any] = []
+        self._set_params(params)
+
+    # ------------------------------------------------------------------
+    # constructors
+    # ------------------------------------------------------------------
+    @classmethod
+    def init(cls, adapters: Sequence[ServeAdapter],
+             seed: int = 0) -> "MultiModelServer":
+        """Fresh-init deployment: per-model params on independent
+        fold_in streams off one base key."""
+        base = jax.random.fold_in(jax.random.PRNGKey(seed), _INIT_TAG)
+        params = [a.init(jax.random.fold_in(base, s))
+                  for s, a in enumerate(adapters)]
+        return cls(adapters, params)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, adapters: Sequence[ServeAdapter],
+                        version: Optional[int] = None) -> "MultiModelServer":
+        """Deploy every slot of a grouped full-state checkpoint.  The
+        slot count must match the adapter list — the serving layer's
+        model table IS the checkpoint's task axis."""
+        n = checkpoint.state_model_count(path)
+        if n != len(adapters):
+            raise ValueError(
+                f"checkpoint {path} holds {n} task models but "
+                f"{len(adapters)} serve adapters were provided")
+        likes = [jax.eval_shape(a.init, jax.random.PRNGKey(0))
+                 for a in adapters]
+        params = checkpoint.restore_model_params_multi(path, likes)
+        if version is None:
+            tail = os.path.basename(path).rsplit("_", 1)[-1]
+            version = int(tail) if tail.isdigit() else -1
+        return cls(adapters, params, version=version)
+
+    # ------------------------------------------------------------------
+    # param table (per-group stacks) + rolling hot-swap
+    # ------------------------------------------------------------------
+    def _set_params(self, per_model: Sequence[Any]) -> None:
+        stacked = [
+            jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[per_model[s] for s in grp])
+            for grp in self.groups]
+        jax.block_until_ready(stacked)   # swap completes off the hot path
+        self._stacked = stacked
+
+    def model_params(self, s: int) -> Any:
+        """Model s's live params (slot view of its group's stack)."""
+        g, j = self.model_gs[s]
+        return jax.tree.map(lambda a: a[j], self._stacked[g])
+
+    def hot_swap(self, path: str, version: Optional[int] = None) -> None:
+        """Re-read every slot from ``path`` and swap the param tables.
+        In-flight decode picks the new table up at its next step; decode
+        caches are params-independent and are not touched."""
+        per_model = checkpoint.restore_model_params_multi(path, self.likes)
+        self._set_params(per_model)
+        if version is not None:
+            self.version = version
+        self.swap_count += 1
+
+    def poll_hot_swap(self, directory: str, prefix: str = "state_"
+                      ) -> Optional[tuple]:
+        """Rolling-upgrade watcher: if a checkpoint newer than
+        ``self.version`` landed in ``directory``, hot-swap to it.
+        Returns (step, swap_seconds) when a swap happened, else None —
+        the swap seconds are the serve-side stall a landing checkpoint
+        costs (the bench's swap-gap metric)."""
+        step = checkpoint.latest_step(directory, prefix)
+        if step is None or step <= self.version:
+            return None
+        t0 = time.perf_counter()
+        self.hot_swap(os.path.join(directory, f"{prefix}{step}"),
+                      version=step)
+        return step, time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    # vmapped group dispatches
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, g: int, cache_len: int) -> Callable:
+        fn = self._prefill.get((g, cache_len))
+        if fn is None:
+            ad = self.adapters[self.groups[g][0]]
+            fn = jax.jit(jax.vmap(
+                lambda p, t: ad.prefill(p, t, cache_len)))
+            self._prefill[(g, cache_len)] = fn
+        return fn
+
+    def _decode_fn(self, g: int) -> Callable:
+        fn = self._decode.get(g)
+        if fn is None:
+            ad = self.adapters[self.groups[g][0]]
+            fn = jax.jit(jax.vmap(
+                lambda p, i, c, pos: ad.decode(p, i, c, pos),
+                in_axes=(0, 0, 0, None)))
+            self._decode[g] = fn
+        return fn
+
+    def warmup(self, prompt_len: int, gen: int, max_batch: int) -> int:
+        """Pre-compile every executable a wave can hit: per group, the
+        pow2 slot-batch ladder up to ``max_batch`` for prefill plus one
+        decode step.  Mixed traffic then never compiles on the serving
+        path.  Returns the number of (group, batch) variants warmed."""
+        cache_len = prompt_len + gen + 1
+        warmed = 0
+        for g, slots in enumerate(self.groups):
+            prefill = self._prefill_fn(g, cache_len)
+            decode = self._decode_fn(g)
+            B = 1
+            while True:
+                toks = jnp.zeros((len(slots), B, prompt_len), jnp.int32)
+                logits, caches = prefill(self._stacked[g], toks)
+                ids = jnp.argmax(logits, -1).astype(jnp.int32)
+                out, _ = decode(self._stacked[g], ids, caches,
+                                jnp.asarray(prompt_len, jnp.int32))
+                jax.block_until_ready(out)
+                warmed += 1
+                if B >= max_batch:
+                    break
+                B <<= 1
+        return warmed
+
+    # ------------------------------------------------------------------
+    # request path
+    # ------------------------------------------------------------------
+    def generate(self, requests: Sequence[ServeRequest], gen: int,
+                 swap_poll: Optional[Callable[[int], Any]] = None
+                 ) -> tuple:
+        """Answer a wave of mixed cross-model requests with greedy
+        decoding.  Returns (outputs, WaveStats): ``outputs[i]`` is the
+        int32 [gen] generated ids for ``requests[i]``.
+
+        Per (group, prompt-length) bucket the wave runs ONE vmapped
+        prefill and ``gen - 1`` vmapped decode steps over the group's
+        stacked params — slots with fewer requests are padded to the
+        bucket's max batch and the padding rows are dropped on output.
+        ``swap_poll(step)`` (optional) runs between decode steps: the
+        rolling hot-swap hook — a swap mid-wave retargets the remaining
+        steps at the new params without dropping the in-flight caches.
+        Device arrays stay on device inside the decode loop; outputs are
+        copied out once after ``block_until_ready``."""
+        buckets: Dict[tuple, List[int]] = {}
+        for i, r in enumerate(requests):
+            if not (0 <= r.model < self.S):
+                raise KeyError(f"request {i}: no model {r.model} "
+                               f"(serving {self.S})")
+            g, _ = self.model_gs[r.model]
+            buckets.setdefault((g, int(np.asarray(r.tokens).shape[-1])),
+                               []).append(i)
+        outputs: List[Optional[np.ndarray]] = [None] * len(requests)
+        prefill_s = decode_s = 0.0
+        for (g, P), idxs in sorted(buckets.items()):
+            slots = self.groups[g]
+            slot_of = {m: j for j, m in enumerate(slots)}
+            per_slot: List[List[int]] = [[] for _ in slots]
+            for i in idxs:
+                per_slot[slot_of[requests[i].model]].append(i)
+            # pad the slot batch to the next power of two: mixed traffic
+            # makes the per-slot max wobble wave to wave, and each new B
+            # is a fresh executable — pow2 bucketing bounds the compile
+            # variants (padding rows are dropped on output)
+            B = max(len(rows) for rows in per_slot)
+            B = 1 << (B - 1).bit_length()
+            toks = np.zeros((len(slots), B, P), np.int32)
+            for j, rows in enumerate(per_slot):
+                for b, i in enumerate(rows):
+                    toks[j, b] = np.asarray(requests[i].tokens, np.int32)
+            cache_len = P + gen + 1
+            prefill = self._prefill_fn(g, cache_len)
+            decode = self._decode_fn(g)
+
+            t0 = time.perf_counter()
+            logits, caches = prefill(self._stacked[g], jnp.asarray(toks))
+            ids = jnp.argmax(logits, -1).astype(jnp.int32)
+            jax.block_until_ready(ids)
+            prefill_s += time.perf_counter() - t0
+
+            steps = [ids]                     # device arrays: no host syncs
+            pos = jnp.asarray(P, jnp.int32)
+            t0 = time.perf_counter()
+            for step in range(gen - 1):
+                if swap_poll is not None:
+                    swap_poll(step)
+                logits, caches = decode(self._stacked[g], ids, caches, pos)
+                ids = jnp.argmax(logits, -1).astype(jnp.int32)
+                steps.append(ids)
+                pos = pos + 1
+            jax.block_until_ready(ids)
+            decode_s += time.perf_counter() - t0
+
+            out = np.stack([np.asarray(s) for s in steps], axis=-1)
+            for j, rows in enumerate(per_slot):
+                for b, i in enumerate(rows):
+                    outputs[i] = out[j, b]
+        stats = WaveStats(requests=len(requests),
+                          tokens=len(requests) * gen,
+                          prefill_s=prefill_s, decode_s=decode_s,
+                          dispatches=len(buckets))
+        return outputs, stats
