@@ -42,6 +42,12 @@ micro-setting (64 clients, 3 tasks):
     test accuracy — the staleness tax of delayed aggregation, recorded as
     ``async_vs_sync`` (CI schema-gates the entry).
 
+  * ``bench_fault_guard``   — the server-side update guard
+    (``faults=dropout`` injection + finite-row detection + coefficient
+    re-normalization traced into the round) vs the fault-free engine:
+    what running every round defended costs, recorded as ``fault_guard``
+    (CI schema-gates the entry).
+
 The paper's CNN world is local-compute-bound on CPU and shows ~1x on both;
 per-round orchestration is exactly what dominates once local training is
 fast or offloaded (the production regime: accelerators own the local step,
@@ -457,6 +463,40 @@ def bench_async(method: str = "stalevre", target_acc: float = 0.80,
     return us, derived
 
 
+def bench_fault_guard(method: str = "stalevr", rounds: int = 30,
+                      reps: int = 3, rate: float = 0.2
+                      ) -> Tuple[float, str]:
+    """Guard overhead A/B: scanned rollouts of a dropout fault world
+    (injection + finite-row detection + coefficient re-normalization
+    traced into every round) vs the fault-free engine on the same
+    setting.  The guard is a handful of elementwise ops and two ordered
+    sums against the round's local-training matmuls, so the overhead
+    should be a few percent on the dispatch-bound linear world and
+    noise on real models — this entry keeps that claim measured."""
+    tasks, B, avail = build_linear_setting(n_models=3, n_clients=64, seed=0)
+    cfg_kw = dict(local_epochs=2, seed=0, active_rate=0.2)
+    row: Dict[str, float] = {}
+    for tag, extra in (("none", {}),
+                       ("guard", {"faults": "dropout",
+                                  "fault_kwargs": (("rate", rate),)})):
+        eng = RoundEngine(tasks, B, avail,
+                          ServerConfig(method=method, **cfg_kw, **extra))
+        state, _ = eng.rollout(eng.init_state(), rounds)   # warm up
+        jax.block_until_ready(state)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state, mets = eng.rollout(state, rounds)
+            jax.block_until_ready(mets)
+            best = min(best, time.perf_counter() - t0)
+        row[f"rps_{tag}"] = rounds / best
+    us = 1e6 / row["rps_guard"]
+    derived = (f"overhead={row['rps_none'] / row['rps_guard']:.3f}x;"
+               f"rps_guard={row['rps_guard']:.2f};"
+               f"rps_none={row['rps_none']:.2f};rate={rate}")
+    return us, derived
+
+
 def bench_model_world(method: str = "stalevre", rounds: int = 3,
                       reps: int = 2) -> Tuple[float, str]:
     """Fused rounds on the REAL-MODEL task world
@@ -558,6 +598,8 @@ def main():
         chunk=5 if args.smoke else 10,
         max_windows=40 if args.smoke else 200,
         target_acc=0.5 if args.smoke else 0.80)
+    us_q, d_q = bench_fault_guard(
+        "stalevr", rounds=rounds, reps=2 if args.smoke else 3)
     model_world_entry = None
     if not args.smoke or args.model_world:
         us_m, d_m = bench_model_world(
@@ -582,6 +624,7 @@ def main():
         "task_fusion_vs_loop": {"us_per_round": us_t, **_parse(d_t)},
         "sharded_scaling": sharded_entry,
         "async_vs_sync": {"us_per_window": us_a, **_parse(d_a)},
+        "fault_guard": {"us_per_round": us_q, **_parse(d_q)},
     }
     if model_world_entry is not None:
         report["model_world_round"] = model_world_entry
@@ -593,6 +636,7 @@ def main():
     print(f"engine_task_fusion_lvr,{us_t:.1f},{d_t}")
     print(f"engine_sharded_stalevr,{us_h:.1f},{d_h}")
     print(f"engine_async_stalevre,{us_a:.1f},{d_a}")
+    print(f"engine_fault_guard_stalevr,{us_q:.1f},{d_q}")
     with open(out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {os.path.abspath(out)}")

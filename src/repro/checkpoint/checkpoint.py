@@ -3,9 +3,23 @@
 Works for any pytree of jnp arrays.  On restore, arrays are placed back with
 the provided shardings (``jax.device_put`` with NamedSharding) so a restored
 training state is immediately usable under the production mesh.
+
+**Durability contract.**  A checkpoint is two files: the ``.npz`` payload
+and the ``.json`` manifest, written in that order through atomic
+tmp+``os.replace`` renames — the manifest is the COMMIT POINT, so a crash
+mid-write leaves either no manifest (the checkpoint never existed) or a
+complete, verifiable pair.  The manifest carries a sha256 digest of the
+payload bytes; ``verify_integrity`` checks it on restore and raises
+``CheckpointIntegrityError`` on a torn or corrupted payload.
+``latest_valid_step`` walks the step sequence newest-first, skipping
+torn/corrupt entries, which is how ``restore_state(step=None)`` (and the
+trainer's ``--resume``) auto-roll back past a bad ``state_N`` to the last
+durable one.  Manifests written before the digest field restore
+unchanged (no digest to check — legacy back-compat).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from typing import Any, Dict, Optional, Tuple
@@ -35,6 +49,16 @@ class CheckpointSchemaError(KeyError):
         return self.args[0]
 
 
+class CheckpointIntegrityError(RuntimeError):
+    """The checkpoint's bytes cannot be trusted: the manifest is missing
+    or unreadable, the payload is missing (a torn write — the manifest
+    committed but the rename of the payload did not, or the files were
+    partially copied), or the payload bytes do not hash to the
+    manifest's sha256 digest (corruption in flight or at rest).  Restore
+    paths raise it instead of handing back silently-wrong arrays;
+    ``latest_valid_step`` rolls back past it."""
+
+
 # async in-flight ``timer`` leaves are the one schema-migration fill that
 # must NOT be zero: timer == 0 means "this update lands NOW", so a
 # zero-filled [T_g, N] timer would land N empty updates in the first
@@ -55,7 +79,18 @@ def _flatten_with_paths(tree: Any) -> Dict[str, Any]:
     return flat
 
 
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    """Durable write: payload first, manifest last, both through atomic
+    tmp+``os.replace`` — the manifest's appearance is the commit point,
+    and its ``sha256`` field pins the payload bytes it committed."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten_with_paths(tree)
     arrays = {}
@@ -64,7 +99,13 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> None:
         if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
             a = np.asarray(jnp.asarray(v, jnp.float32))  # npz can't hold bf16
         arrays[k] = a
-    np.savez(path + ".npz", **arrays)
+    # open a file object: np.savez(str) appends ".npz" to names that lack
+    # it, which would mangle the tmp path
+    npz_tmp = path + ".npz.tmp"
+    with open(npz_tmp, "wb") as f:
+        np.savez(f, **arrays)
+    digest = _sha256_file(npz_tmp)
+    os.replace(npz_tmp, path + ".npz")
     treedef = jax.tree_util.tree_structure(tree)
     manifest = {
         "keys": sorted(arrays.keys()),
@@ -72,9 +113,53 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> None:
         "step": step,
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "sha256": digest,
     }
-    with open(path + ".json", "w") as f:
+    json_tmp = path + ".json.tmp"
+    with open(json_tmp, "w") as f:
         json.dump(manifest, f, indent=1)
+    os.replace(json_tmp, path + ".json")
+
+
+def verify_integrity(path: str) -> Dict[str, Any]:
+    """Validate a checkpoint's bytes and return its manifest.
+
+    Raises ``CheckpointIntegrityError`` when the manifest is missing or
+    unreadable, the payload file is missing, or the payload bytes do not
+    hash to the manifest's sha256.  Manifests without a digest (written
+    before the durability contract) pass with the payload-presence check
+    only."""
+    json_path, npz_path = path + ".json", path + ".npz"
+    if not os.path.exists(json_path):
+        raise CheckpointIntegrityError(
+            f"{path}: no manifest ({json_path} missing — write still in "
+            f"flight, or never committed)")
+    try:
+        with open(json_path) as f:
+            manifest = json.load(f)
+    except (ValueError, OSError) as e:
+        raise CheckpointIntegrityError(
+            f"{path}: unreadable manifest ({e})") from e
+    if not os.path.exists(npz_path):
+        raise CheckpointIntegrityError(
+            f"{path}: payload {npz_path} missing (torn write)")
+    want = manifest.get("sha256")
+    if want is not None:
+        got = _sha256_file(npz_path)
+        if got != want:
+            raise CheckpointIntegrityError(
+                f"{path}: payload digest mismatch — got {got[:12]}…, "
+                f"manifest pins {want[:12]}… (torn or corrupted write)")
+    return manifest
+
+
+def checkpoint_valid(path: str) -> bool:
+    """True when ``verify_integrity`` accepts the checkpoint."""
+    try:
+        verify_integrity(path)
+        return True
+    except (CheckpointIntegrityError, OSError):
+        return False
 
 
 def _unflatten_like(flat: Dict[str, np.ndarray], like: Any,
@@ -116,7 +201,12 @@ def restore(path: str, like: Any, shardings: Optional[Any] = None,
     absent from the payload are blank-filled (zeros; async in-flight
     timers get -1, the empty-slot sentinel) instead of raising
     ``CheckpointSchemaError`` — how a pre-async checkpoint resumes under
-    an ``AsyncRoundEngine`` with an empty in-flight buffer."""
+    an ``AsyncRoundEngine`` with an empty in-flight buffer.
+
+    The payload bytes are digest-verified against the manifest first
+    (``verify_integrity``): a torn or corrupted checkpoint raises
+    ``CheckpointIntegrityError`` instead of restoring garbage."""
+    verify_integrity(path)
     with np.load(path + ".npz") as data:
         flat = {k: data[k] for k in data.files}
     tree = _unflatten_like(flat, like, fill_missing=fill_missing)
@@ -284,18 +374,24 @@ def restore_state(directory: str, like: Any, step: Optional[int] = None,
     ``fill_missing`` migrates older payloads forward: leaves the template
     has but the payload lacks (e.g. ``async_state`` when resuming a
     pre-async run under an ``AsyncRoundEngine``) are blank-filled rather
-    than raising ``CheckpointSchemaError``."""
+    than raising ``CheckpointSchemaError``.
+
+    ``step=None`` resolves through ``latest_valid_step``: a torn or
+    corrupt newest ``state_N`` is skipped and the run rolls back to the
+    last checkpoint whose bytes verify.  An EXPLICIT ``step`` is
+    restored as asked and raises ``CheckpointIntegrityError`` if bad —
+    the caller named it, so silent substitution would be worse."""
     if step is None:
-        step = latest_step(directory, prefix)
+        step = latest_valid_step(directory, prefix)
     if step is None:
         return None, None
     return restore(os.path.join(directory, f"{prefix}{step}"), like,
                    shardings=shardings, fill_missing=fill_missing), step
 
 
-def latest_step(directory: str, prefix: str = "ckpt_") -> Optional[int]:
+def _all_steps(directory: str, prefix: str) -> list:
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for f in os.listdir(directory):
         if f.startswith(prefix) and f.endswith(".json"):
@@ -303,4 +399,23 @@ def latest_step(directory: str, prefix: str = "ckpt_") -> Optional[int]:
                 steps.append(int(f[len(prefix):-len(".json")]))
             except ValueError:
                 pass
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(directory: str, prefix: str = "ckpt_") -> Optional[int]:
+    """Newest step with a committed manifest — no byte validation (the
+    hot-swap poller uses this as the cheap candidate probe, then
+    validates)."""
+    steps = _all_steps(directory, prefix)
+    return steps[-1] if steps else None
+
+
+def latest_valid_step(directory: str, prefix: str = "ckpt_"
+                      ) -> Optional[int]:
+    """Newest step whose checkpoint passes ``verify_integrity`` —
+    walks the step sequence newest-first, skipping torn/corrupt entries
+    (the ``--resume`` rollback path)."""
+    for step in reversed(_all_steps(directory, prefix)):
+        if checkpoint_valid(os.path.join(directory, f"{prefix}{step}")):
+            return step
+    return None

@@ -62,8 +62,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import convergence, delay as delay_mod, methods, sampling, \
-    sharding, stale
+from repro.core import convergence, delay as delay_mod, faults, methods, \
+    sampling, sharding, stale
 from repro.core.engine import (ExperimentState, RoundEngine, ServerConfig,
                                Task, World)
 
@@ -225,9 +225,11 @@ class AsyncRoundEngine(RoundEngine):
         static_view = (self.d[:, s], self._d_v[:, s], self._B_v,
                        self.proc_client, self.world.client_mask)
         local_all = local_all or self._local_all[s]
+        fault_model, guard_on = self.fault_model, self.fault_guard
 
         def window_fn(params, mstate, astate, train_in, p_col, act_v,
-                      data, lr, round_f, tick, dkey, pres, view=None):
+                      data, lr, round_f, tick, dkey, pres, view=None,
+                      fault=None):
             d_col, d_v_col, B_v, proc, cmask = (static_view if view is None
                                                 else view)
             coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
@@ -264,8 +266,27 @@ class AsyncRoundEngine(RoundEngine):
             # (the needs-all call shape every strategy supports; for the
             # stale family the Eq. 18 store math corrects the delay)
             arrived = (timer == 0).astype(jnp.float32)
+            G_land, coeff_land, act_land = (inflight, coeff_buf * arrived,
+                                            arrived)
+            fault_counts = None
+            if fault is not None:
+                # faults strike the update in transit: landed rows crash
+                # (lost) or arrive poisoned; the buffer itself is
+                # untouched (landed slots clear at ADVANCE regardless)
+                crash_col, poison_col = fault
+                G_land = faults.inject(G_land, arrived, crash_col,
+                                       poison_col,
+                                       fault_model.poison_value)
+                if guard_on:
+                    G_land, coeff_land, act_land, rejected, survived = \
+                        faults.guard(G_land, coeff_land, act_land,
+                                     crash_col, cmask)
+                else:
+                    rejected = jnp.float32(0.0)
+                    survived = convergence.ordered_sum(act_land * cmask)
+                fault_counts = (rejected, survived)
             new_w, new_st, extras = strat.aggregate(
-                params, mstate, inflight, coeff_buf * arrived, arrived,
+                params, mstate, G_land, coeff_land, act_land,
                 jnp.arange(N), d_col=d_col, lr=lr, round_idx=round_f,
                 mask=cmask)
             # ADVANCE: clear landed slots, age the live ones
@@ -285,6 +306,8 @@ class AsyncRoundEngine(RoundEngine):
             extras["staleness"] = (convergence.ordered_sum(
                 arrived * age.astype(jnp.float32) * cmask)
                 / jnp.maximum(n_arr, 1.0))
+            if fault_counts is not None:
+                extras["rejected"], extras["survived"] = fault_counts
             return new_w, new_st, new_ast, extras
 
         return window_fn
@@ -297,22 +320,33 @@ class AsyncRoundEngine(RoundEngine):
                                       local_all=self._local_all[grp[0]])
 
         def window_g(params_g, state_g, astate_g, train_in_g, p_g, act_g,
-                     data_g, lr, round_f, tick, dkeys_g, pres, view_g):
+                     data_g, lr, round_f, tick, dkeys_g, pres, view_g,
+                     fault_g=None):
             if len(grp) == 1:
                 sq = lambda t: jax.tree.map(lambda a: a[0], t)
                 d_col, d_v_col, B_v, proc, cmask = view_g
+                f1 = (None if fault_g is None
+                      else (fault_g[0][0], fault_g[1][0]))
                 out = win_one(sq(params_g), sq(state_g), sq(astate_g),
                               sq(train_in_g), p_g[0], act_g[0],
                               sq(data_g), lr, round_f, tick, dkeys_g[0],
                               pres,
-                              (d_col[0], d_v_col[0], B_v, proc, cmask))
+                              (d_col[0], d_v_col[0], B_v, proc, cmask),
+                              f1)
                 return jax.tree.map(lambda a: a[None], out)   # 4-tuple
+            if fault_g is None:
+                return jax.vmap(
+                    win_one,
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, 0,
+                             None, (0, 0, None, None, None)))(
+                    params_g, state_g, astate_g, train_in_g, p_g, act_g,
+                    data_g, lr, round_f, tick, dkeys_g, pres, view_g)
             return jax.vmap(
                 win_one,
                 in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, 0, None,
-                         (0, 0, None, None, None)))(
+                         (0, 0, None, None, None), (0, 0)))(
                 params_g, state_g, astate_g, train_in_g, p_g, act_g,
-                data_g, lr, round_f, tick, dkeys_g, pres, view_g)
+                data_g, lr, round_f, tick, dkeys_g, pres, view_g, fault_g)
 
         return window_g
 
@@ -370,20 +404,35 @@ class AsyncRoundEngine(RoundEngine):
         B_v_t = w.B[w.proc_client] if explicit else self._B_v
         proc_t = w.proc_client if explicit else self.proc_client
         cmask_t = w.client_mask if explicit else self.world.client_mask
+        fault_ns = None
+        if self.faulty:
+            fault_ns = self._fault_cols(state.key, state.round)
         beta_parts: List[Any] = []
         arr_parts: List[jnp.ndarray] = []
         stl_parts: List[jnp.ndarray] = []
+        rej_parts: List[jnp.ndarray] = []
+        srv_parts: List[jnp.ndarray] = []
         if fused:
             new_params, new_mstate, new_astate = [], [], []
             for g, grp in enumerate(self.groups):
                 ia = np.asarray(grp)
                 view = (w.d[:, ia].T, d_v_t[:, ia].T, B_v_t, proc_t,
                         cmask_t)
-                new_w, new_st, new_ast, extras = self._g_window[g](
-                    state.params[g], state.method_state[g],
-                    state.async_state[g], task_keys[ia], p[:, ia].T,
-                    active[:, ia].T, w.data[g], lr, round_f, tick,
-                    delay_keys[ia], pres, view)
+                if fault_ns is None:
+                    new_w, new_st, new_ast, extras = self._g_window[g](
+                        state.params[g], state.method_state[g],
+                        state.async_state[g], task_keys[ia], p[:, ia].T,
+                        active[:, ia].T, w.data[g], lr, round_f, tick,
+                        delay_keys[ia], pres, view)
+                else:
+                    fg = (fault_ns[0][:, ia].T, fault_ns[1][:, ia].T)
+                    new_w, new_st, new_ast, extras = self._g_window[g](
+                        state.params[g], state.method_state[g],
+                        state.async_state[g], task_keys[ia], p[:, ia].T,
+                        active[:, ia].T, w.data[g], lr, round_f, tick,
+                        delay_keys[ia], pres, view, fg)
+                    rej_parts.append(extras["rejected"])
+                    srv_parts.append(extras["survived"])
                 new_params.append(new_w)
                 new_mstate.append(new_st)
                 new_astate.append(new_ast)
@@ -402,17 +451,34 @@ class AsyncRoundEngine(RoundEngine):
             betas: List[jnp.ndarray] = []
             arr_s: List[jnp.ndarray] = []
             stl_s: List[jnp.ndarray] = []
+            rej_s: List[jnp.ndarray] = []
+            srv_s: List[jnp.ndarray] = []
             for s in range(S):
                 g, j = self.task_gs[s]
                 view = ((w.d[:, s], d_v_t[:, s], B_v_t, proc_t, cmask_t)
                         if explicit else None)
-                new_w, new_st, new_ast, extras = self._window_pure[s](
-                    self.task_params(state, s),
-                    self.task_method_state(state, s),
-                    self.task_async_state(state, s), task_keys[s],
-                    p[:, s], active[:, s],
-                    self._task_data(w, s, explicit), lr, round_f, tick,
-                    delay_keys[s], pres, view)
+                if fault_ns is None:
+                    new_w, new_st, new_ast, extras = self._window_pure[s](
+                        self.task_params(state, s),
+                        self.task_method_state(state, s),
+                        self.task_async_state(state, s), task_keys[s],
+                        p[:, s], active[:, s],
+                        self._task_data(w, s, explicit), lr, round_f,
+                        tick, delay_keys[s], pres, view)
+                else:
+                    view = (view if view is not None
+                            else (w.d[:, s], d_v_t[:, s], B_v_t, proc_t,
+                                  cmask_t))
+                    new_w, new_st, new_ast, extras = self._window_pure[s](
+                        self.task_params(state, s),
+                        self.task_method_state(state, s),
+                        self.task_async_state(state, s), task_keys[s],
+                        p[:, s], active[:, s],
+                        self._task_data(w, s, explicit), lr, round_f,
+                        tick, delay_keys[s], pres, view,
+                        (fault_ns[0][:, s], fault_ns[1][:, s]))
+                    rej_s.append(extras["rejected"])
+                    srv_s.append(extras["survived"])
                 new_params[g] = jax.tree.map(
                     lambda a, v: a.at[j].set(v), new_params[g], new_w)
                 new_mstate[g] = jax.tree.map(
@@ -429,8 +495,16 @@ class AsyncRoundEngine(RoundEngine):
                          for grp in self.groups]
             stl_parts = [jnp.stack([stl_s[s] for s in grp])
                          for grp in self.groups]
+            if fault_ns is not None:
+                rej_parts = [jnp.stack([rej_s[s] for s in grp])
+                             for grp in self.groups]
+                srv_parts = [jnp.stack([srv_s[s] for s in grp])
+                             for grp in self.groups]
         metrics["arrived"] = self._scatter_tasks(arr_parts)
         metrics["staleness"] = self._scatter_tasks(stl_parts)
+        if fault_ns is not None:
+            metrics["rejected"] = self._scatter_tasks(rej_parts)
+            metrics["survived"] = self._scatter_tasks(srv_parts)
         new_state = ExperimentState(
             params=tuple(new_params), method_state=tuple(new_mstate),
             key=new_key, round=state.round + 1, losses_ns=losses_ns,
@@ -455,9 +529,10 @@ class AsyncRoundEngine(RoundEngine):
         dm = self.delay_model
         local_all = self._local_all[grp[0]]
         axis = sharding.CLIENT_AXIS
+        fault_model, guard_on = self.fault_model, self.fault_guard
 
         def win_one(params, mstate, astate, train_in, p_col, act_v, data,
-                    lr, round_f, tick, dkey, pres, view, off):
+                    lr, round_f, tick, dkey, pres, view, off, fault=None):
             d_col, d_v_col, B_v, proc, cmask = view    # replicated [N]/[V]
             coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
             coeff_client = jnp.zeros((N,)).at[proc].add(coeffs_v)
@@ -495,8 +570,26 @@ class AsyncRoundEngine(RoundEngine):
             age = jnp.where(started > 0, 0, astate["age"])
             # EXTRACT: shard-local landings, psum'd inside aggregate
             arrived = (timer == 0).astype(jnp.float32)
+            G_land, coeff_land, act_land = (inflight, coeff_buf * arrived,
+                                            arrived)
+            fault_counts = None
+            if fault is not None:
+                crash_col, poison_col = fault   # shard-local [n_loc]
+                G_land = faults.inject(G_land, arrived, crash_col,
+                                       poison_col,
+                                       fault_model.poison_value)
+                if guard_on:
+                    G_land, coeff_land, act_land, rejected, survived = \
+                        faults.guard(G_land, coeff_land, act_land,
+                                     crash_col, cmask_loc, axis_name=axis)
+                else:
+                    rejected = jnp.float32(0.0)
+                    survived = jax.lax.psum(
+                        convergence.ordered_sum(act_land * cmask_loc),
+                        axis)
+                fault_counts = (rejected, survived)
             new_w, new_st, extras = strat.aggregate(
-                params, mstate, inflight, coeff_buf * arrived, arrived,
+                params, mstate, G_land, coeff_land, act_land,
                 jnp.arange(n_loc), d_col=d_loc, lr=lr, round_idx=round_f,
                 mask=cmask_loc, axis_name=axis)
             # ADVANCE
@@ -520,27 +613,39 @@ class AsyncRoundEngine(RoundEngine):
             extras = dict(extras)
             extras["arrived"] = n_arr
             extras["staleness"] = stl / jnp.maximum(n_arr, 1.0)
+            if fault_counts is not None:
+                extras["rejected"], extras["survived"] = fault_counts
             return new_w, new_st, new_ast, extras
 
         def window_g(params_g, state_g, astate_g, train_in_g, p_g, act_g,
                      data_g, lr, round_f, tick, dkeys_g, pres, view_g,
-                     off):
+                     off, fault_g=None):
             if len(grp) == 1:
                 sq = lambda t: jax.tree.map(lambda a: a[0], t)
                 d_col, d_v_col, B_v, proc, cmask = view_g
+                f1 = (None if fault_g is None
+                      else (fault_g[0][0], fault_g[1][0]))
                 out = win_one(sq(params_g), sq(state_g), sq(astate_g),
                               sq(train_in_g), p_g[0], act_g[0],
                               sq(data_g), lr, round_f, tick, dkeys_g[0],
                               pres,
                               (d_col[0], d_v_col[0], B_v, proc, cmask),
-                              off)
+                              off, f1)
                 return jax.tree.map(lambda a: a[None], out)
+            if fault_g is None:
+                return jax.vmap(
+                    win_one,
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, 0,
+                             None, (0, 0, None, None, None), None))(
+                    params_g, state_g, astate_g, train_in_g, p_g, act_g,
+                    data_g, lr, round_f, tick, dkeys_g, pres, view_g, off)
             return jax.vmap(
                 win_one,
                 in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, 0, None,
-                         (0, 0, None, None, None), None))(
+                         (0, 0, None, None, None), None, (0, 0)))(
                 params_g, state_g, astate_g, train_in_g, p_g, act_g,
-                data_g, lr, round_f, tick, dkeys_g, pres, view_g, off)
+                data_g, lr, round_f, tick, dkeys_g, pres, view_g, off,
+                fault_g)
 
         return window_g
 
@@ -598,17 +703,32 @@ class AsyncRoundEngine(RoundEngine):
             metrics = self.sampling_metrics(p, active, losses_ns)
 
             # ---- 4) buffered window on local blocks ---------------------
+            fault_loc = None
+            if self.faulty:
+                fault_loc = self._fault_cols(state.key, state.round,
+                                             n=n_loc, offset=off)
             new_params, new_mstate, new_astate = [], [], []
             beta_parts, arr_parts, stl_parts = [], [], []
+            rej_parts, srv_parts = [], []
             for g, grp in enumerate(groups):
                 ia = np.asarray(grp)
                 view = (d_full[:, ia].T, d_v[:, ia].T, B_v, proc,
                         cmask_full)
-                new_w, new_st, new_ast, extras = g_window[g](
-                    state.params[g], state.method_state[g],
-                    state.async_state[g], task_keys[ia], p[:, ia].T,
-                    active[:, ia].T, data[g], lr, round_f, tick,
-                    delay_keys[ia], pres, view, off)
+                if fault_loc is None:
+                    new_w, new_st, new_ast, extras = g_window[g](
+                        state.params[g], state.method_state[g],
+                        state.async_state[g], task_keys[ia], p[:, ia].T,
+                        active[:, ia].T, data[g], lr, round_f, tick,
+                        delay_keys[ia], pres, view, off)
+                else:
+                    fg = (fault_loc[0][:, ia].T, fault_loc[1][:, ia].T)
+                    new_w, new_st, new_ast, extras = g_window[g](
+                        state.params[g], state.method_state[g],
+                        state.async_state[g], task_keys[ia], p[:, ia].T,
+                        active[:, ia].T, data[g], lr, round_f, tick,
+                        delay_keys[ia], pres, view, off, fg)
+                    rej_parts.append(extras["rejected"])
+                    srv_parts.append(extras["survived"])
                 new_params.append(new_w)
                 new_mstate.append(new_st)
                 new_astate.append(new_ast)
@@ -622,6 +742,9 @@ class AsyncRoundEngine(RoundEngine):
                     beta_loc, axis, axis=1, tiled=True)
             metrics["arrived"] = self._scatter_tasks(arr_parts)
             metrics["staleness"] = self._scatter_tasks(stl_parts)
+            if fault_loc is not None:
+                metrics["rejected"] = self._scatter_tasks(rej_parts)
+                metrics["survived"] = self._scatter_tasks(srv_parts)
             new_state = ExperimentState(
                 params=tuple(new_params), method_state=tuple(new_mstate),
                 key=new_key, round=state.round + 1, losses_ns=losses_loc,

@@ -71,7 +71,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core import convergence, methods, sampling, sharding, stale
+from repro.core import (convergence, faults, methods, sampling, sharding,
+                        stale)
 
 
 @dataclasses.dataclass
@@ -108,6 +109,17 @@ class ServerConfig:
     seed: int = 0
     jit_round: bool = True            # fused whole-round jit (False = legacy)
     fuse_tasks: bool = True           # vmapped task axis (False = per-task loop)
+    # fault axis (core.faults): fault model name or instance + constructor
+    # kwargs; "none" keeps the engine bit-identical to the fault-free
+    # build.  ``fault_kwargs`` accepts a dict or a tuple of (key, value)
+    # pairs — the tuple form keeps sweep cache keys hashable
+    # (fl.sweep._cached_engine sorts the server kwargs into a tuple).
+    faults: Any = "none"
+    fault_kwargs: Any = None
+    # server-side update guard: mask crashed/non-finite updates out of the
+    # aggregation and re-normalize coefficients over the survivors
+    # (False = the unguarded server — fault worlds hit it raw)
+    fault_guard: bool = True
 
 
 class ExperimentState(NamedTuple):
@@ -396,6 +408,24 @@ class RoundEngine:
         # map processors -> clients
         self.proc_client = self.world.proc_client             # [V]
         self.strategy = methods.make(cfg.method, cfg)
+        # fault axis (core.faults): the configured fault model plus the
+        # server-side update guard switch.  ``self.faulty`` is a STATIC
+        # flag — every injection/guard code path below is Python-gated on
+        # it, so faults="none" builds closures byte-identical to the
+        # fault-free engine (the bit-identity contract test_faults pins)
+        fm = getattr(cfg, "faults", "none")
+        if fm is None or fm == "none":
+            fm = faults.NoFault()
+        elif isinstance(fm, str):
+            fkw = getattr(cfg, "fault_kwargs", None) or ()
+            fm = faults.make_fault(fm, **dict(fkw))
+        self.fault_model = fm
+        self.faulty = not fm.fault_free
+        self.fault_guard = bool(getattr(cfg, "fault_guard", True))
+        if self.faulty and not getattr(cfg, "jit_round", True):
+            raise ValueError(
+                "fault worlds require jit_round=True — the legacy eager "
+                "facade path bypasses the traced fault injection")
         # fixed cohort size for methods where only sampled clients train
         # (sized over REAL clients: a padded world keeps the same cohort).
         # ``cohort_size`` overrides for world grids, where the capacity
@@ -654,11 +684,15 @@ class RoundEngine:
         static_view = (self.d[:, s], self._d_v[:, s], self._B_v,
                        self.proc_client, self.world.client_mask)
         local_all = local_all or self._local_all[s]
+        fault_model, guard_on = self.fault_model, self.fault_guard
 
         def round_fn(params, state, train_in, p_col, act_v,
-                     data, lr, round_idx, view=None):
+                     data, lr, round_idx, view=None, fault=None):
             """``train_in`` is the task's PRNG key (cohort methods train
-            here) or the precomputed all-client G (needs-all methods)."""
+            here) or the precomputed all-client G (needs-all methods).
+            ``fault`` (optional trailing arg, fault worlds only) carries
+            the task's traced (crash, poison) [N] columns — None keeps
+            the fault-free trace byte-identical."""
             d_col, d_v_col, B_v, proc, cmask = (static_view if view is None
                                                 else view)
             coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
@@ -681,9 +715,29 @@ class RoundEngine:
                 corr = strat.local_correction(state, idx)
                 G, _ = local_all(params, keys, data_c, lr, corr)
                 coeff, act = coeff_client[idx], act_client[idx]
-            return strat.aggregate(
+            fault_counts = None
+            if fault is not None:
+                crash_r, poison_r = fault[0][idx], fault[1][idx]
+                cm_r = cmask[idx]
+                G = faults.inject(G, act, crash_r, poison_r,
+                                  fault_model.poison_value)
+                if guard_on:
+                    G, coeff, act, rejected, survived = faults.guard(
+                        G, coeff, act, crash_r, cm_r)
+                else:
+                    # unguarded server: the fault world hits the
+                    # aggregation raw (crashed rows silently bias it
+                    # toward zero; poisoned rows NaN the model)
+                    rejected = jnp.float32(0.0)
+                    survived = convergence.ordered_sum(act * cm_r)
+                fault_counts = (rejected, survived)
+            new_w, new_st, extras = strat.aggregate(
                 params, state, G, coeff, act, idx,
                 d_col=d_col, lr=lr, round_idx=round_idx, mask=cmask)
+            if fault_counts is not None:
+                extras = dict(extras)
+                extras["rejected"], extras["survived"] = fault_counts
+            return new_w, new_st, extras
 
         return round_fn
 
@@ -777,21 +831,31 @@ class RoundEngine:
                                        local_all=self._local_all[grp[0]])
 
         def round_g(params_g, state_g, train_in_g, p_g, act_g,
-                    data_g, lr, round_idx, view_g):
+                    data_g, lr, round_idx, view_g, fault_g=None):
             if len(grp) == 1:
                 sq = lambda t: jax.tree.map(lambda a: a[0], t)
                 d_col, d_v_col, B_v, proc, cmask = view_g
+                f1 = (None if fault_g is None
+                      else (fault_g[0][0], fault_g[1][0]))
                 out = round_one(sq(params_g), sq(state_g), sq(train_in_g),
                                 p_g[0], act_g[0], sq(data_g),
                                 lr, round_idx,
-                                (d_col[0], d_v_col[0], B_v, proc, cmask))
+                                (d_col[0], d_v_col[0], B_v, proc, cmask),
+                                f1)
                 return jax.tree.map(lambda a: a[None], out)   # 3-tuple
+            if fault_g is None:
+                return jax.vmap(
+                    round_one,
+                    in_axes=(0, 0, 0, 0, 0, 0, None, None,
+                             (0, 0, None, None, None)))(
+                    params_g, state_g, train_in_g, p_g, act_g,
+                    data_g, lr, round_idx, view_g)
             return jax.vmap(
                 round_one,
                 in_axes=(0, 0, 0, 0, 0, 0, None, None,
-                         (0, 0, None, None, None)))(
+                         (0, 0, None, None, None), (0, 0)))(
                 params_g, state_g, train_in_g, p_g, act_g,
-                data_g, lr, round_idx, view_g)
+                data_g, lr, round_idx, view_g, fault_g)
 
         return round_g
 
@@ -952,9 +1016,10 @@ class RoundEngine:
         cohort_loc = min(cohort, n_loc)
         local_all = self._local_all[grp[0]]
         axis = sharding.CLIENT_AXIS
+        fault_model, guard_on = self.fault_model, self.fault_guard
 
         def round_one(params, state, train_in, p_col, act_v, data,
-                      lr, round_idx, view, off):
+                      lr, round_idx, view, off, fault=None):
             d_col, d_v_col, B_v, proc, cmask = view    # replicated [N]/[V]
             coeffs_v = strat.coefficients(d_v_col, B_v, p_col, act_v)
             coeff_client = jnp.zeros((N,)).at[proc].add(coeffs_v)
@@ -980,27 +1045,56 @@ class RoundEngine:
                 G, _ = local_all(params, slot_keys, data_c, lr, corr)
                 coeff = coeff_loc[idx] * in_cohort[idx]
                 act = in_cohort[idx]
-            return strat.aggregate(
+            fault_counts = None
+            if fault is not None:
+                # shard-local (crash, poison) columns, drawn offset-keyed
+                # so they reproduce the single-device fault world
+                crash_r, poison_r = fault[0][idx], fault[1][idx]
+                cm_r = cmask_loc[idx]
+                G = faults.inject(G, act, crash_r, poison_r,
+                                  fault_model.poison_value)
+                if guard_on:
+                    G, coeff, act, rejected, survived = faults.guard(
+                        G, coeff, act, crash_r, cm_r, axis_name=axis)
+                else:
+                    rejected = jnp.float32(0.0)
+                    survived = jax.lax.psum(
+                        convergence.ordered_sum(act * cm_r), axis)
+                fault_counts = (rejected, survived)
+            new_w, new_st, extras = strat.aggregate(
                 params, state, G, coeff, act, idx,
                 d_col=d_loc, lr=lr, round_idx=round_idx, mask=cmask_loc,
                 axis_name=axis)
+            if fault_counts is not None:
+                extras = dict(extras)
+                extras["rejected"], extras["survived"] = fault_counts
+            return new_w, new_st, extras
 
         def round_g(params_g, state_g, train_in_g, p_g, act_g,
-                    data_g, lr, round_idx, view_g, off):
+                    data_g, lr, round_idx, view_g, off, fault_g=None):
             if len(grp) == 1:
                 sq = lambda t: jax.tree.map(lambda a: a[0], t)
                 d_col, d_v_col, B_v, proc, cmask = view_g
+                f1 = (None if fault_g is None
+                      else (fault_g[0][0], fault_g[1][0]))
                 out = round_one(sq(params_g), sq(state_g), sq(train_in_g),
                                 p_g[0], act_g[0], sq(data_g), lr, round_idx,
                                 (d_col[0], d_v_col[0], B_v, proc, cmask),
-                                off)
+                                off, f1)
                 return jax.tree.map(lambda a: a[None], out)
+            if fault_g is None:
+                return jax.vmap(
+                    round_one,
+                    in_axes=(0, 0, 0, 0, 0, 0, None, None,
+                             (0, 0, None, None, None), None))(
+                    params_g, state_g, train_in_g, p_g, act_g,
+                    data_g, lr, round_idx, view_g, off)
             return jax.vmap(
                 round_one,
                 in_axes=(0, 0, 0, 0, 0, 0, None, None,
-                         (0, 0, None, None, None), None))(
+                         (0, 0, None, None, None), None, (0, 0)))(
                 params_g, state_g, train_in_g, p_g, act_g,
-                data_g, lr, round_idx, view_g, off)
+                data_g, lr, round_idx, view_g, off, fault_g)
 
         return round_g
 
@@ -1072,17 +1166,33 @@ class RoundEngine:
             metrics = self.sampling_metrics(p, active, losses_ns)
 
             # ---- 4) per-group round on local blocks ---------------------
+            fault_loc = None
+            if self.faulty:
+                # shard-local fault columns: offset-keyed draws reproduce
+                # the single-device fault world block-for-block
+                fault_loc = self._fault_cols(state.key, state.round,
+                                             n=n_loc, offset=off)
             new_params, new_mstate, beta_parts = [], [], []
+            rej_parts, srv_parts = [], []
             for g, grp in enumerate(groups):
                 ia = np.asarray(grp)
                 train_in = (stats[g][1] if strat.needs_all_updates
                             else task_keys[ia])
                 view = (d_full[:, ia].T, d_v[:, ia].T, B_v, proc,
                         cmask_full)
-                new_w, new_st, extras = g_round[g](
-                    state.params[g], state.method_state[g], train_in,
-                    p[:, ia].T, active[:, ia].T, data[g], lr, round_f,
-                    view, off)
+                if fault_loc is None:
+                    new_w, new_st, extras = g_round[g](
+                        state.params[g], state.method_state[g], train_in,
+                        p[:, ia].T, active[:, ia].T, data[g], lr, round_f,
+                        view, off)
+                else:
+                    fg = (fault_loc[0][:, ia].T, fault_loc[1][:, ia].T)
+                    new_w, new_st, extras = g_round[g](
+                        state.params[g], state.method_state[g], train_in,
+                        p[:, ia].T, active[:, ia].T, data[g], lr, round_f,
+                        view, off, fg)
+                    rej_parts.append(extras["rejected"])
+                    srv_parts.append(extras["survived"])
                 new_params.append(new_w)
                 new_mstate.append(new_st)
                 beta_parts.append(extras.get("beta"))
@@ -1091,6 +1201,10 @@ class RoundEngine:
                                                tail_shape=(n_loc,))
                 metrics["beta"] = jax.lax.all_gather(
                     beta_loc, axis, axis=1, tiled=True)        # [S,N] repl
+            if fault_loc is not None:
+                # psum'd inside the guard -> already replicated scalars
+                metrics["rejected"] = self._scatter_tasks(rej_parts)
+                metrics["survived"] = self._scatter_tasks(srv_parts)
             new_state = ExperimentState(
                 params=tuple(new_params), method_state=tuple(new_mstate),
                 key=new_key, round=state.round + 1, losses_ns=losses_loc,
@@ -1187,6 +1301,35 @@ class RoundEngine:
             V=self.V, m_host=self.m, mask=world.client_mask)
 
     # ------------------------------------------------------------------
+    # fault axis: the traced fault world (core.faults)
+    # ------------------------------------------------------------------
+    def _fault_keys(self, key: jax.Array) -> jnp.ndarray:
+        """[S] per-task fault keys folded off the state key on the
+        dedicated FAULT_STREAM tag — disjoint from the sync split
+        schedule and the async delay stream, so drawing faults never
+        perturbs the sampling/training draws."""
+        k = jax.random.fold_in(key, faults.FAULT_STREAM)
+        return jnp.stack([jax.random.fold_in(k, s) for s in range(self.S)])
+
+    def _fault_cols(self, key: jax.Array, round_idx: Any,
+                    n: Optional[int] = None, offset: Any = 0
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(crash, poison) [n, S] columns of this round's fault world.
+        Index-keyed draws (``offset`` = the shard's global base) make the
+        columns padding- and shard-invariant, like every other per-client
+        stream."""
+        fkeys = self._fault_keys(key)
+        n = self.N if n is None else n
+        fm = self.fault_model
+        crash = jnp.stack(
+            [fm.crash_mask(fkeys[s], round_idx, n, offset=offset)
+             for s in range(self.S)], axis=1)
+        poison = jnp.stack(
+            [fm.poison_mask(fkeys[s], round_idx, n, offset=offset)
+             for s in range(self.S)], axis=1)
+        return crash, poison
+
+    # ------------------------------------------------------------------
     # the pure round transition
     # ------------------------------------------------------------------
     def round_step_fn(self, state: ExperimentState,
@@ -1260,41 +1403,75 @@ class RoundEngine:
         B_v_t = w.B[w.proc_client] if explicit else self._B_v
         proc_t = w.proc_client if explicit else self.proc_client
         cmask_t = w.client_mask if explicit else self.world.client_mask
+        fault_ns = None
+        if self.faulty:
+            fault_ns = self._fault_cols(state.key, state.round)
         if fused:
             new_params, new_mstate = [], []
             beta_parts = []
+            rej_parts, srv_parts = [], []
             for g, grp in enumerate(self.groups):
                 ia = np.asarray(grp)
                 train_in = (stats[g][1] if strat.needs_all_updates
                             else task_keys[ia])
                 view = (w.d[:, ia].T, d_v_t[:, ia].T, B_v_t, proc_t,
                         cmask_t)
-                new_w, new_st, extras = self._g_round[g](
-                    state.params[g], state.method_state[g], train_in,
-                    p[:, ia].T, active[:, ia].T, w.data[g],
-                    lr, round_f, view)
+                if fault_ns is None:
+                    new_w, new_st, extras = self._g_round[g](
+                        state.params[g], state.method_state[g], train_in,
+                        p[:, ia].T, active[:, ia].T, w.data[g],
+                        lr, round_f, view)
+                else:
+                    fg = (fault_ns[0][:, ia].T, fault_ns[1][:, ia].T)
+                    new_w, new_st, extras = self._g_round[g](
+                        state.params[g], state.method_state[g], train_in,
+                        p[:, ia].T, active[:, ia].T, w.data[g],
+                        lr, round_f, view, fg)
+                    rej_parts.append(extras["rejected"])
+                    srv_parts.append(extras["survived"])
                 new_params.append(new_w)
                 new_mstate.append(new_st)
                 beta_parts.append(extras.get("beta"))
             if beta_parts[0] is not None:
                 metrics["beta"] = self._scatter_tasks(
                     beta_parts, tail_shape=(self.N,))               # [S,N]
+            if fault_ns is not None:
+                metrics["rejected"] = self._scatter_tasks(rej_parts)
+                metrics["survived"] = self._scatter_tasks(srv_parts)
         else:
             new_params = [state.params[g] for g in range(self.n_groups)]
             new_mstate = [state.method_state[g]
                           for g in range(self.n_groups)]
             betas: List[jnp.ndarray] = []
+            rej_s: List[jnp.ndarray] = []
+            srv_s: List[jnp.ndarray] = []
             for s in range(S):
                 g, j = self.task_gs[s]
                 train_in = (stats[s][1] if strat.needs_all_updates
                             else task_keys[s])
                 view = ((w.d[:, s], d_v_t[:, s], B_v_t, proc_t, cmask_t)
                         if explicit else None)
-                new_w, new_st, extras = self._round_pure[s](
-                    self.task_params(state, s),
-                    self.task_method_state(state, s), train_in, p[:, s],
-                    active[:, s],
-                    self._task_data(w, s, explicit), lr, round_f, view)
+                if fault_ns is None:
+                    new_w, new_st, extras = self._round_pure[s](
+                        self.task_params(state, s),
+                        self.task_method_state(state, s), train_in,
+                        p[:, s], active[:, s],
+                        self._task_data(w, s, explicit), lr, round_f,
+                        view)
+                else:
+                    # the loop path needs the explicit view to hand the
+                    # fault columns positionally
+                    view = (view if view is not None
+                            else (w.d[:, s], d_v_t[:, s], B_v_t, proc_t,
+                                  cmask_t))
+                    new_w, new_st, extras = self._round_pure[s](
+                        self.task_params(state, s),
+                        self.task_method_state(state, s), train_in,
+                        p[:, s], active[:, s],
+                        self._task_data(w, s, explicit), lr, round_f,
+                        view, (fault_ns[0][:, s], fault_ns[1][:, s]))
+                    rej_s.append(extras["rejected"])
+                    srv_s.append(extras["survived"])
                 new_params[g] = jax.tree.map(
                     lambda a, v: a.at[j].set(v), new_params[g], new_w)
                 new_mstate[g] = jax.tree.map(
@@ -1303,6 +1480,9 @@ class RoundEngine:
                     betas.append(extras["beta"])
             if betas:
                 metrics["beta"] = jnp.stack(betas)                    # [S,N]
+            if fault_ns is not None:
+                metrics["rejected"] = jnp.stack(rej_s)
+                metrics["survived"] = jnp.stack(srv_s)
         new_state = ExperimentState(
             params=tuple(new_params), method_state=tuple(new_mstate),
             key=new_key, round=state.round + 1, losses_ns=losses_ns,

@@ -1,0 +1,292 @@
+"""Pluggable traced client-fault models + the server-side update guard.
+
+A fault model answers two traced questions each round: "which clients
+CRASH mid-round?" (their update never reaches the server) and "which
+clients' updates arrive CORRUPTED?" (NaN/Inf-poisoned payloads — the
+radioactive gradient a flaky accelerator or a bit-flipped upload
+produces).  Both answers are [n] 0/1 float vectors, drawn inside the
+traced round so fault worlds run under jit/scan/vmap/shard_map exactly
+like the fault-free engine.
+
+Draw contract (mirrors ``core.delay`` / ``sampling.index_keys``):
+randomized models key each client's draw by (key, GLOBAL client index)
+via ``fold_in``, so
+
+  * padded worlds draw bit-identical faults for their real clients
+    (prefix invariance), and
+  * a client-sharded engine reproduces the single-device draws by
+    passing its shard's global ``offset`` (shardability by construction).
+
+The engine folds the fault key off the state key on the dedicated
+``FAULT_STREAM`` tag — a stream disjoint from the sync split schedule
+(``keys = split(state.key, 2 + S)``) and from the async delay stream —
+so drawing faults never perturbs the sampling/training draws.  With
+``faults="none"`` no fault code is traced at all (the engine gates every
+injection/guard op on a Python flag): the fault-free engine is
+bit-identical to the pre-fault build, pinned like async(delay=0)==sync.
+
+``guard``/``inject``/``finite_rows`` are the server-side defense shared
+by the sync round, the async window and their client-sharded bodies:
+``inject`` applies the fault world to an update batch (the attack),
+``guard`` masks crashed/non-finite rows out of the aggregation and
+re-normalizes the surviving coefficients to preserve the aggregate
+weight (the defense).  A guarded client simply never refreshes its
+stale store (``act`` is zeroed), so for the StaleVR family the paper's
+Eq. 18 machinery substitutes the last good update — graceful
+degradation falls out of the existing math.
+
+Registry: ``@register_fault("name")`` / ``make_fault("name", **kw)`` —
+the string surface ``ServerConfig.faults`` and the sweep harness's
+fault-sensitivity grids expose.
+"""
+from __future__ import annotations
+
+from typing import Any, ClassVar, Dict, List, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convergence, sampling
+
+#: fold_in tag separating the fault stream from the sync key schedule
+#: and the async delay stream (``core.async_engine._DELAY_STREAM``,
+#: 0x5A11) — disjoint by construction, so ``faults="none"`` keeps every
+#: sampling/training draw untouched.
+FAULT_STREAM = 0xFA17
+
+
+class FaultModel:
+    """Base fault model: a fault-free world (nobody crashes, nothing is
+    poisoned).  ``fault_free`` is the STATIC switch the engine gates its
+    injection/guard trace on: True means the round closures compile
+    byte-identical to the pre-fault engine."""
+
+    name: ClassVar[str] = "?"
+    #: static flag: True == the engine skips fault tracing entirely
+    fault_free: ClassVar[bool] = False
+    #: the scalar written into poisoned update rows (NaN by default;
+    #: ``corrupt(mode="inf")`` switches to +inf)
+    poison_value: float = float("nan")
+
+    def crash_mask(self, key: jax.Array, round_idx: Any, n: int,
+                   offset: Any = 0) -> jnp.ndarray:
+        """[n] 0/1 f32: 1 == clients [offset, offset + n) crash this
+        round (their update is lost in flight)."""
+        return jnp.zeros((n,), jnp.float32)
+
+    def poison_mask(self, key: jax.Array, round_idx: Any, n: int,
+                    offset: Any = 0) -> jnp.ndarray:
+        """[n] 0/1 f32: 1 == the client's update arrives non-finite."""
+        return jnp.zeros((n,), jnp.float32)
+
+    def __repr__(self) -> str:  # sweep labels / bench derived strings
+        return f"{type(self).__name__}()"
+
+
+_REGISTRY: Dict[str, Type[FaultModel]] = {}
+
+
+def register_fault(name: str):
+    def deco(cls: Type[FaultModel]) -> Type[FaultModel]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_fault_class(name: str) -> Type[FaultModel]:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown fault model {name!r}; available: "
+                       f"{', '.join(available_fault_models())}")
+    return _REGISTRY[name]
+
+
+def make_fault(name: str, **kwargs: Any) -> FaultModel:
+    return get_fault_class(name)(**kwargs)
+
+
+def available_fault_models() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+@register_fault("none")
+class NoFault(FaultModel):
+    """The fault-free world: the engine traces no fault ops at all."""
+    fault_free = True
+
+
+@register_fault("dropout")
+class DropoutFault(FaultModel):
+    """Index-keyed Bernoulli client crash: each round every client
+    independently crashes mid-round with probability ``rate`` — its
+    update never arrives."""
+
+    def __init__(self, rate: float = 0.1):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"dropout rate={rate} must be in [0, 1]")
+        self.rate = float(rate)
+
+    def crash_mask(self, key, round_idx, n, offset=0):
+        u = sampling.index_uniform(key, n, offset=offset)
+        return (u < self.rate).astype(jnp.float32)
+
+    def __repr__(self) -> str:
+        return f"DropoutFault(rate={self.rate})"
+
+
+@register_fault("corrupt")
+class CorruptFault(FaultModel):
+    """Index-keyed Bernoulli payload corruption: each round every
+    client's update is independently NaN/Inf-poisoned with probability
+    ``rate`` (``mode`` in {"nan", "inf"})."""
+
+    def __init__(self, rate: float = 0.1, mode: str = "nan"):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"corrupt rate={rate} must be in [0, 1]")
+        if mode not in ("nan", "inf"):
+            raise ValueError(f"corrupt mode={mode!r} must be 'nan' or "
+                             f"'inf'")
+        self.rate = float(rate)
+        self.mode = mode
+        self.poison_value = float("nan") if mode == "nan" else float("inf")
+
+    def poison_mask(self, key, round_idx, n, offset=0):
+        u = sampling.index_uniform(key, n, offset=offset)
+        return (u < self.rate).astype(jnp.float32)
+
+    def __repr__(self) -> str:
+        return f"CorruptFault(rate={self.rate}, mode={self.mode!r})"
+
+
+@register_fault("flaky")
+class FlakyFault(FaultModel):
+    """Trace-driven failures: a [T, N] 0/1 table of per-(round, client)
+    crashes, cycled along the round clock (row ``round_idx % T``) —
+    replay of measured fleet outage traces.  An optional second table
+    drives corruption the same way."""
+
+    def __init__(self, trace: Any, poison_trace: Optional[Any] = None):
+        self._crash = self._check(trace, "trace")
+        self._poison = (self._check(poison_trace, "poison_trace")
+                        if poison_trace is not None else None)
+        if (self._poison is not None
+                and self._poison.shape[1] != self._crash.shape[1]):
+            raise ValueError(
+                f"poison_trace is [T, N={self._poison.shape[1]}] but "
+                f"trace is [T, N={self._crash.shape[1]}]")
+
+    @staticmethod
+    def _check(trace: Any, what: str) -> np.ndarray:
+        tbl = np.asarray(trace, np.float32)
+        if tbl.ndim != 2:
+            raise ValueError(f"{what} must be [T, N]; got shape "
+                             f"{tbl.shape}")
+        if np.any((tbl != 0.0) & (tbl != 1.0)):
+            raise ValueError(f"{what} must be 0/1")
+        return tbl
+
+    @staticmethod
+    def _row(tbl: np.ndarray, round_idx, n, offset) -> jnp.ndarray:
+        t = jnp.asarray(tbl)
+        row = t[jnp.mod(jnp.asarray(round_idx, jnp.int32), t.shape[0])]
+        return jax.lax.dynamic_slice_in_dim(
+            row, jnp.asarray(offset, jnp.int32), n).astype(jnp.float32)
+
+    def crash_mask(self, key, round_idx, n, offset=0):
+        return self._row(self._crash, round_idx, n, offset)
+
+    def poison_mask(self, key, round_idx, n, offset=0):
+        if self._poison is None:
+            return jnp.zeros((n,), jnp.float32)
+        return self._row(self._poison, round_idx, n, offset)
+
+    def __repr__(self) -> str:
+        return (f"FlakyFault(T={self._crash.shape[0]}, "
+                f"N={self._crash.shape[1]})")
+
+
+# ---------------------------------------------------------------------------
+# injection + the server-side update guard (shared by sync round, async
+# window, and their client-sharded bodies)
+# ---------------------------------------------------------------------------
+
+
+def finite_rows(G: Any) -> jnp.ndarray:
+    """[n] 0/1 f32: 1 where EVERY leaf element of client row i is
+    finite — the guard's non-finite detector over an [n, ...] update
+    pytree."""
+    ok = None
+    for a in jax.tree.leaves(G):
+        f = jnp.all(jnp.isfinite(a.reshape((a.shape[0], -1))), axis=1)
+        ok = f if ok is None else (ok & f)
+    return ok.astype(jnp.float32)
+
+
+def inject(G: Any, act: jnp.ndarray, crash: jnp.ndarray,
+           poison: jnp.ndarray, poison_value: float) -> Any:
+    """Apply the fault world to an [n, ...] update batch: poisoned
+    active rows are overwritten with ``poison_value`` and crashed active
+    rows are zeroed (the update never arrived).  Crash wins over poison
+    — a crashed client sends nothing, corrupt or not.  Inactive rows are
+    untouched (there is no update to corrupt)."""
+    poison_sel = (poison * act) > 0
+    crash_sel = (crash * act) > 0
+
+    def one(a):
+        shape = (a.shape[0],) + (1,) * (a.ndim - 1)
+        a = jnp.where(poison_sel.reshape(shape),
+                      jnp.asarray(poison_value, a.dtype), a)
+        return jnp.where(crash_sel.reshape(shape),
+                         jnp.zeros((), a.dtype), a)
+
+    return jax.tree.map(one, G)
+
+
+def guard(G: Any, coeff: jnp.ndarray, act: jnp.ndarray,
+          crash: jnp.ndarray, mask: jnp.ndarray,
+          axis_name: Optional[str] = None
+          ) -> Tuple[Any, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                     jnp.ndarray]:
+    """The server-side update guard: detect crashed/non-finite rows,
+    mask them out of the aggregation, and re-normalize the surviving
+    coefficients.
+
+    Returns ``(G', coeff', act', rejected, survived)``:
+
+      * bad rows (crashed, or any non-finite leaf element) get
+        ``coeff' = act' = 0`` and their ``G'`` rows zeroed (so NaN/Inf
+        payloads cannot leak through 0-coefficient products — IEEE
+        ``0 * NaN`` is NaN);
+      * surviving coefficients are rescaled so the total coefficient
+        mass is preserved on the surviving support (when NOTHING is
+        guarded the rescale is exactly 1.0 — x/x == 1 for finite x —
+        and the guard is a numerical no-op);
+      * ``rejected``/``survived`` count real (``mask``) active rows on
+        each side of the guard — exact 0/1 integer sums in f32, so the
+        sharded psum-of-partials reproduces them bitwise.
+
+    ``axis_name`` (client-sharded bodies) psums the coefficient masses
+    and the counters across shards, so every shard rescales by the
+    GLOBAL surviving mass."""
+    ok = finite_rows(G) * (1.0 - crash)
+    good_act = act * ok
+    bad = act * (1.0 - ok)
+    w_tot = convergence.ordered_sum(coeff * act)
+    w_srv = convergence.ordered_sum(coeff * good_act)
+    rejected = convergence.ordered_sum(bad * mask)
+    survived = convergence.ordered_sum(good_act * mask)
+    if axis_name is not None:
+        w_tot = jax.lax.psum(w_tot, axis_name)
+        w_srv = jax.lax.psum(w_srv, axis_name)
+        rejected = jax.lax.psum(rejected, axis_name)
+        survived = jax.lax.psum(survived, axis_name)
+    scale = jnp.where(w_srv > 0, w_tot / jnp.where(w_srv > 0, w_srv, 1.0),
+                      0.0)
+    coeff_g = coeff * good_act * scale
+    Gz = jax.tree.map(
+        lambda a: jnp.where(
+            (ok > 0).reshape((a.shape[0],) + (1,) * (a.ndim - 1)),
+            a, jnp.zeros((), a.dtype)),
+        G)
+    return Gz, coeff_g, good_act, rejected, survived

@@ -178,6 +178,15 @@ class MethodStrategy:
         CLIENT COUNT must divide by sum(mask) instead of N.  Default:
         Eq. 3 unbiased aggregation.
 
+        GUARD CONTRACT (fault worlds, ``core.faults.guard``): a client
+        whose update crashed or arrived non-finite reaches ``aggregate``
+        with ``coeff = act = 0`` and its G row zeroed — structurally a
+        padding client, so every rule already ignores it; the surviving
+        coefficients arrive pre-rescaled to preserve the aggregate mass.
+        Rules must therefore never read G rows whose act is 0, and
+        stale-store refreshes key on ``act`` (a guarded client keeps its
+        last good h — the Eq. 18 degradation path).
+
         ``axis_name`` (client-sharded rounds only): every client-indexed
         argument then covers ONE SHARD's block — state client-axis leaves
         and d_col/mask the local [N/n_shards] rows, G/coeff/act/idx the

@@ -63,7 +63,15 @@ class UniformSamplingMixin:
 class StaleStoreMixin:
     """Per-(client, model) stale update store h (Sec. 5): refresh-on-active
     bookkeeping plus the Eq. 20 beta measurement, shared by the stale
-    variance-reduced family, MIFA, and the distributed stale step."""
+    variance-reduced family, MIFA, and the distributed stale step.
+
+    Fault worlds get graceful degradation for free from this refresh
+    contract: the server guard zeroes a crashed/poisoned client's ``act``
+    before aggregation, so ``refresh`` keeps that client's LAST GOOD h
+    and the Eq. 18 stale mean keeps contributing it — the paper's
+    staleness machinery doubling as the fault-recovery path (this is why
+    the stale family's accuracy-vs-dropout-rate curves degrade more
+    gently than lvr/random's)."""
 
     uses_stale_store = True
 

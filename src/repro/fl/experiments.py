@@ -334,7 +334,15 @@ class ExperimentSpec:
     ``{"delay": "geometric", "delay_kwargs": {"q": 0.5, "max_lag": 4},
     "window_size": 2}``.  ``rounds`` then counts aggregation WINDOWS; the
     zero-delay default is bit-identical to the synchronous engine, so the
-    axis composes with seed fleets and eval cadences unchanged."""
+    axis composes with seed fleets and eval cadences unchanged.
+
+    The FAULT AXIS rides in ``server``: ``{"faults": "dropout",
+    "fault_kwargs": (("rate", 0.3),), "fault_guard": True}`` selects a
+    ``core.faults`` world (kwargs as a tuple of pairs — ``server`` must
+    stay hashable for the sweep's engine cache).  ``faults="none"``
+    (default) traces no fault ops at all and is bit-identical to the
+    fault-free engine; ``fl.sweep.fault_sensitivity_spec`` builds
+    failure-rate ladders over this axis."""
     method: str = "lvr"
     n_models: int = 3
     n_clients: int = 120

@@ -242,6 +242,71 @@ class SweepResult:
         return rows
 
 
+def fault_sensitivity_spec(methods: Sequence[str],
+                           rates: Sequence[float],
+                           settings: Sequence[SweepSetting],
+                           seeds: Sequence[int] = (0,),
+                           rounds: int = 20,
+                           faults: str = "dropout",
+                           guard: bool = True,
+                           server: Optional[Dict[str, Any]] = None
+                           ) -> SweepSpec:
+    """The FAULT AXIS of the grid: every method replicated across a
+    failure-rate ladder of ``faults`` worlds (``dropout`` client crashes
+    by default; ``corrupt`` NaN-poisoned payloads likewise take a
+    ``rate``), each cell labeled ``"{method}@{rate}"``.  ``rate=0``
+    cells run the fault model at probability zero — the guard's exact
+    no-op — so the ladder's leftmost point IS the fault-free baseline.
+
+    ``run_sweep`` on the returned spec yields the per-method
+    accuracy-vs-failure-rate curves (``fault_curves`` shapes them) with
+    the guard's ``rejected``/``survived`` counters in every cell's
+    metrics; stale-store methods (stalevr/fedvarp/mifa/...) should
+    visibly degrade more gracefully than lvr/random — their Eq. 18
+    machinery substitutes a guarded client's last good update."""
+    runs = [MethodRun(method=m, label=f"{m}@{r}",
+                      server={"faults": faults,
+                              "fault_kwargs": (("rate", float(r)),),
+                              "fault_guard": guard})
+            for m in methods for r in rates]
+    return SweepSpec(settings=settings, runs=runs, seeds=seeds,
+                     rounds=rounds, server=dict(server or {}))
+
+
+def fault_curves(result: SweepResult, setting: Optional[str] = None
+                 ) -> Dict[str, Dict[str, np.ndarray]]:
+    """Shape a ``fault_sensitivity_spec`` result into per-method curves:
+    ``{method: {rates, acc, ci95, rejected, survived}}``, each array
+    ordered by failure rate.  ``rejected``/``survived`` are the guard
+    counters summed over rounds/tasks and averaged over seeds — the
+    actual masked-client mass behind each accuracy point."""
+    if setting is None:
+        names = {s for (s, _) in result.cells}
+        if len(names) != 1:
+            raise KeyError(f"pass setting= (have: {sorted(names)})")
+        setting = names.pop()
+    curves: Dict[str, Dict[str, List[float]]] = {}
+    for label in result.labels(setting):
+        method, _, rate = label.rpartition("@")
+        cell = result.cell(label, setting)
+        row = curves.setdefault(
+            method, {"rates": [], "acc": [], "ci95": [],
+                     "rejected": [], "survived": []})
+        stats = cell.stats()
+        row["rates"].append(float(rate))
+        row["acc"].append(stats["acc"])
+        row["ci95"].append(stats["ci95"])
+        for k in ("rejected", "survived"):
+            # [n_seeds, rounds, S] -> scalar: per-seed totals, seed mean
+            row[k].append(float(np.asarray(cell.metrics[k])
+                                .sum(axis=(1, 2)).mean()))
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for method, row in curves.items():
+        order = np.argsort(row["rates"])
+        out[method] = {k: np.asarray(v)[order] for k, v in row.items()}
+    return out
+
+
 def run_sweep(spec: SweepSpec) -> SweepResult:
     """Execute the grid: one world build per setting, one engine per
     compile signature, one vmapped fleet dispatch per (setting, method

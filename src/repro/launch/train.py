@@ -59,6 +59,25 @@ from repro.models import sharding as shd
 from repro.models import transformer
 
 
+def _retry_io(fn, what: str, attempts: int = 3, backoff: float = 0.05):
+    """Bounded retry-with-backoff for checkpoint I/O: a transient
+    ``OSError`` (NFS blip, ENOSPC race with a cleaner, stale handle)
+    must not kill a multi-hour run when the next attempt would succeed.
+    Exponential backoff, re-raises after the last attempt — a PERSISTENT
+    failure still surfaces.  Integrity failures are not retried: a
+    committed-but-corrupt checkpoint will not heal by waiting."""
+    for a in range(attempts):
+        try:
+            return fn()
+        except OSError as exc:
+            if a == attempts - 1:
+                raise
+            wait = backoff * (2 ** a)
+            print(f"{what}: {exc} — retrying in {wait:.2f}s "
+                  f"({a + 1}/{attempts})", flush=True)
+            time.sleep(wait)
+
+
 def _client_data(rng, cfg, n_clients: int, seq_len: int, per_client: int):
     """Non-iid token shards: each client's stream drawn from a distinct
     region of the synthetic corpus (vocab-sliced for heterogeneity)."""
@@ -216,7 +235,11 @@ def train(args) -> Dict:
     state = _init_state(strategy, params0, key, N, S)
     start_round, history = 0, []
     if args.resume:
-        restored, step = checkpoint.restore_state(args.out, state)
+        # restore_state resolves the newest checkpoint that passes the
+        # digest check (latest_valid_step): a torn/corrupt state_N from a
+        # mid-write kill is rolled past automatically
+        restored, step = _retry_io(
+            lambda: checkpoint.restore_state(args.out, state), "resume")
         if restored is not None:
             state, start_round = restored, int(step)
             print(f"resumed from {args.out} at round {start_round}",
@@ -390,19 +413,27 @@ def train(args) -> Dict:
             if (r + 1) % args.log_every == 0:
                 print(json.dumps(round_mets), flush=True)
             if args.ckpt_every and (r + 1) % args.ckpt_every == 0:
-                checkpoint.save_state(args.out, state, r + 1)
+                _retry_io(lambda: checkpoint.save_state(
+                    args.out, state, r + 1), f"ckpt round {r + 1}")
                 # flush metrics alongside the state: a killed run must not
                 # lose its pre-kill history on --resume
-                _write_history(args.out, history)
+                _retry_io(lambda: _write_history(args.out, history),
+                          "history flush")
 
-    _write_history(args.out, history)
+    _retry_io(lambda: _write_history(args.out, history), "history flush")
     return {"history": history, "models": [m["name"] for m in models],
             "state": state}
 
 
 def _write_history(out_dir: str, history: List[Dict]) -> None:
-    with open(os.path.join(out_dir, "history.json"), "w") as f:
+    """Atomic history flush: same tmp + ``os.replace`` commit as the
+    state checkpoints, so a kill mid-flush leaves the previous
+    history.json intact rather than a torn JSON document."""
+    path = os.path.join(out_dir, "history.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(history, f, indent=1)
+    os.replace(tmp, path)
 
 
 def _apply_stale(strategy, ms: Dict, w_after_corr, d_col: jnp.ndarray,

@@ -76,6 +76,7 @@ class MultiModelServer:
                       for a in self.adapters]
         self.version = version
         self.swap_count = 0
+        self.swap_rejected = 0
         self._prefill: Dict[tuple, Callable] = {}
         self._decode: Dict[int, Callable] = {}
         self._stacked: List[Any] = []
@@ -132,8 +133,33 @@ class MultiModelServer:
     def hot_swap(self, path: str, version: Optional[int] = None) -> None:
         """Re-read every slot from ``path`` and swap the param tables.
         In-flight decode picks the new table up at its next step; decode
-        caches are params-independent and are not touched."""
-        per_model = checkpoint.restore_model_params_multi(path, self.likes)
+        caches are params-independent and are not touched.
+
+        The swap is guarded: the candidate must pass the digest check
+        (``verify_integrity``), restore cleanly against the live
+        templates (tree structure / shapes / dtypes), and be entirely
+        finite.  On any failure the OLD table keeps serving,
+        ``swap_rejected`` is bumped, and ``CheckpointIntegrityError``
+        propagates — a corrupt training artifact must never reach
+        in-flight decode."""
+        try:
+            checkpoint.verify_integrity(path)
+            per_model = checkpoint.restore_model_params_multi(
+                path, self.likes)
+            for s, tree in enumerate(per_model):
+                for a in jax.tree.leaves(tree):
+                    if not bool(jnp.all(jnp.isfinite(a))):
+                        raise checkpoint.CheckpointIntegrityError(
+                            f"{path}: model {s} has non-finite params — "
+                            f"refusing to serve a poisoned table")
+        except checkpoint.CheckpointIntegrityError:
+            self.swap_rejected += 1
+            raise
+        except Exception as exc:   # structure/shape mismatch, torn npz
+            self.swap_rejected += 1
+            raise checkpoint.CheckpointIntegrityError(
+                f"{path}: restore against live templates failed "
+                f"({exc})") from exc
         self._set_params(per_model)
         if version is not None:
             self.version = version
@@ -145,13 +171,23 @@ class MultiModelServer:
         ``self.version`` landed in ``directory``, hot-swap to it.
         Returns (step, swap_seconds) when a swap happened, else None —
         the swap seconds are the serve-side stall a landing checkpoint
-        costs (the bench's swap-gap metric)."""
+        costs (the bench's swap-gap metric).
+
+        A candidate that fails validation — write still in flight
+        (manifest not yet committed), digest mismatch, non-finite params
+        — is SKIPPED, not fatal: the poll returns None and the same step
+        is retried on the next poll (a torn write resolves once the
+        trainer's ``os.replace`` commit lands).  ``swap_rejected``
+        counts the refusals."""
         step = checkpoint.latest_step(directory, prefix)
         if step is None or step <= self.version:
             return None
         t0 = time.perf_counter()
-        self.hot_swap(os.path.join(directory, f"{prefix}{step}"),
-                      version=step)
+        try:
+            self.hot_swap(os.path.join(directory, f"{prefix}{step}"),
+                          version=step)
+        except (checkpoint.CheckpointIntegrityError, OSError):
+            return None
         return step, time.perf_counter() - t0
 
     # ------------------------------------------------------------------

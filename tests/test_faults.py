@@ -1,0 +1,538 @@
+"""Fault-tolerance battery: traced fault injection, the server-side
+update guard, durable checkpoints, and serve-path graceful degradation.
+
+The contract under test, layer by layer:
+
+  * ``faults="none"`` (and every exact no-op fault world: dropout at
+    rate 0, an all-zero flaky trace WITH the guard on) is bit-identical
+    to the fault-free engine for all registered methods — sharded and
+    async engines included;
+  * dropout/corrupt worlds keep training finite with the guard on, and
+    an unguarded NaN-poison world demonstrably poisons the params (the
+    guard is doing real work);
+  * the guard's ``rejected``/``survived`` metrics are exact head-counts
+    (pinned on a deterministic flaky trace under ``full``);
+  * torn/corrupt checkpoint writes are detected by the sha256 manifest,
+    ``latest_valid_step`` rolls ``--resume`` back past them, and the
+    retry/atomic-write helpers in ``launch.train`` behave;
+  * a corrupt ``state_N`` landing mid-decode is refused by the serving
+    guard (``swap_rejected``) without touching in-flight traffic, and a
+    later good checkpoint heals the poll loop.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.core import faults, methods, sharding
+from repro.core.async_engine import AsyncConfig, AsyncRoundEngine
+from repro.core.engine import RoundEngine, ServerConfig
+from repro.fl.experiments import build_linear_setting
+
+
+@pytest.fixture(scope="module")
+def setting():
+    return build_linear_setting(n_models=2, n_clients=8, seed=0)
+
+
+def _cfg(method="lvr", **kw):
+    base = dict(method=method, local_epochs=1, seed=1, active_rate=0.4,
+                batch_size=8)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _assert_trees_equal(a, b, what):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_registry(self):
+        names = faults.available_fault_models()
+        assert {"none", "dropout", "corrupt", "flaky"} <= set(names)
+        assert isinstance(faults.make_fault("none"), faults.NoFault)
+        assert faults.make_fault("none").fault_free
+        assert not faults.make_fault("dropout", rate=0.2).fault_free
+        with pytest.raises(KeyError):
+            faults.make_fault("meteor")
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            faults.make_fault("dropout", rate=1.5)
+        with pytest.raises(ValueError):
+            faults.make_fault("corrupt", mode="fire")
+        with pytest.raises(ValueError):
+            faults.make_fault("flaky", trace=np.ones((3,)))
+        with pytest.raises(ValueError):
+            faults.make_fault("flaky", trace=np.full((2, 4), 0.5))
+
+    def test_flaky_trace_cycles_and_offsets(self):
+        tbl = np.zeros((2, 6), np.float32)
+        tbl[0, 1] = tbl[1, 4] = 1.0
+        fm = faults.make_fault("flaky", trace=tbl)
+        k = jax.random.PRNGKey(0)
+        np.testing.assert_array_equal(np.asarray(fm.crash_mask(k, 0, 6)),
+                                      tbl[0])
+        np.testing.assert_array_equal(np.asarray(fm.crash_mask(k, 3, 6)),
+                                      tbl[1])
+        # shard offset: columns [2, 6) of row 0
+        np.testing.assert_array_equal(
+            np.asarray(fm.crash_mask(k, 0, 4, offset=2)), tbl[0, 2:])
+
+    def test_dropout_prefix_invariance(self):
+        """Index-keyed draws: a wider world's first n columns reproduce
+        the narrow world's draws bitwise (padding/shard invariance)."""
+        fm = faults.make_fault("dropout", rate=0.5)
+        k = jax.random.PRNGKey(3)
+        small = np.asarray(fm.crash_mask(k, 0, 6))
+        wide = np.asarray(fm.crash_mask(k, 0, 10))
+        np.testing.assert_array_equal(wide[:6], small)
+        tail = np.asarray(fm.crash_mask(k, 0, 4, offset=6))
+        np.testing.assert_array_equal(wide[6:], tail)
+
+
+# ---------------------------------------------------------------------------
+# faults="none" == baseline bit-for-bit, every method, every engine
+# ---------------------------------------------------------------------------
+
+
+class TestNoneIsBaseline:
+    @pytest.mark.parametrize("method", methods.available_methods())
+    def test_all_methods_bitwise(self, setting, method):
+        tasks, B, avail = setting
+        base = RoundEngine(tasks, B, avail, _cfg(method))
+        none = RoundEngine(tasks, B, avail, _cfg(method, faults="none"))
+        st_b, mets_b = base.rollout(base.init_state(), 3)
+        st_n, mets_n = none.rollout(none.init_state(), 3)
+        _assert_trees_equal(st_b, st_n, f"{method}: faults=none state")
+        assert set(mets_b) == set(mets_n)
+        _assert_trees_equal(mets_b, mets_n, f"{method}: faults=none mets")
+        # the fault-free engine emits NO guard counters at all
+        assert "rejected" not in mets_b
+
+    def test_exact_noop_fault_worlds_bitwise(self, setting):
+        """dropout at rate 0 and an all-zero flaky trace run the FULL
+        injection+guard trace and still reproduce the baseline bitwise:
+        where(ok > 0, a, 0) with ok == 1 is identity and the rescale is
+        x/x == 1.0 exactly."""
+        tasks, B, avail = setting
+        N = avail.shape[0]
+        base = RoundEngine(tasks, B, avail, _cfg("stalevr"))
+        st_b, _ = base.rollout(base.init_state(), 3)
+        for kw in (dict(faults="dropout", fault_kwargs=(("rate", 0.0),)),
+                   dict(faults="flaky",
+                        fault_kwargs=(("trace",
+                                       ((0.0,) * N, (0.0,) * N)),))):
+            eng = RoundEngine(tasks, B, avail, _cfg("stalevr", **kw))
+            st_f, mets_f = eng.rollout(eng.init_state(), 3)
+            _assert_trees_equal(st_b.params, st_f.params,
+                                f"{kw['faults']}@0 params")
+            _assert_trees_equal(st_b.method_state, st_f.method_state,
+                                f"{kw['faults']}@0 method state")
+            assert float(np.asarray(mets_f["rejected"]).sum()) == 0.0
+
+    @pytest.mark.parametrize("method", methods.available_methods())
+    def test_sharded_none_bitwise(self, setting, method):
+        if not type(methods.make(method)).shardable:
+            pytest.skip(f"{method} is not shardable")
+        tasks, B, avail = setting
+        base = RoundEngine(tasks, B, avail, _cfg(method))
+        sh = RoundEngine(tasks, B, avail, _cfg(method, faults="none"),
+                         mesh=sharding.client_mesh(1))
+        st_b, _ = base.rollout(base.init_state(), 2)
+        st_s, _ = sh.rollout(sh.init_state(), 2)
+        _assert_trees_equal(st_b.params, st_s.params,
+                            f"{method}: sharded none params")
+        _assert_trees_equal(st_b.method_state, st_s.method_state,
+                            f"{method}: sharded none method state")
+
+    @pytest.mark.parametrize("method", methods.async_methods())
+    def test_async_none_bitwise(self, setting, method):
+        tasks, B, avail = setting
+        base = RoundEngine(tasks, B, avail, _cfg(method))
+        asyn = AsyncRoundEngine(tasks, B, avail,
+                                _cfg(method, faults="none"))  # delay zero
+        st_b, _ = base.rollout(base.init_state(), 3)
+        st_a, _ = asyn.rollout(asyn.init_state(), 3)
+        _assert_trees_equal(st_b.params, st_a.params,
+                            f"{method}: async none params")
+        _assert_trees_equal(st_b.method_state, st_a.method_state,
+                            f"{method}: async none method state")
+
+
+# ---------------------------------------------------------------------------
+# fault worlds: guarded training survives, unguarded poison spreads
+# ---------------------------------------------------------------------------
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(a))) for a in jax.tree.leaves(tree))
+
+
+class TestFaultWorlds:
+    @pytest.mark.parametrize("method", ["lvr", "stalevr", "fedvarp",
+                                        "scaffold", "random"])
+    @pytest.mark.parametrize("world", [
+        dict(faults="dropout", fault_kwargs=(("rate", 0.3),)),
+        dict(faults="corrupt", fault_kwargs=(("rate", 0.3),)),
+    ])
+    def test_guarded_training_stays_finite(self, setting, method, world):
+        tasks, B, avail = setting
+        eng = RoundEngine(tasks, B, avail, _cfg(method, **world))
+        state, mets = eng.rollout(eng.init_state(), 6)
+        assert _finite(state.params), f"{method}/{world['faults']}"
+        assert _finite(state.method_state)
+        rej = np.asarray(mets["rejected"])
+        srv = np.asarray(mets["survived"])
+        assert rej.shape == srv.shape == (6, eng.S)
+        assert rej.sum() > 0, "a 30% fault world rejected nobody"
+        assert np.all(np.isfinite(np.asarray(eng.evaluate(state))))
+
+    def test_unguarded_nan_poison_spreads(self, setting):
+        """The control experiment: guard OFF, the same corrupt world
+        demonstrably poisons the params — the guard is load-bearing."""
+        tasks, B, avail = setting
+        eng = RoundEngine(tasks, B, avail,
+                          _cfg("lvr", faults="corrupt",
+                               fault_kwargs=(("rate", 0.3),),
+                               fault_guard=False))
+        state, mets = eng.rollout(eng.init_state(), 4)
+        assert not _finite(state.params), \
+            "NaN-poisoned updates did not reach the unguarded params"
+        assert float(np.asarray(mets["rejected"]).sum()) == 0.0
+
+    def test_counters_pinned_on_flaky_trace_under_full(self, setting):
+        """Deterministic head-count: under ``full`` every available
+        client is active, so a flaky trace's round-0 crash row rejects
+        exactly its available victims and round 1 rejects nobody."""
+        tasks, B, avail = setting
+        N = avail.shape[0]
+        tbl = np.zeros((2, N), np.float32)
+        tbl[0, :3] = 1.0                       # clients 0..2 crash round 0
+        eng = RoundEngine(tasks, B, avail,
+                          _cfg("full", faults="flaky",
+                               fault_kwargs=(("trace",
+                                              tuple(map(tuple, tbl))),)))
+        _, mets = eng.rollout(eng.init_state(), 2)
+        rej = np.asarray(mets["rejected"])
+        srv = np.asarray(mets["survived"])
+        av = np.asarray(avail, np.float32)
+        np.testing.assert_array_equal(rej[0], (av[:3] > 0).sum(axis=0))
+        np.testing.assert_array_equal(rej[1], np.zeros(eng.S))
+        np.testing.assert_array_equal(
+            srv[0], (av > 0).sum(axis=0) - rej[0])
+        np.testing.assert_array_equal(srv[1], (av > 0).sum(axis=0))
+
+    def test_sharded_dropout_matches_single_device(self, setting):
+        """The guard's psum'd coefficient masses and counters reproduce
+        the single-device fault world bitwise over a 1-shard mesh (the
+        collective layout; the 8-shard battery rides the CI job)."""
+        tasks, B, avail = setting
+        kw = dict(faults="dropout", fault_kwargs=(("rate", 0.4),))
+        ref = RoundEngine(tasks, B, avail, _cfg("stalevr", **kw))
+        sh = RoundEngine(tasks, B, avail, _cfg("stalevr", **kw),
+                         mesh=sharding.client_mesh(1))
+        st_r, mets_r = ref.rollout(ref.init_state(), 3)
+        st_s, mets_s = sh.rollout(sh.init_state(), 3)
+        _assert_trees_equal(st_r.params, st_s.params, "sharded params")
+        _assert_trees_equal(st_r.method_state, st_s.method_state,
+                            "sharded method state")
+        for k in ("rejected", "survived"):
+            np.testing.assert_array_equal(np.asarray(mets_r[k]),
+                                          np.asarray(mets_s[k]), k)
+
+    def test_async_buffered_dropout_guarded(self, setting):
+        """Faults strike landed updates at EXTRACT: a buffered engine
+        under dropout keeps finite params and counts rejections."""
+        tasks, B, avail = setting
+        eng = AsyncRoundEngine(
+            tasks, B, avail,
+            _cfg("fedvarp", faults="dropout",
+                 fault_kwargs=(("rate", 0.4),)),
+            AsyncConfig(delay="deterministic", delay_kwargs={"lag": 1}))
+        state, mets = eng.rollout(eng.init_state(), 5)
+        assert _finite(state.params)
+        assert float(np.asarray(mets["rejected"]).sum()) > 0
+        assert float(np.asarray(mets["arrived"]).sum()) > 0
+
+    def test_seed_fleet_under_faults(self, setting):
+        tasks, B, avail = setting
+        eng = RoundEngine(tasks, B, avail,
+                          _cfg("lvr", faults="dropout",
+                               fault_kwargs=(("rate", 0.3),)))
+        states, mets, accs = eng.run_seeds((0, 1, 2), 3)
+        assert np.asarray(mets["rejected"]).shape == (3, 3, eng.S)
+        assert _finite(states.params)
+
+    def test_faulty_requires_jit(self, setting):
+        tasks, B, avail = setting
+        with pytest.raises(ValueError, match="jit_round"):
+            RoundEngine(tasks, B, avail,
+                        _cfg("lvr", faults="dropout", jit_round=False))
+
+
+# ---------------------------------------------------------------------------
+# durable checkpoints: sha256 manifests, torn-write rollback
+# ---------------------------------------------------------------------------
+
+
+class TestDurableCheckpoint:
+    def _tree(self):
+        return {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((3,))}
+
+    def test_save_verifies_and_restores(self, tmp_path):
+        p = os.path.join(str(tmp_path), "ckpt_1")
+        checkpoint.save(p, self._tree(), step=1)
+        man = checkpoint.verify_integrity(p)
+        assert "sha256" in man
+        out = checkpoint.restore(p, self._tree())
+        _assert_trees_equal(out, self._tree(), "round trip")
+        assert not os.path.exists(p + ".npz.tmp")
+        assert not os.path.exists(p + ".json.tmp")
+
+    def test_torn_write_rolls_back_to_latest_valid(self, tmp_path):
+        d = str(tmp_path)
+        for step in (1, 2, 3):
+            checkpoint.save(os.path.join(d, f"ckpt_{step}"),
+                            jax.tree.map(lambda a: a + step, self._tree()),
+                            step=step)
+        with open(os.path.join(d, "ckpt_3.npz"), "r+b") as f:
+            f.truncate(10)                      # the torn write
+        assert checkpoint.latest_step(d) == 3   # the cheap probe still bites
+        assert not checkpoint.checkpoint_valid(os.path.join(d, "ckpt_3"))
+        assert checkpoint.latest_valid_step(d) == 2
+        with pytest.raises(checkpoint.CheckpointIntegrityError,
+                           match="digest"):
+            checkpoint.restore(os.path.join(d, "ckpt_3"), self._tree())
+        out = checkpoint.restore(os.path.join(d, "ckpt_2"), self._tree())
+        _assert_trees_equal(out, jax.tree.map(lambda a: a + 2, self._tree()),
+                            "rollback target")
+
+    def test_inflight_write_not_yet_valid(self, tmp_path):
+        """npz landed, manifest not yet committed == write in flight."""
+        d = str(tmp_path)
+        checkpoint.save(os.path.join(d, "ckpt_1"), self._tree(), step=1)
+        checkpoint.save(os.path.join(d, "ckpt_2"), self._tree(), step=2)
+        os.remove(os.path.join(d, "ckpt_2.json"))
+        assert not checkpoint.checkpoint_valid(os.path.join(d, "ckpt_2"))
+        assert checkpoint.latest_valid_step(d) == 1
+
+    def test_legacy_manifest_without_digest_accepted(self, tmp_path):
+        d = str(tmp_path)
+        p = os.path.join(d, "ckpt_1")
+        checkpoint.save(p, self._tree(), step=1)
+        mp = p + ".json"
+        man = json.load(open(mp))
+        man.pop("sha256")
+        json.dump(man, open(mp, "w"))
+        assert checkpoint.checkpoint_valid(p)
+        checkpoint.restore(p, self._tree())     # presence-check only
+
+    def test_restore_state_rolls_back_past_corrupt(self, setting, tmp_path):
+        """The --resume surface: a corrupt newest state_N is skipped and
+        the previous valid full-state checkpoint restores bitwise."""
+        tasks, B, avail = setting
+        eng = RoundEngine(tasks, B, avail, _cfg("stalevr"))
+        d = str(tmp_path)
+        state = eng.init_state()
+        st5, _ = eng.rollout(state, 2)
+        checkpoint.save_state(d, st5, 5)
+        # rollout donates its input buffers — deep-copy before st5 is
+        # consumed (np.asarray can be a zero-copy view on CPU jax, which
+        # would silently alias the donated, reused buffer)
+        p5 = jax.tree.map(lambda x: np.array(x, copy=True), st5.params)
+        m5 = jax.tree.map(lambda x: np.array(x, copy=True), st5.method_state)
+        st9, _ = eng.rollout(st5, 2)
+        checkpoint.save_state(d, st9, 9)
+        with open(os.path.join(d, "state_9.npz"), "r+b") as f:
+            data = bytearray(f.read())
+            data[len(data) // 2] ^= 0xFF        # the bit flip
+            f.seek(0)
+            f.write(data)
+        restored, step = checkpoint.restore_state(d, state)
+        assert int(step) == 5
+        _assert_trees_equal(restored.params, p5, "rollback state")
+        _assert_trees_equal(restored.method_state, m5,
+                            "rollback method state")
+
+
+# ---------------------------------------------------------------------------
+# launch.train satellites: retry-with-backoff, atomic history flush
+# ---------------------------------------------------------------------------
+
+
+class TestTrainIO:
+    def test_retry_io_recovers_from_transient_oserror(self):
+        from repro.launch.train import _retry_io
+        calls = []
+
+        def flaky_fn():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("NFS blip")
+            return "ok"
+
+        assert _retry_io(flaky_fn, "t", attempts=3, backoff=0.0) == "ok"
+        assert len(calls) == 3
+
+    def test_retry_io_reraises_persistent_failure(self):
+        from repro.launch.train import _retry_io
+        with pytest.raises(OSError, match="disk on fire"):
+            _retry_io(lambda: (_ for _ in ()).throw(OSError("disk on fire")),
+                      "t", attempts=2, backoff=0.0)
+
+    def test_retry_io_does_not_swallow_integrity_errors(self):
+        from repro.launch.train import _retry_io
+
+        def corrupt():
+            raise checkpoint.CheckpointIntegrityError("bad digest")
+
+        with pytest.raises(checkpoint.CheckpointIntegrityError):
+            _retry_io(corrupt, "t", attempts=3, backoff=0.0)
+
+    def test_write_history_is_atomic(self, tmp_path):
+        from repro.launch.train import _write_history
+        d = str(tmp_path)
+        _write_history(d, [{"round": 0}])
+        _write_history(d, [{"round": 0}, {"round": 1}])
+        assert json.load(open(os.path.join(d, "history.json"))) == [
+            {"round": 0}, {"round": 1}]
+        assert not os.path.exists(os.path.join(d, "history.json.tmp"))
+
+
+# ---------------------------------------------------------------------------
+# serve-path graceful degradation: a corrupt checkpoint mid-decode
+# ---------------------------------------------------------------------------
+
+
+class TestServeDegradation:
+    ARCHS = ["qwen3-0.6b", "qwen3-0.6b"]
+
+    def _boot(self, tmp_path):
+        from repro.fl.experiments import _model_cfg, build_model_setting
+        from repro.serve import MultiModelServer, make_serve_adapter
+        tasks, B, avail = build_model_setting(self.ARCHS, n_clients=4,
+                                              cap=4, seq_len=8, seed=0)
+        eng = RoundEngine(tasks, B, avail,
+                          ServerConfig(method="random", seed=0))
+        state = eng.init_state()
+        d = str(tmp_path)
+        checkpoint.save_state(d, state, 0)
+        ad = make_serve_adapter(_model_cfg(self.ARCHS[0]))
+        adapters = [ad, ad]
+        server = MultiModelServer.from_checkpoint(
+            os.path.join(d, "state_0"), adapters)
+        return d, state, eng, server, adapters
+
+    def test_bad_checkpoints_rejected_good_one_heals(self, tmp_path):
+        d, state, eng, server, _ = self._boot(tmp_path)
+        v0 = [np.asarray(a) for a in jax.tree.leaves(server._stacked)]
+
+        # NaN params behind a VALID digest: only the finiteness guard bites
+        checkpoint.save_state(
+            d, state._replace(params=jax.tree.map(
+                lambda x: x * float("nan"), state.params)), 1)
+        assert server.poll_hot_swap(d) is None
+        assert server.swap_rejected == 1 and server.version == 0
+        # torn write
+        checkpoint.save_state(d, state, 2)
+        with open(os.path.join(d, "state_2.npz"), "r+b") as f:
+            f.truncate(16)
+        assert server.poll_hot_swap(d) is None
+        assert server.swap_rejected == 2
+        # write still in flight (manifest not committed)
+        checkpoint.save_state(d, state, 3)
+        os.remove(os.path.join(d, "state_3.json"))
+        assert server.poll_hot_swap(d) is None
+        assert server.swap_rejected == 3
+        # the old table kept serving through all three refusals
+        for a, b in zip(v0, jax.tree.leaves(server._stacked)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+        assert server.swap_count == 0
+
+        # a later good checkpoint heals the poll loop
+        st4 = state._replace(params=jax.tree.map(lambda x: x * 1.5,
+                                                 state.params))
+        checkpoint.save_state(d, st4, 4)
+        step, _gap = server.poll_hot_swap(d)
+        assert step == 4 and server.version == 4
+        assert server.swap_count == 1 and server.swap_rejected == 3
+        with pytest.raises(checkpoint.CheckpointIntegrityError):
+            server.hot_swap(os.path.join(d, "state_1"))
+
+    def test_corrupt_swap_mid_decode_leaves_traffic_unharmed(self,
+                                                             tmp_path):
+        """The acceptance scenario: a poisoned state_N lands while a wave
+        is decoding; every request completes with the outputs of the
+        ORIGINAL checkpoint, bit-for-bit."""
+        from repro.serve import MultiModelServer, ServeRequest
+        d, state, eng, server, adapters = self._boot(tmp_path)
+        rng = np.random.default_rng(1)
+        P, gen = 6, 6
+
+        def wave():
+            return [ServeRequest(model=s, tokens=rng.integers(
+                        0, adapters[s].cfg.vocab_size, size=(P,),
+                        dtype=np.int32))
+                    for s in (0, 1, 0)]
+
+        reqs = wave()
+        clean, _ = MultiModelServer.from_checkpoint(
+            os.path.join(d, "state_0"), adapters).generate(
+                [ServeRequest(r.model, r.tokens) for r in reqs], gen)
+
+        polled = []
+
+        def swap_poll(step):
+            if step == 1:
+                # the corrupt checkpoint lands NOW, mid-decode
+                checkpoint.save_state(
+                    d, state._replace(params=jax.tree.map(
+                        lambda x: x * float("nan"), state.params)), 7)
+            if step >= 1:
+                polled.append(server.poll_hot_swap(d))
+
+        outs, _ = server.generate(reqs, gen, swap_poll=swap_poll)
+        assert polled and all(r is None for r in polled)
+        assert server.swap_rejected >= 1 and server.swap_count == 0
+        assert server.version == 0
+        for got, want in zip(outs, clean):
+            np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# the fault axis of the sweep harness
+# ---------------------------------------------------------------------------
+
+
+class TestFaultSweep:
+    def test_dropout_sensitivity_grid_end_to_end(self):
+        from repro.fl import sweep
+        spec = sweep.fault_sensitivity_spec(
+            methods=["lvr", "stalevr"], rates=[0.0, 0.4],
+            settings=[sweep.SweepSetting(name="micro", n_models=2,
+                                         n_clients=12, linear=True)],
+            seeds=(0, 1), rounds=3)
+        res = sweep.run_sweep(spec)
+        curves = sweep.fault_curves(res)
+        assert set(curves) == {"lvr", "stalevr"}
+        for c in curves.values():
+            np.testing.assert_array_equal(c["rates"], [0.0, 0.4])
+            assert c["rejected"][0] == 0.0      # rate-0 guards nobody
+            assert c["rejected"][1] > 0.0
+            assert np.all(np.isfinite(c["acc"]))
+        cell = res.cell("lvr@0.4", "micro")
+        assert np.asarray(cell.metrics["rejected"]).shape == (2, 3, 2)

@@ -462,6 +462,95 @@ def test_fused_pytree_delta_matches_ref_within_tolerance(seed):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ---------------------------------------------------------------------------
+# server-side update guard (core.faults.guard): for EVERY method's
+# coefficient vectors — zero aggregate weight from guarded
+# (crashed / non-finite) clients, and the surviving coefficients
+# re-normalized so the total aggregate mass lives on the surviving support
+# ---------------------------------------------------------------------------
+
+from repro.core import faults  # noqa: E402
+
+
+def _guarded_cohort(method, seed, N, S, active_rate, crash_rate,
+                    poison_rate):
+    """A sampled cohort per task plus an injected fault world: returns
+    per-task (coeff, act, crash, poison, guard outputs) tuples."""
+    ctx, losses, norms, d_v, B_v, _ = _world(seed, N, S, active_rate)
+    strat = methods.make(method, ServerConfig(method=method))
+    p = np.asarray(strat.probabilities(ctx, losses, norms))
+    act = np.asarray(strat.sample(jax.random.PRNGKey(seed),
+                                  jnp.asarray(p), ctx, losses))
+    rng = np.random.default_rng(seed + 1)
+    V = act.shape[0]
+    out = []
+    for s in range(S):
+        a = act[:, s].astype(np.float32)
+        if a.sum() == 0:
+            continue
+        c = np.asarray(strat.coefficients(
+            jnp.asarray(d_v[:, s]), jnp.asarray(B_v),
+            jnp.asarray(np.clip(p[:, s], 1e-3, None)), jnp.asarray(a)))
+        crash = (rng.random(V) < crash_rate).astype(np.float32)
+        poison = (rng.random(V) < poison_rate).astype(np.float32)
+        G = {"w": jnp.asarray(rng.normal(size=(V, 3, 2)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(V,)), jnp.float32)}
+        G = faults.inject(G, jnp.asarray(a), jnp.asarray(crash),
+                          jnp.asarray(poison), float("nan"))
+        Gz, c_g, a_g, rejected, survived = faults.guard(
+            G, jnp.asarray(c), jnp.asarray(a), jnp.asarray(crash),
+            jnp.ones((V,), jnp.float32))
+        out.append((a, c, crash, poison, np.asarray(c_g), np.asarray(a_g),
+                    Gz, float(rejected), float(survived)))
+    return out
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.15, 0.6), st.floats(0.05, 0.9), st.floats(0.0, 0.9))
+def test_guard_zero_weight_from_guarded_clients(method, seed, N, S,
+                                                active_rate, crash_rate,
+                                                poison_rate):
+    """A crashed or NaN-poisoned client contributes EXACTLY zero to the
+    aggregation: coeff' = act' = 0 and its update rows zeroed (so no
+    0 * NaN can leak), with the rejected/survived counters exact integer
+    head-counts of the two sides."""
+    for (a, c, crash, poison, c_g, a_g, Gz, rejected, survived) in \
+            _guarded_cohort(method, seed, N, S, active_rate, crash_rate,
+                            poison_rate):
+        bad = (a > 0) & ((crash > 0) | (poison > 0))
+        assert np.all(c_g[bad] == 0.0), "guarded client kept coeff mass"
+        assert np.all(a_g[bad] == 0.0), "guarded client stayed active"
+        for leaf in jax.tree.leaves(Gz):
+            flat = np.asarray(leaf).reshape(leaf.shape[0], -1)
+            assert np.all(np.isfinite(flat)), "non-finite leaked past guard"
+            assert np.all(flat[bad] == 0.0), "guarded update row survived"
+        assert rejected == float(bad.sum())
+        assert survived == float(((a > 0) & ~bad).sum())
+
+
+@pytest.mark.parametrize("method", methods.available_methods())
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 3),
+       st.floats(0.15, 0.6), st.floats(0.05, 0.9), st.floats(0.0, 0.9))
+def test_guard_renormalizes_to_surviving_support(method, seed, N, S,
+                                                 active_rate, crash_rate,
+                                                 poison_rate):
+    """The surviving coefficients are rescaled so the aggregate mass
+    equals the pre-fault mass whenever anyone survives (zero when the
+    whole cohort is guarded), and a fault-free draw leaves the
+    coefficient vector BITWISE untouched (x/x == 1 exactly)."""
+    for (a, c, crash, poison, c_g, a_g, Gz, rejected, survived) in \
+            _guarded_cohort(method, seed, N, S, active_rate, crash_rate,
+                            poison_rate):
+        bad = (a > 0) & ((crash > 0) | (poison > 0))
+        want = float((c * a).sum()) if survived > 0 else 0.0
+        np.testing.assert_allclose(float((c_g * a_g).sum()), want,
+                                   rtol=1e-5, atol=1e-6)
+        if not bad.any():
+            np.testing.assert_array_equal(c_g, c * a)
+            np.testing.assert_array_equal(a_g, a)
+
+
 @given(_trace_st, st.integers(1, 2))
 @settings(max_examples=6, deadline=None)
 def test_async_beta_estimates_finite(trace, window):
